@@ -1,0 +1,41 @@
+"""Paper §4.7: context-array footprint with and without uniform-variable
+merging, across the suite kernels and work-group sizes."""
+
+from __future__ import annotations
+
+from typing import Dict
+
+from repro.core import compile_kernel
+from .bench_kernel_suite import suite
+
+
+def run(lsz: int = 64) -> Dict[str, Dict[str, int]]:
+    out = {}
+    for name, (build, _bufs, _gsz, _lsz, _scalars) in suite(lsz=lsz).items():
+        k_merged = compile_kernel(build, (lsz,), merge_uniform=True)
+        k_raw = compile_kernel(build, (lsz,), merge_uniform=False)
+        m, r = k_merged.context_stats, k_raw.context_stats
+        out[name] = {
+            "slots": m["slots"],
+            "uniform_merged": m["uniform_merged"],
+            "bytes_merged": m["context_bytes"],
+            "bytes_unmerged": r["context_bytes"],
+            "saving": 1.0 - (m["context_bytes"] /
+                             max(r["context_bytes"], 1)),
+        }
+    return out
+
+
+def main():
+    res = run()
+    print(f"{'kernel':14s} {'slots':>6s} {'merged':>7s} "
+          f"{'bytes(merged)':>14s} {'bytes(raw)':>11s} {'saving':>7s}")
+    for name, r in res.items():
+        print(f"{name:14s} {r['slots']:6d} {r['uniform_merged']:7d} "
+              f"{r['bytes_merged']:14d} {r['bytes_unmerged']:11d} "
+              f"{r['saving']*100:6.1f}%")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,81 @@
+"""Paper Tables 3/4 analogue: Vecmathlib vs scalarized libm.
+
+The paper compares vectorized elemental functions against scalarizing
+each SIMD lane and calling libm.  The CPU/JAX analogue:
+
+  scalarized — python-loop over elements calling numpy scalar math (the
+               'disassemble the vector, call libm per lane' cost model)
+  numpy      — numpy's vectorized libm (the proprietary-quality baseline)
+  vml        — repro.vml polynomial/bit-twiddle implementations under jit
+               (what the TPU VPU executes)
+
+Reported: ns/element for exp, sin, sqrt at vector lengths 4 / 4096 /
+1M, mirroring the paper's scalar-vs-vector sweep.
+"""
+
+from __future__ import annotations
+
+import math
+import time
+from typing import Dict
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro import vml
+
+
+def _time(fn, iters=20):
+    fn()
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        fn()
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts))
+
+
+FUNCS = {
+    "exp": (vml.exp, np.exp, math.exp),
+    "sin": (vml.sin, np.sin, math.sin),
+    "sqrt": (vml.sqrt, np.sqrt, math.sqrt),
+}
+
+
+def run(sizes=(4, 4096, 1_048_576)) -> Dict:
+    rng = np.random.default_rng(0)
+    out = {}
+    for name, (vml_fn, np_fn, scalar_fn) in FUNCS.items():
+        for n in sizes:
+            x = rng.uniform(0.1, 10.0, n).astype(np.float32)
+            xj = jnp.asarray(x)
+            jfn = jax.jit(vml_fn)
+            jfn(xj).block_until_ready()
+            t_vml = _time(lambda: jfn(xj).block_until_ready())
+            t_np = _time(lambda: np_fn(x))
+            if n <= 4096:   # the scalarized path is too slow at 1M
+                t_scalar = _time(lambda: [scalar_fn(float(v)) for v in x],
+                                 iters=3)
+            else:
+                t_scalar = float("nan")
+            out[(name, n)] = {
+                "vml_ns_per_elem": t_vml / n * 1e9,
+                "numpy_ns_per_elem": t_np / n * 1e9,
+                "scalarized_ns_per_elem": t_scalar / n * 1e9,
+            }
+    return out
+
+
+def main():
+    res = run()
+    print(f"{'func':6s} {'n':>9s} {'scalarized':>12s} {'numpy':>10s} "
+          f"{'vml(jit)':>10s}  (ns/elem)")
+    for (name, n), r in res.items():
+        print(f"{name:6s} {n:9d} {r['scalarized_ns_per_elem']:12.1f} "
+              f"{r['numpy_ns_per_elem']:10.1f} {r['vml_ns_per_elem']:10.1f}")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Render the §Roofline table from the dry-run result JSONs
+(results/dryrun/<mesh>/<variant>/<arch>__<shape>.json)."""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+from typing import Dict, List
+
+
+def load(mesh="pod16x16", variant="baseline", base="results/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(base, mesh, variant, "*.json"))):
+        rows.append(json.load(open(f)))
+    return rows
+
+
+def markdown_table(rows: List[Dict]) -> str:
+    hdr = ("| arch | shape | dominant | t_comp (ms) | t_mem (ms) | "
+           "t_coll (ms) | mem/dev (GiB) | useful/HLO flops | roofline |")
+    sep = "|" + "---|" * 9
+    lines = [hdr, sep]
+    for d in sorted(rows, key=lambda d: (d["shape"], d["arch"])):
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['dominant']} "
+            f"| {d['t_compute_eff'] * 1e3:.2f} | {d['t_memory'] * 1e3:.2f} "
+            f"| {d['t_collective'] * 1e3:.2f} "
+            f"| {d['bytes_per_device'] / 2**30:.2f} "
+            f"| {d['useful_flop_ratio']:.2f} "
+            f"| {d['roofline_fraction'] * 100:.1f}% |")
+    return "\n".join(lines)
+
+
+def main():
+    for mesh in ("pod16x16", "pod2x16x16"):
+        rows = load(mesh)
+        if not rows:
+            continue
+        print(f"\n### Roofline — {mesh} (baseline)\n")
+        print(markdown_table(rows))
+        worst = sorted((r for r in rows if r["shape"] != "long_500k"),
+                       key=lambda d: d["roofline_fraction"])[:3]
+        print("\nworst cells:",
+              ", ".join(f"{w['arch']}x{w['shape']}"
+                        f" ({w['roofline_fraction']*100:.1f}%)"
+                        for w in worst))
+    return 0
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,80 @@
+"""Benchmark harness entry point: one benchmark per paper table/figure.
+
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+
+  Fig. 12-14  -> bench_kernel_suite   (kernel suite across targets)
+  §6.4        -> bench_horizontal     (DCT horizontal parallelization)
+  Tables 3/4  -> bench_vml            (vecmathlib vs scalarized libm)
+  §3          -> bench_bufalloc       (buffer allocator)
+  §Roofline   -> roofline_report      (dry-run derived, if results exist)
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--out", default="results/bench")
+    args = ap.parse_args(argv)
+    os.makedirs(args.out, exist_ok=True)
+    summary = {}
+
+    t0 = time.time()
+    print("=" * 72)
+    print("[1/6] Kernel suite across execution targets (paper Fig. 12-14)")
+    print("=" * 72)
+    from . import bench_kernel_suite
+    res = bench_kernel_suite.main()
+    summary["kernel_suite"] = {k: v for k, v in res.items()}
+
+    print()
+    print("=" * 72)
+    print("[2/6] DCT horizontal inner-loop parallelization (paper §6.4)")
+    print("=" * 72)
+    from . import bench_horizontal
+    summary["horizontal"] = bench_horizontal.main()
+
+    print()
+    print("=" * 72)
+    print("[3/6] Vecmathlib vs scalarized libm (paper Tables 3/4)")
+    print("=" * 72)
+    from . import bench_vml
+    res = bench_vml.main()
+    summary["vml"] = {f"{k[0]}_{k[1]}": v for k, v in res.items()}
+
+    print()
+    print("=" * 72)
+    print("[4/6] Bufalloc (paper §3)")
+    print("=" * 72)
+    from . import bench_bufalloc
+    summary["bufalloc"] = bench_bufalloc.main()
+
+    print()
+    print("=" * 72)
+    print("[5/6] Context-array uniform merging (paper §4.7)")
+    print("=" * 72)
+    from . import bench_context
+    summary["context"] = bench_context.main()
+
+    print()
+    print("=" * 72)
+    print("[6/6] Roofline report (dry-run derived)")
+    print("=" * 72)
+    from . import roofline_report
+    roofline_report.main()
+
+    with open(os.path.join(args.out, "summary.json"), "w") as f:
+        json.dump(summary, f, indent=1, default=float)
+    print(f"\nall benchmarks done in {time.time() - t0:.1f}s; "
+          f"summary -> {args.out}/summary.json")
+
+
+if __name__ == "__main__":
+    main()

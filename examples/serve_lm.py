@@ -1,0 +1,17 @@
+"""Batched serving example: prefill + synchronized batched decode with a
+KV cache, request grouping, greedy sampling.
+
+  PYTHONPATH=src python examples/serve_lm.py
+"""
+
+from repro.launch import serve as serve_cli
+
+
+def main():
+    serve_cli.main(["--arch", "smollm-135m", "--smoke", "--requests", "6",
+                    "--max-new", "12", "--batch-slots", "2",
+                    "--max-seq", "64"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,13 @@
+"""repro.core — the pocl kernel compiler, rebuilt for JAX/TPU.
+
+Public API:
+  KernelBuilder  — author SPMD kernels (OpenCL C analogue)
+  compile_kernel — run the pocl pipeline for a local size + target
+  run_ndrange    — fiber-based reference executor (semantics oracle)
+"""
+
+from .dsl import KernelBuilder
+from .api import compile_kernel, CompiledKernel
+from .interp import run_ndrange
+
+__all__ = ["KernelBuilder", "compile_kernel", "CompiledKernel", "run_ndrange"]

@@ -1,0 +1,1 @@
+from . import vector, loop  # noqa: F401

@@ -1,0 +1,102 @@
+"""Serial loop target: the 'basic' CPU driver analogue (paper §3).
+
+Executes each parallel region with an explicit work-item loop
+(``lax.fori_loop`` over local ids) — the literal "WI loop" form of §4.3
+before any vectorization.  Semantically identical to the vector target; it
+exists (a) as the portability baseline every device gets for free, and
+(b) as the performance baseline the benchmarks compare the vectorized
+mapping against (paper Figs. 12–14 compare pocl's static vectorization to
+serial/fiber execution).
+
+The next-region decision is taken from work-item 0 — the "peeled first
+iteration" of §4.4 that evaluates the (work-group-uniform) branch for the
+rest of the work-items.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+
+from .vector import LaneExec, WGProgram
+
+
+class LoopWGProgram(WGProgram):
+    def run_wg(self, buffers: Dict[str, jnp.ndarray], group_linear,
+               lids_linear=None):
+        buf_names = sorted(buffers)
+        ctx = self._ctx_init()
+
+        def run_region(bar: str, ctx, bufs_t):
+            region = self.wg.regions[bar]
+
+            def wi_body(wi, st):
+                rid_acc, ctx, bufs_t = st
+                lids = jnp.reshape(jnp.int32(wi), (1,))
+                bufs = dict(zip(buf_names, bufs_t))
+                ex = LaneExec(self, lids, group_linear, bufs, {})
+                # seed this work-item's context row
+                for s, arr in zip(self.plan.slots, ctx):
+                    v = arr if s.uniform else \
+                        lax.dynamic_slice(arr, (wi,), (1,))
+                    if s.kind == "val":
+                        ex.env[s.key] = v
+                    else:
+                        ex.vregs[s.key] = v
+                exits = ex.exec_region(region)
+                new_ctx = []
+                for s, arr in zip(self.plan.slots, ctx):
+                    v = ex.env.get(s.key) if s.kind == "val" \
+                        else ex.vregs.get(s.key)
+                    if v is None:
+                        new_ctx.append(arr)
+                    elif s.uniform:
+                        # LaneExec computes at lane-width 1, so a uniform
+                        # value may come back shaped (1,); reshape to the
+                        # carry's scalar shape to keep the loop type fixed
+                        new_ctx.append(jnp.reshape(
+                            jnp.asarray(v, arr.dtype), arr.shape))
+                    else:
+                        row = jnp.broadcast_to(jnp.asarray(v, arr.dtype),
+                                               (1,))
+                        new_ctx.append(
+                            lax.dynamic_update_slice(arr, row, (wi,)))
+                new_bufs = tuple(ex.buffers[n] for n in buf_names)
+                # peel: work-item 0 decides the next region
+                rid = jnp.int32(self.K)
+                for tgt, pred in exits.items():
+                    if tgt == "":
+                        continue
+                    p0 = pred if pred is None or jnp.ndim(pred) == 0 \
+                        else pred[0]
+                    t = jnp.int32(self.rid_of[tgt])
+                    rid = t if p0 is None else jnp.where(p0, t, rid)
+                rid_acc = jnp.where(wi == 0, rid, rid_acc)
+                return rid_acc, tuple(new_ctx), new_bufs
+
+            st = (jnp.int32(self.K), ctx, bufs_t)
+            st = lax.fori_loop(0, self.L, wi_body, st)
+            return st
+
+        bufs_t = tuple(buffers[n] for n in buf_names)
+        if self.wg.is_chain():
+            for bar in self.wg.chain():
+                _, ctx, bufs_t = run_region(bar, ctx, bufs_t)
+            return dict(zip(buf_names, bufs_t))
+
+        branches = [
+            (lambda bar: (lambda st: run_region(bar, st[1], st[2])))(bar)
+            for bar in self.order]
+
+        def cond_fn(st):
+            return st[0] < self.K
+
+        def body_fn(st):
+            return lax.switch(st[0], branches, st)
+
+        st0 = (jnp.int32(0), ctx, bufs_t)
+        _, ctx, bufs_t = lax.while_loop(cond_fn, body_fn, st0)
+        return dict(zip(buf_names, bufs_t))

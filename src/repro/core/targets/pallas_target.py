@@ -1,0 +1,83 @@
+"""Pallas target: work-groups on the TPU grid, lanes on the VPU.
+
+The TPU-native parallel mapping (DESIGN.md §2): one work-group per grid
+cell of a ``pl.pallas_call``; the work-item lane axis of the vector executor
+becomes the 128-wide vector lane axis; OpenCL ``local`` memory becomes VMEM
+scratch (materialized as register arrays here — locals are work-group
+private, so they never leave the grid cell).  Barrier semantics need no
+hardware primitive — after region formation the regions run in sequence over
+full lane vectors (the same argument the paper makes for WI loops).
+
+Global buffers are passed whole because generic SPMD kernels compute
+arbitrary addresses; the TPU grid is sequential, so aliased output refs give
+every work-group a consistent running view — legal under OpenCL's
+no-inter-group-dependency contract.
+
+Validated with ``interpret=True`` on CPU; on real TPUs the same code lowers
+to Mosaic.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from .. import ir
+from .vector import WGProgram
+
+
+class PallasWGProgram(WGProgram):
+    interpret = True  # CPU container; flip to False on real TPUs
+
+    def run_ndrange(self, buffers: Dict[str, np.ndarray],
+                    scalars: Optional[Dict[str, object]],
+                    global_size: Sequence[int]):
+        gsz = tuple(global_size) + (1,) * (3 - len(global_size))
+        for g, l in zip(gsz, self.lsz):
+            assert g % l == 0, "global size must divide local size"
+        self.ngrp = tuple(g // l for g, l in zip(gsz, self.lsz))
+        n_groups = int(np.prod(self.ngrp))
+        self.scalars = {}
+        scalars = scalars or {}
+        for a in self.wg.fn.scalar_args:
+            # numpy (not jnp) so the value embeds as a literal in the
+            # kernel jaxpr — pallas_call rejects captured device consts
+            self.scalars[a.name] = np.asarray(scalars[a.name],
+                                              np.dtype(a.dtype))
+
+        local_defs = [a for a in self.wg.fn.buffer_args
+                      if a.space == ir.LOCAL and a.name not in buffers]
+        bufs = {k: jnp.asarray(v) for k, v in buffers.items()}
+        names = sorted(bufs)
+
+        def kernel(*refs):
+            # inputs are aliased to outputs: out_refs carry the running state
+            out_refs = refs[len(names):]
+            g = pl.program_id(0)
+            b = {nm: oref[...] for nm, oref in zip(names, out_refs)}
+            for la in local_defs:
+                b[la.name] = jnp.zeros((la.size,), la.dtype)
+            out = self.run_wg(b, g)
+            for nm, oref in zip(names, out_refs):
+                oref[...] = out[nm]
+
+        call = pl.pallas_call(
+            kernel,
+            grid=(n_groups,),
+            in_specs=[pl.BlockSpec(bufs[n].shape,
+                                   lambda g, nd=bufs[n].ndim: (0,) * nd)
+                      for n in names],
+            out_specs=[pl.BlockSpec(bufs[n].shape,
+                                    lambda g, nd=bufs[n].ndim: (0,) * nd)
+                       for n in names],
+            out_shape=[jax.ShapeDtypeStruct(bufs[n].shape, bufs[n].dtype)
+                       for n in names],
+            input_output_aliases={i: i for i in range(len(names))},
+            interpret=self.interpret,
+        )
+        out = call(*[bufs[n] for n in names])
+        return dict(zip(names, out))

@@ -1,0 +1,1 @@
+from .pipeline import synth_batch, data_iterator

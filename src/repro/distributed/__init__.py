@@ -1,0 +1,3 @@
+from .sharding import (ShardingRules, BASELINE_RULES, DECODE_RULES,
+                       logical_to_sharding, constrain, adapt_rules_for,
+                       divisible)

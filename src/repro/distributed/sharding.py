@@ -1,0 +1,166 @@
+"""Logical-axis sharding rules for the (pod, data, model) production mesh.
+
+This is the framework analogue of pocl's split between *target-independent
+parallel region formation* and *target-specific mapping*: the model stack
+annotates every tensor with **logical axis names** (batch/seq/heads/mlp/...)
+and this module owns the single table that maps logical names onto physical
+mesh axes.  Changing the parallel mapping (the §Perf hillclimb) edits the
+rule table only — the model definition is untouched, exactly like retargeting
+a pocl work-group function from SIMD lanes to VLIW slots.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+Axis = Union[None, str, Tuple[str, ...]]
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Logical-name -> physical mesh axis (or tuple of axes) mapping."""
+
+    batch: Axis = ("pod", "data")       # global batch dimension
+    seq: Axis = None                    # sequence (attention/mixer-internal)
+    act_seq: Axis = "model"             # residual-stream sequence dim:
+    # sharding the saved per-layer residuals over the model axis is
+    # Megatron-style sequence parallelism — without it the remat-scan
+    # carries alone exceed HBM at 4k x 256-batch scale.
+    heads: Axis = "model"               # attention query heads
+    kv_heads: Axis = None               # GQA KV heads (often < model size)
+    head_dim: Axis = None
+    d_model: Axis = None                # residual stream (activations)
+    embed_fsdp: Axis = "data"           # the d_model dim OF PARAMS: FSDP /
+    # ZeRO-style sharding over the data axis; XLA all-gathers weights just
+    # before use and reduce-scatters grads.  Off for serving (latency).
+    mlp: Axis = "model"                 # FFN hidden
+    vocab: Axis = "model"               # embedding / logits vocab dim
+    experts: Axis = "model"             # MoE expert dimension (EP)
+    expert_mlp: Axis = None             # MoE per-expert FFN hidden (TP)
+    moe_capacity: Axis = None           # dispatch capacity dim (token-
+    # parallel MoE: shard C over model, replicate experts — no sharded
+    # contraction in the expert-FFN backward)
+    cache_seq: Axis = None              # KV-cache sequence dim (decode)
+    ssm_heads: Axis = "model"           # Mamba2 SSD heads
+    ssm_state: Axis = None
+    conv_dim: Axis = "model"            # Mamba conv channels
+
+    def spec(self, *logical: Optional[str]) -> P:
+        """PartitionSpec for a tensor whose dims carry these logical names."""
+        out = []
+        for name in logical:
+            if name is None:
+                out.append(None)
+            else:
+                out.append(getattr(self, name))
+        return P(*out)
+
+    def replace(self, **kw) -> "ShardingRules":
+        return dataclasses.replace(self, **kw)
+
+
+# Paper-faithful baseline: plain 2D data x tensor parallelism, experts on the
+# model axis when divisible.  Beyond-paper variants are built from this via
+# ``replace`` (see launch/dryrun.py --opt).
+BASELINE_RULES = ShardingRules()
+
+# Prefill: weights stay fully materialized per model-rank (no FSDP
+# regather per layer) — serving batches are small and latency-bound.
+PREFILL_RULES = BASELINE_RULES.replace(embed_fsdp=None)
+
+# Decode: KV caches shard along the cache sequence dimension so 32k-token
+# caches fit in HBM; under pjit the softmax over the sharded S decomposes
+# into partial max/sum + small all-reduces = flash-decoding.  Params keep
+# their tensor-parallel sharding (heads on "model").  S=1 steps cannot
+# shard the token dim, so act_seq is off.
+DECODE_RULES = BASELINE_RULES.replace(cache_seq="model", act_seq=None,
+                                      embed_fsdp=None)
+
+# Long-context single-sequence decode (batch=1): no data parallelism is
+# possible, so the cache sequence shards over BOTH mesh axes.
+LONG_DECODE_RULES = BASELINE_RULES.replace(
+    batch=None, cache_seq=("data", "model"), act_seq=None, embed_fsdp=None)
+
+
+def logical_to_sharding(mesh: Mesh, rules: ShardingRules,
+                        logical: Sequence[Optional[str]]) -> NamedSharding:
+    spec = rules.spec(*logical)
+    # drop mesh axes that do not exist (e.g. "pod" on the single-pod mesh)
+    cleaned = []
+    for entry in spec:
+        if entry is None:
+            cleaned.append(None)
+        elif isinstance(entry, tuple):
+            kept = tuple(a for a in entry if a in mesh.axis_names)
+            cleaned.append(kept if kept else None)
+        else:
+            cleaned.append(entry if entry in mesh.axis_names else None)
+    return NamedSharding(mesh, P(*cleaned))
+
+
+def constrain(x, rules: ShardingRules, *logical: Optional[str]):
+    """with_sharding_constraint by logical names; no-op outside jit/mesh."""
+    spec = rules.spec(*logical)
+    try:
+        return jax.lax.with_sharding_constraint(x, spec)
+    except (ValueError, RuntimeError):
+        return x
+
+
+def prune_to_mesh(rules: ShardingRules, mesh: Mesh) -> ShardingRules:
+    """Drop mesh axes the target mesh does not have (e.g. 'pod' on the
+    single-pod mesh) from every rule entry."""
+    kw = {}
+    for f in dataclasses.fields(rules):
+        v = getattr(rules, f.name)
+        if isinstance(v, tuple):
+            kept = tuple(a for a in v if a in mesh.axis_names)
+            kw[f.name] = kept if kept else None
+        elif isinstance(v, str):
+            kw[f.name] = v if v in mesh.axis_names else None
+        else:
+            kw[f.name] = v
+    return ShardingRules(**kw)
+
+
+def divisible(n: int, mesh: Mesh, axis: Axis) -> bool:
+    """Whether dim of size n divides evenly over the mesh axes in ``axis``."""
+    if axis is None:
+        return True
+    axes = (axis,) if isinstance(axis, str) else axis
+    total = 1
+    for a in axes:
+        if a in mesh.axis_names:
+            total *= mesh.shape[a]
+    return n % total == 0
+
+
+def adapt_rules_for(rules: ShardingRules, mesh: Mesh, *,
+                    n_kv: int = 0, n_experts: int = 0,
+                    n_heads: int = 0, d_ff: int = 0,
+                    vocab: int = 0) -> ShardingRules:
+    """Fix up rules whose dims don't divide the mesh (pocl's 'local size not
+    a multiple of the vector width' fallback, applied to mesh axes).
+
+    - KV heads that don't divide the model axis are replicated (GQA).
+    - An expert count that doesn't divide the model axis falls back to
+      TOKEN-PARALLEL MoE (capacity dim on the model axis) — measured 2.3x
+      better than per-expert tensor parallelism on granite-moe train_4k
+      (EXPERIMENTS.md §Perf H2); the TP fallback remains available as the
+      'moe_tp_fallback' variant.
+    """
+    out = rules
+    if n_kv and not divisible(n_kv, mesh, rules.kv_heads):
+        out = out.replace(kv_heads=None)
+    if n_heads and not divisible(n_heads, mesh, rules.heads):
+        out = out.replace(heads=None)
+    if n_experts and not divisible(n_experts, mesh, rules.experts):
+        out = out.replace(experts=None, expert_mlp=None,
+                          moe_capacity="model")
+    if vocab and not divisible(vocab, mesh, rules.vocab):
+        out = out.replace(vocab=None)
+    return out

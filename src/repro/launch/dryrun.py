@@ -1,0 +1,217 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production mesh, with zero real allocation (ShapeDtypeStruct inputs).
+
+The two lines above MUST precede any jax import: jax locks the device
+count at first init, and the dry-run needs 512 placeholder host devices
+to build the 16x16 / 2x16x16 production meshes.  Smoke tests and benches
+import repro normally and see the single real CPU device.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch smollm-135m \
+      --shape train_4k [--multi-pod] [--variant baseline] [--all]
+
+Per cell this prints/records compiled.memory_analysis() (proves the step
+fits HBM) and cost_analysis() + parsed collective bytes (feeds §Roofline).
+Results land in results/dryrun/<mesh>/<variant>/<arch>__<shape>.json.
+"""
+
+import argparse
+import dataclasses
+import json
+import sys
+import time
+import traceback
+
+import jax
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro import configs
+from repro.distributed.sharding import (BASELINE_RULES, DECODE_RULES,
+                                        LONG_DECODE_RULES, adapt_rules_for,
+                                        logical_to_sharding)
+from repro.launch.mesh import make_production_mesh, HW
+from repro.launch.specs import input_specs
+from repro.launch import roofline as RL
+from repro.models import (ALL_SHAPES, cache_logical_axes, abstract_params,
+                          shapes_for)
+from repro.models import params as PP
+from repro.models import model_defs
+from repro.serving.steps import make_prefill_step, make_decode_step
+from repro.training import (TrainConfig, make_train_step, abstract_state,
+                            state_shardings, batch_pspec)
+
+
+def batch_axes_size(mesh) -> int:
+    n = mesh.shape["data"]
+    if "pod" in mesh.axis_names:
+        n *= mesh.shape["pod"]
+    return n
+
+
+def rules_for(cfg, shape, mesh, variant: str):
+    """Pick + adapt the sharding rule table for one cell."""
+    if shape.kind == "decode":
+        base = LONG_DECODE_RULES if shape.global_batch == 1 \
+            else DECODE_RULES
+    else:
+        base = BASELINE_RULES
+    if variant != "baseline":
+        from repro.launch.variants import VARIANTS
+        for v in variant.split("+"):
+            if v in VARIANTS:
+                base = VARIANTS[v](base, cfg, shape, mesh)
+    from repro.distributed.sharding import prune_to_mesh
+    base = prune_to_mesh(base, mesh)
+    rules = adapt_rules_for(base, mesh, n_kv=cfg.n_kv,
+                            n_experts=cfg.n_experts, n_heads=cfg.n_heads,
+                            d_ff=cfg.d_ff, vocab=cfg.padded_vocab)
+    if shape.global_batch % batch_axes_size(mesh) != 0 \
+            and rules.batch is not None:
+        rules = rules.replace(batch=("data",)
+                              if shape.global_batch % mesh.shape["data"] == 0
+                              else None)
+    return rules
+
+
+def lower_cell(arch: str, shape, mesh, variant: str = "baseline"):
+    cfg = configs.get_config(arch)
+    from repro.launch.variants import CFG_OVERRIDES
+    for v in variant.split("+"):
+        if v in CFG_OVERRIDES:
+            cfg = dataclasses.replace(cfg, **CFG_OVERRIDES[v])
+    rules = rules_for(cfg, shape, mesh, variant)
+    specs = input_specs(cfg, shape)
+    defs = model_defs(cfg)
+
+    with mesh:
+        if shape.kind == "train":
+            step = make_train_step(cfg, rules,
+                                   TrainConfig(num_microbatches=1))
+            st_sh = state_shardings(cfg, mesh, rules)
+            b_sh = {k: NamedSharding(mesh, v)
+                    for k, v in batch_pspec(cfg, rules).items()}
+            # extra aux-input shardings
+            for k in specs["batch"]:
+                if k not in b_sh:
+                    b_sh[k] = NamedSharding(mesh, rules.spec("batch", None,
+                                                             None))
+            jit = jax.jit(step, in_shardings=(st_sh, b_sh),
+                          out_shardings=(st_sh, None), donate_argnums=(0,))
+            lowered = jit.lower(abstract_state(cfg), specs["batch"])
+        else:
+            fn = make_prefill_step(cfg, rules) if shape.kind == "prefill" \
+                else make_decode_step(cfg, rules)
+            p_sh = PP.param_shardings(defs, mesh, rules)
+            cax = cache_logical_axes(cfg)
+            c_sh = {k: logical_to_sharding(mesh, rules, cax[k])
+                    for k in cax}
+            b_sh = {}
+            for k, v in specs["batch"].items():
+                nlog = ("batch",) + (None,) * (len(v.shape) - 1)
+                b_sh[k] = logical_to_sharding(mesh, rules, nlog)
+            params_abs = abstract_params(cfg, dtype=cfg.dtype)
+            jit = jax.jit(fn, in_shardings=(p_sh, b_sh, c_sh),
+                          donate_argnums=(2,))
+            lowered = jit.lower(params_abs, specs["batch"],
+                                specs["caches"])
+    return cfg, rules, lowered
+
+
+def run_cell(arch: str, shape, *, multi_pod: bool = False,
+             variant: str = "baseline", out_dir: str = "results/dryrun",
+             verbose: bool = True):
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    chips = int(np.prod(list(mesh.shape.values())))
+    t0 = time.time()
+    cfg, rules, lowered = lower_cell(arch, shape, mesh, variant)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    hlo = compiled.as_text()
+    mem_bytes = float(getattr(mem, "temp_size_in_bytes", 0)
+                      + getattr(mem, "argument_size_in_bytes", 0)
+                      + getattr(mem, "output_size_in_bytes", 0))
+    report = RL.build_report(arch=arch, shape=shape, mesh_name=mesh_name,
+                             chips=chips, cost=cost, mem_bytes=mem_bytes,
+                             hlo_text=hlo, cfg=cfg)
+    rec = report.to_dict()
+    rec.update(variant=variant, t_lower_s=t_lower, t_compile_s=t_compile,
+               argument_bytes=float(getattr(mem, "argument_size_in_bytes", 0)),
+               temp_bytes=float(getattr(mem, "temp_size_in_bytes", 0)),
+               output_bytes=float(getattr(mem, "output_size_in_bytes", 0)),
+               hbm_fraction=mem_bytes / HW["hbm_bytes"],
+               rules=str(rules))
+
+    path = os.path.join(out_dir, mesh_name, variant)
+    os.makedirs(path, exist_ok=True)
+    with open(os.path.join(path, f"{arch}__{shape.name}.json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    if verbose:
+        print(f"[{mesh_name}/{variant}] {arch} x {shape.name}: "
+              f"compile={t_compile:.1f}s "
+              f"mem/dev={mem_bytes/2**30:.2f}GiB "
+              f"t_comp={report.t_compute*1e3:.2f}ms "
+              f"t_mem={report.t_memory*1e3:.2f}ms "
+              f"t_coll={report.t_collective*1e3:.2f}ms "
+              f"dominant={report.dominant} "
+              f"roofline={report.roofline_fraction:.2%}")
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--variant", default="baseline")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="results/dryrun")
+    ap.add_argument("--skip-existing", action="store_true")
+    args = ap.parse_args(argv)
+
+    shape_by_name = {s.name: s for s in ALL_SHAPES}
+    cells = []
+    if args.all:
+        for arch in configs.ARCH_IDS:
+            cfg = configs.get_config(arch)
+            for s in shapes_for(cfg):
+                cells.append((arch, s))
+    else:
+        assert args.arch and args.shape
+        cells = [(args.arch, shape_by_name[args.shape])]
+
+    mesh_name = "pod2x16x16" if args.multi_pod else "pod16x16"
+    failures = []
+    for arch, s in cells:
+        out_json = os.path.join(args.out, mesh_name, args.variant,
+                                f"{arch}__{s.name}.json")
+        if args.skip_existing and os.path.exists(out_json):
+            print(f"skip {arch} x {s.name} (exists)")
+            continue
+        try:
+            run_cell(arch, s, multi_pod=args.multi_pod,
+                     variant=args.variant, out_dir=args.out)
+        except Exception as e:
+            traceback.print_exc()
+            failures.append((arch, s.name, repr(e)[:200]))
+    if failures:
+        print("FAILURES:")
+        for f in failures:
+            print(" ", f)
+        sys.exit(1)
+    print("dry-run OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,37 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — the dry-run sets
+XLA_FLAGS for 512 host devices before any jax import, and tests/benches
+see the single real CPU device.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    """16x16 single-pod (256 chips, TPU v5e pod) or 2x16x16 multi-pod."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model_axis: int = 1) -> Mesh:
+    """Degenerate mesh over the locally available devices (CPU testing)."""
+    n = len(jax.devices())
+    assert n % model_axis == 0
+    return jax.make_mesh((n // model_axis, model_axis), ("data", "model"))
+
+
+HW = {
+    # TPU v5e, per chip
+    "peak_flops_bf16": 197e12,       # FLOP/s
+    "hbm_bw": 819e9,                 # B/s
+    "ici_link_bw": 50e9,             # B/s per link
+    "hbm_bytes": 16 * 1024**3,
+}

@@ -1,0 +1,346 @@
+"""Roofline term extraction from compiled dry-run artifacts.
+
+compute    = HLO_FLOPs   / (chips x peak_FLOP/s)
+memory     = HLO_bytes   / (chips x HBM_bw)
+collective = coll_bytes  / (chips x link_bw)
+
+``cost_analysis`` supplies FLOPs / bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum the output
+operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute.  Post-partitioning HLO is the per-device
+program, so parsed quantities are per-chip already; cost_analysis is also
+per-device on a partitioned module — we therefore do NOT divide by chips
+again (the formulas above are kept for the whole-cluster convention and
+reduce to per-chip values on the partitioned module).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import numpy as np
+from typing import Dict, List, Optional, Tuple
+
+from .mesh import HW
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1, "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one shape literal (or a tuple of them)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+_DEF_RE = re.compile(r"^\s*(%[\w.\-]+)\s*=\s*([a-z0-9]+)\[([0-9,]*)\]")
+_CONV_RE = re.compile(
+    r"^\s*%[\w.\-]+\s*=\s*f32\[([0-9,]*)\]\S*\s+convert\(([^)]*)\)")
+
+
+def cpu_upconvert_bytes(hlo_text: str) -> int:
+    """XLA's CPU backend cannot execute bf16 dots natively: it inserts
+    convert(bf16->f32) on dot/fusion operands, materializing f32 copies
+    of weights/caches that would NOT exist on the TPU target (Mosaic/MXU
+    consume bf16 directly).  Two-pass parse: map value names to dtypes,
+    then sum the f32 output bytes of every convert whose operand is bf16
+    (written once, read once -> x2 traffic), so the memory term can be
+    reported with and without this compile-target artifact."""
+    dtype_of = {}
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            dtype_of[m.group(1)] = m.group(2)
+    total = 0
+    for line in hlo_text.splitlines():
+        m = _CONV_RE.match(line.rstrip())
+        if not m:
+            continue
+        operand = m.group(2).strip()
+        # operand is either "bf16[...] %name" or just "%name"
+        src_dt = None
+        if operand.startswith("%"):
+            src_dt = dtype_of.get(operand.split()[0].rstrip(","))
+        else:
+            src_dt = operand.split("[")[0]
+        if src_dt != "bf16":
+            continue
+        dims = m.group(1)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * 4 * 2
+    return total
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum output bytes per collective kind over the (per-device) HLO."""
+    out = {k: 0 for k in COLLECTIVES}
+    count = {k: 0 for k in COLLECTIVES}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        # e.g.  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %p), ...
+        m = re.match(r"%?[\w.\-]+\s*=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\]\S*)"
+                     r"\s+([a-z\-]+)", line)
+        if not m:
+            continue
+        op = m.group(2)
+        # normalize fused/start variants: all-gather-start, all-reduce-done
+        base = None
+        for k in COLLECTIVES:
+            if op == k or op.startswith(k + "-start"):
+                base = k
+                break
+        if base is None:
+            continue
+        out[base] += _shape_bytes(m.group(1))
+        count[base] += 1
+    return {"bytes": out, "count": count,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_gflops: float             # per-chip
+    hlo_gbytes: float             # per-chip
+    coll_gbytes: float            # per-chip
+    t_compute: float              # seconds
+    t_memory: float
+    t_collective: float
+    model_gflops_per_chip: float  # 6ND useful flops, per chip per step
+    bytes_per_device: float       # from memory_analysis (peak allocation)
+    coll_counts: Dict[str, int] = dataclasses.field(default_factory=dict)
+    coll_bytes_by_kind: Dict[str, int] = dataclasses.field(
+        default_factory=dict)
+
+    kind: str = "train"           # train | prefill | decode
+    ideal_gbytes: float = 0.0     # per-chip: params + caches + tokens once
+    executed_gflops_per_chip: float = 0.0   # useful + remat re-forward
+    cpu_artifact_gbytes: float = 0.0   # CPU-backend bf16->f32 dot copies
+
+    @property
+    def hlo_gbytes_adj(self) -> float:
+        """HBM traffic with the CPU-only upconvert copies removed — the
+        TPU-target estimate, floored at the irreducible bytes (the
+        artifact estimate double-counts when converts fuse)."""
+        return max(self.hlo_gbytes - self.cpu_artifact_gbytes,
+                   self.ideal_gbytes, 0.0)
+
+    @property
+    def t_memory_adj(self) -> float:
+        return self.hlo_gbytes_adj * 1e9 / HW["hbm_bw"]
+
+    @property
+    def t_compute_eff(self) -> float:
+        """XLA's cost_analysis counts a while-loop body ONCE, so HLO FLOPs
+        undercount scanned-layer models by ~n_layers.  The analytic
+        EXECUTED-flops estimate (useful + remat re-forward + attention/SSD
+        terms) repairs the term: t_compute = max(HLO, EXECUTED)/peak."""
+        t_model = self.executed_gflops_per_chip * 1e9 \
+            / HW["peak_flops_bf16"]
+        return max(self.t_compute, t_model)
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute_eff, "memory": self.t_memory_adj,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def t_bound(self) -> float:
+        return max(self.t_compute_eff, self.t_memory_adj,
+                   self.t_collective)
+
+    @property
+    def useful_flop_ratio(self) -> float:
+        return self.model_gflops_per_chip / max(self.hlo_gflops, 1e-9)
+
+    @property
+    def bw_fraction(self) -> float:
+        """Fraction of HBM traffic that is irreducible (params + caches +
+        tokens read exactly once).  The efficiency metric for memory-bound
+        kinds (decode)."""
+        return min(1.0, self.ideal_gbytes / max(self.hlo_gbytes_adj, 1e-9))
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Compute-bound kinds (train/prefill): useful-compute time over
+        the binding-resource time.  Memory-bound kinds (decode): fraction
+        of the irreducible HBM traffic — the step is at roofline when it
+        moves only the bytes it must."""
+        if self.kind == "decode":
+            t_ideal = self.ideal_gbytes * 1e9 / HW["hbm_bw"]
+            return min(1.0, t_ideal / max(self.t_bound, 1e-12))
+        t_useful = self.model_gflops_per_chip * 1e9 / HW["peak_flops_bf16"]
+        return t_useful / max(self.t_bound, 1e-12)
+
+    def to_dict(self):
+        d = dataclasses.asdict(self)
+        d.update(dominant=self.dominant,
+                 useful_flop_ratio=self.useful_flop_ratio,
+                 roofline_fraction=self.roofline_fraction,
+                 bw_fraction=self.bw_fraction,
+                 t_compute_eff=self.t_compute_eff,
+                 t_memory_adj=self.t_memory_adj,
+                 hlo_gbytes_adj=self.hlo_gbytes_adj,
+                 t_bound=self.t_bound)
+        return d
+
+
+def model_flops(cfg, shape, n_params_active: int, mode: str) -> float:
+    """USEFUL model FLOPs per step: 6·N·D train / 2·N·D inference, plus
+    the attention (and SSD) FLOPs that 6ND does not count.  ``mode``
+    overrides the shape kind (the remat re-forward is a prefill-shaped
+    pass over the train shape)."""
+    if mode == "decode":
+        tokens = shape.global_batch
+        mult = 2.0
+    else:
+        tokens = shape.global_batch * shape.seq_len
+        mult = 6.0 if mode == "train" else 2.0
+    base = mult * n_params_active * tokens
+    return base + _mixer_flops(cfg, shape, mode)
+
+
+def _mixer_flops(cfg, shape, mode) -> float:
+    """Attention score/value + SSD flops (not captured by 6ND)."""
+    B, S = shape.global_batch, shape.seq_len
+    fb = 3.0 if mode == "train" else 1.0    # fwd(+bwd=2x)
+    H, hd = cfg.n_heads, cfg.hd
+    total = 0.0
+    if mode == "decode":
+        # one query token against the full cache
+        att_layers = _attn_layers(cfg)
+        total += att_layers * 4.0 * B * S * H * hd
+        return total
+    att_layers = _attn_layers(cfg)
+    # causal self-attention: 2 matmuls x 2 flops x half the S^2 triangle
+    total += att_layers * 2.0 * B * S * S * H * hd * fb
+    if cfg.family == "vlm":
+        ncross = cfg.n_layers // cfg.cross_attn_every
+        total += ncross * 4.0 * B * S * cfg.n_img_tokens * H * hd * fb
+    if cfg.family == "encdec":
+        total += cfg.enc_layers * 4.0 * B * cfg.enc_seq ** 2 * H * hd * fb
+        total += cfg.n_layers * 4.0 * B * S * cfg.enc_seq * H * hd * fb
+    if cfg.family in ("ssm", "hybrid"):
+        Hs, P, N, ch = (cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state,
+                        cfg.ssm_chunk)
+        # per token per layer: intra-chunk (~2·ch·(N+P)) + states (~4·P·N)
+        per_tok = 2.0 * ch * (N + P) + 4.0 * P * N
+        total += cfg.n_layers * B * S * Hs * per_tok * fb
+    return total
+
+
+def _attn_layers(cfg) -> int:
+    if cfg.family in ("dense", "moe", "vlm", "encdec"):
+        return cfg.n_layers
+    if cfg.family == "hybrid":
+        return cfg.n_layers // cfg.attn_every
+    return 0
+
+
+def executed_flops(cfg, shape, n_params_active: int) -> float:
+    """EXECUTED compute: useful flops plus the remat re-forward (block
+    remat recomputes the forward during backward: +2ND on top of 6ND)."""
+    useful = model_flops(cfg, shape, n_params_active, shape.kind)
+    if shape.kind == "train" and cfg.remat in ("block", "full"):
+        refwd = model_flops(cfg, shape, n_params_active, "prefill")
+        return useful + refwd
+    return useful   # remat="dots" recomputes no matmuls
+
+
+def active_params(cfg) -> int:
+    """Parameter count with only top-k experts active (MoE)."""
+    from repro.models import model_defs
+    from repro.models.params import ParamDef
+    import jax
+    import numpy as np
+
+    defs = model_defs(cfg)
+    total = 0
+    flat, _ = jax.tree_util.tree_flatten_with_path(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    for path, d in flat:
+        n = int(np.prod(d.shape))
+        keys = [getattr(k, "key", str(k)) for k in path]
+        if cfg.family == "moe" and any(k in ("w_up", "w_gate", "w_down")
+                                       for k in keys) \
+                and "ffn" in keys:
+            n = n * cfg.top_k // cfg.n_experts
+        total += n
+    return total
+
+
+def ideal_bytes(cfg, shape, chips: int) -> float:
+    """Irreducible per-chip HBM traffic for one step: every (active)
+    parameter byte once (bf16 for serve, bf16 weights + f32 opt update
+    traffic for train), plus KV/state caches read+written once (decode),
+    plus the token activations once."""
+    from repro.models import model_defs, init_caches
+    from repro.models.params import count_params
+    import jax
+
+    n = count_params(model_defs(cfg))
+    B, S = shape.global_batch, shape.seq_len
+    act = B * S * cfg.d_model * 2 if shape.kind != "decode" \
+        else B * cfg.d_model * 2
+    if shape.kind == "train":
+        # fwd read (bf16 cast) + bwd read + grad write + opt read/write f32
+        pbytes = n * (2 + 2 + 4 + 3 * 4)
+        return (pbytes + 4 * act) / chips
+    pbytes = n * 2
+    cbytes = 0
+    if shape.kind == "decode":
+        caches = init_caches(cfg, B, S, abstract=True)
+        cbytes = sum(int(np.prod(x.shape)) * x.dtype.itemsize
+                     for x in jax.tree.leaves(caches))
+    return (pbytes + cbytes + act) / chips
+
+
+def build_report(*, arch: str, shape, mesh_name: str, chips: int,
+                 cost: Dict, mem_bytes: float, hlo_text: str,
+                 cfg) -> RooflineReport:
+    coll = collective_bytes(hlo_text)
+    artifact = cpu_upconvert_bytes(hlo_text)
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    na = active_params(cfg)
+    mf = model_flops(cfg, shape, na, shape.kind) / chips
+    ef = executed_flops(cfg, shape, na) / chips
+    return RooflineReport(
+        arch=arch, shape=shape.name, mesh=mesh_name, chips=chips,
+        hlo_gflops=flops / 1e9, hlo_gbytes=byts / 1e9,
+        coll_gbytes=coll["total_bytes"] / 1e9,
+        t_compute=flops / HW["peak_flops_bf16"],
+        t_memory=byts / HW["hbm_bw"],
+        t_collective=coll["total_bytes"] / HW["ici_link_bw"],
+        model_gflops_per_chip=mf / 1e9,
+        executed_gflops_per_chip=ef / 1e9,
+        bytes_per_device=mem_bytes,
+        kind=shape.kind,
+        ideal_gbytes=ideal_bytes(cfg, shape, chips) / 1e9,
+        cpu_artifact_gbytes=artifact / 1e9,
+        coll_counts=coll["count"], coll_bytes_by_kind=coll["bytes"])

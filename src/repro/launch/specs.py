@@ -1,0 +1,60 @@
+"""Abstract input specs (ShapeDtypeStruct) for every (arch × shape) cell.
+
+Same pattern the paper's runtime uses for device-agnostic buffer handles:
+weak-type-correct stand-ins that can be sharded and lowered with zero
+device allocation.  Modality frontends are STUBS per the assignment —
+``[audio]``/``[vlm]`` cells receive precomputed frame/patch embeddings.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import ModelConfig, ShapeConfig, init_caches
+
+
+def sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def train_input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    out = {"tokens": sds((B, S), jnp.int32),
+           "targets": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        out["img_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def serve_input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                      ) -> Tuple[Dict[str, Any], Any]:
+    """(aux/token specs, cache specs).  For ``decode`` kinds the step
+    consumes one new token against a seq_len-deep cache; for ``prefill``
+    the step consumes the full prompt and writes the cache."""
+    B, S = shape.global_batch, shape.seq_len
+    caches = init_caches(cfg, B, S, dtype=jnp.dtype(cfg.dtype),
+                         abstract=True)
+    if shape.kind == "decode":
+        toks = {"tokens": sds((B, 1), jnp.int32)}
+    else:
+        toks = {"tokens": sds((B, S), jnp.int32)}
+    if cfg.family == "vlm":
+        toks["img_embeds"] = sds((B, cfg.n_img_tokens, cfg.d_model),
+                                 jnp.bfloat16)
+    if cfg.family == "encdec":
+        toks["frames"] = sds((B, cfg.enc_seq, cfg.d_model), jnp.bfloat16)
+    return toks, caches
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig):
+    """The dry-run entry: kwargs for the lowered step function."""
+    if shape.kind == "train":
+        return {"batch": train_input_specs(cfg, shape)}
+    toks, caches = serve_input_specs(cfg, shape)
+    return {"batch": toks, "caches": caches}

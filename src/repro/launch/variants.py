@@ -1,0 +1,90 @@
+"""Named sharding-rule variants for the §Perf hillclimb.
+
+Each entry maps (base_rules, cfg, shape, mesh) -> ShardingRules.  The
+baseline is paper-faithful 2D DP x TP; variants are the beyond-paper
+optimizations and are recorded separately in EXPERIMENTS.md §Perf.
+"""
+
+VARIANTS = {}
+
+
+def variant(name):
+    def deco(fn):
+        VARIANTS[name] = fn
+        return fn
+    return deco
+
+
+@variant("h1_cache_layout")
+def h1_cache_layout(base, cfg, shape, mesh):
+    """H1 iter 2: (B,KV,S,D)-native KV cache (code change; rules equal
+    to baseline — the variant exists to record the measurement)."""
+    return base
+
+
+@variant("no_fsdp")
+def no_fsdp(base, cfg, shape, mesh):
+    """H2: drop FSDP weight sharding (kills per-layer weight all-gathers;
+    viable when params*3*4B fit per model-rank)."""
+    return base.replace(embed_fsdp=None)
+
+
+@variant("no_sp")
+def no_sp(base, cfg, shape, mesh):
+    """Ablation: no sequence-parallel residuals (the pre-SP baseline)."""
+    return base.replace(act_seq=None)
+
+
+@variant("moe_data_dispatch")
+def moe_data_dispatch(base, cfg, shape, mesh):
+    """H3: experts sharded over the DATA axis instead of model (a2a moves
+    to the data axis; model axis keeps pure TP)."""
+    return base.replace(experts="data", expert_mlp="model")
+
+
+@variant("ctl_f32")
+def ctl_f32(base, cfg, shape, mesh):
+    """Control: all-f32 lowering (no CPU bf16-dot upconversion) — proves
+    how much of the memory term is compile-target artifact."""
+    return base
+
+
+@variant("moe_token_parallel")
+def moe_token_parallel(base, cfg, shape, mesh):
+    """H2: token/capacity-parallel MoE.  Experts replicate on the model
+    axis (FSDP over data keeps memory flat); the dispatch capacity dim
+    shards over model.  No sharded contraction appears in the expert-FFN
+    backward, killing the per-layer (E,G,C,d) dxin all-reduce that
+    dominates the TP-of-experts fallback when n_experts % model != 0."""
+    return base.replace(experts=None, expert_mlp=None,
+                        moe_capacity="model")
+
+
+# config-level overrides applied per variant name (composable via '+')
+CFG_OVERRIDES = {
+    "ctl_f32": {"dtype": "float32"},
+    "remat_dots": {"remat": "dots"},
+    "stream_ce": {"use_streaming_ce": True},
+}
+
+
+@variant("remat_dots")
+def remat_dots(base, cfg, shape, mesh):
+    """Selective remat: save dot outputs, recompute elementwise — trades
+    activation memory for the 2ND re-forward FLOPs (75% -> ~100% of the
+    compute roofline when memory allows)."""
+    return base
+
+
+@variant("moe_tp_fallback")
+def moe_tp_fallback(base, cfg, shape, mesh):
+    """The paper-faithful fallback for n_experts % model != 0: per-expert
+    FFN tensor parallelism (kept for the §Perf H2 record)."""
+    return base.replace(experts="model", expert_mlp="model",
+                        moe_capacity=None)
+
+
+@variant("stream_ce")
+def stream_ce(base, cfg, shape, mesh):
+    """Fused vocab-chunked cross-entropy: no (B,S,V) logits buffer."""
+    return base

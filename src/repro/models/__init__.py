@@ -1,0 +1,7 @@
+from .config import ModelConfig, ShapeConfig, ALL_SHAPES, shapes_for
+from .model import (forward, loss_fn, init_params, abstract_params,
+                    init_caches, cache_logical_axes, model_defs)
+
+__all__ = ["ModelConfig", "ShapeConfig", "ALL_SHAPES", "shapes_for",
+           "forward", "loss_fn", "init_params", "abstract_params",
+           "init_caches", "cache_logical_axes", "model_defs"]

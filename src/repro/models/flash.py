@@ -1,0 +1,187 @@
+"""Memory-efficient blocked attention with a recompute-based custom VJP.
+
+Naive autodiff of an online-softmax scan saves every (bq x bk) probability
+matrix — O(S²) residuals, tens of GiB at 4k x 256 batch.  The standard
+(FlashAttention) answer is a custom VJP that saves only (o, lse) and
+recomputes p blockwise in the backward pass.  This is the XLA-path
+counterpart of the Pallas flash kernel; on TPU the Pallas kernel replaces
+the forward, while this VJP structure still drives the backward.
+
+Layouts are (B, H, S, D) internally; the public wrapper accepts
+(B, S, H, D) with GQA K/V and handles repeat/padding.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+NEG = -1e30
+
+
+def _mask(qpos, kpos, causal: bool, sk_valid: int):
+    m = (kpos[None, :] < sk_valid)
+    if causal:
+        m = jnp.logical_and(m, kpos[None, :] <= qpos[:, None])
+    return m
+
+
+def _fwd_scan(q, k, v, *, causal, bq, bk, sk_valid, q_offset):
+    """q: (B,H,Sq,D) padded; k/v: (B,H,Sk,D) padded.  Returns (o, lse)."""
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    nq, nk = Sq // bq, Sk // bk
+    kb = k.reshape(B, H, nk, bk, D)
+    vb = v.reshape(B, H, nk, bk, D)
+
+    def q_block(qi, qblk):
+        qpos = q_offset + qi * bq + jnp.arange(bq)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kblk = kb[:, :, j]
+            vblk = vb[:, :, j]
+            kpos = j * bk + jnp.arange(bk)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            s = jnp.where(_mask(qpos, kpos, causal, sk_valid)[None, None],
+                          s, NEG)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            alpha = jnp.exp(m - m_new)
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqk,bhkd->bhqd", p.astype(vblk.dtype), vblk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((B, H, bq), NEG, jnp.float32)
+        l0 = jnp.zeros((B, H, bq), jnp.float32)
+        a0 = jnp.zeros((B, H, bq, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), jnp.arange(nk))
+        l_safe = jnp.where(l == 0.0, 1.0, l)
+        o = (acc / l_safe[..., None]).astype(q.dtype)
+        lse = m + jnp.log(l_safe)
+        return o, lse
+
+    o, lse = jax.lax.map(
+        lambda args: q_block(*args),
+        (jnp.arange(nq), q.reshape(B, H, nq, bq, D).transpose(2, 0, 1, 3, 4)))
+    o = o.transpose(1, 2, 0, 3, 4).reshape(B, H, Sq, D)
+    lse = lse.transpose(1, 2, 0, 3).reshape(B, H, Sq)
+    return o, lse
+
+
+def _bwd_scan(q, k, v, o, lse, do, *, causal, bq, bk, sk_valid, q_offset):
+    B, H, Sq, D = q.shape
+    Sk = k.shape[2]
+    nq, nk = Sq // bq, Sk // bk
+    scale_dt = jnp.float32
+    Drow = jnp.sum(do.astype(scale_dt) * o.astype(scale_dt), axis=-1)  # BHS
+
+    qb = q.reshape(B, H, nq, bq, D)
+    dob = do.reshape(B, H, nq, bq, D)
+    lseb = lse.reshape(B, H, nq, bq)
+    Drb = Drow.reshape(B, H, nq, bq)
+
+    def kv_block(dq_acc, j):
+        kblk = jax.lax.dynamic_slice_in_dim(k, j * bk, bk, axis=2)
+        vblk = jax.lax.dynamic_slice_in_dim(v, j * bk, bk, axis=2)
+        kpos = j * bk + jnp.arange(bk)
+
+        def q_step(carry, i):
+            dq_acc, dk_j, dv_j = carry
+            qblk = qb[:, :, i]
+            doblk = dob[:, :, i]
+            qpos = q_offset + i * bq + jnp.arange(bq)
+            s = jnp.einsum("bhqd,bhkd->bhqk", qblk, kblk,
+                           preferred_element_type=jnp.float32)
+            msk = _mask(qpos, kpos, causal, sk_valid)[None, None]
+            s = jnp.where(msk, s, NEG)
+            p = jnp.exp(s - lseb[:, :, i][..., None])        # (B,H,bq,bk)
+            dv_j = dv_j + jnp.einsum("bhqk,bhqd->bhkd",
+                                     p, doblk.astype(jnp.float32))
+            dp = jnp.einsum("bhqd,bhkd->bhqk", doblk.astype(jnp.float32),
+                            vblk.astype(jnp.float32))
+            ds = p * (dp - Drb[:, :, i][..., None])
+            ds = jnp.where(msk, ds, 0.0)
+            dq_i = jnp.einsum("bhqk,bhkd->bhqd", ds,
+                              kblk.astype(jnp.float32))
+            prev = jax.lax.dynamic_slice_in_dim(dq_acc, i * bq, bq, axis=2)
+            dq_acc = jax.lax.dynamic_update_slice_in_dim(
+                dq_acc, prev + dq_i, i * bq, axis=2)
+            dk_j = dk_j + jnp.einsum("bhqk,bhqd->bhkd", ds,
+                                     qblk.astype(jnp.float32))
+            return (dq_acc, dk_j, dv_j), None
+
+        dk0 = jnp.zeros((B, H, bk, D), jnp.float32)
+        dv0 = jnp.zeros((B, H, bk, D), jnp.float32)
+        (dq_acc, dk_j, dv_j), _ = jax.lax.scan(
+            q_step, (dq_acc, dk0, dv0), jnp.arange(nq))
+        return dq_acc, (dk_j, dv_j)
+
+    dq0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    dq, (dk_blocks, dv_blocks) = jax.lax.scan(kv_block, dq0, jnp.arange(nk))
+    dk = dk_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Sk, D)
+    dv = dv_blocks.transpose(1, 2, 0, 3, 4).reshape(B, H, Sk, D)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(0,))
+def _flash(meta, q, k, v):
+    causal, bq, bk, sk_valid, q_offset = meta
+    o, _ = _fwd_scan(q, k, v, causal=causal, bq=bq, bk=bk,
+                     sk_valid=sk_valid, q_offset=q_offset)
+    return o
+
+
+def _flash_fwd(meta, q, k, v):
+    causal, bq, bk, sk_valid, q_offset = meta
+    o, lse = _fwd_scan(q, k, v, causal=causal, bq=bq, bk=bk,
+                       sk_valid=sk_valid, q_offset=q_offset)
+    return o, (q, k, v, o, lse)
+
+
+def _flash_bwd(meta, res, do):
+    causal, bq, bk, sk_valid, q_offset = meta
+    q, k, v, o, lse = res
+    dq, dk, dv = _bwd_scan(q, k, v, o, lse, do, causal=causal, bq=bq,
+                           bk=bk, sk_valid=sk_valid, q_offset=q_offset)
+    return dq, dk, dv
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def blocked_attention(q, k, v, *, causal: bool, block_q: int, block_k: int,
+                      q_offset: int = 0):
+    """Public wrapper.  q: (B,Sq,H,D); k/v: (B,Sk,KV,D) (GQA broadcast)."""
+    B, Sq, H, D = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    rep = H // KV
+    if rep > 1:
+        k = jnp.broadcast_to(k[:, :, :, None, :], (B, Sk, KV, rep, D)) \
+            .reshape(B, Sk, H, D)
+        v = jnp.broadcast_to(v[:, :, :, None, :], (B, Sk, KV, rep, D)) \
+            .reshape(B, Sk, H, D)
+
+    q = (q * (1.0 / math.sqrt(D))).transpose(0, 2, 1, 3)   # (B,H,Sq,D)
+    k = k.transpose(0, 2, 1, 3)
+    v = v.transpose(0, 2, 1, 3)
+
+    bq = min(block_q, Sq)
+    bk = min(block_k, Sk)
+    pq = (-Sq) % bq
+    pk = (-Sk) % bk
+    if pq:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pq), (0, 0)))
+    if pk:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pk), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pk), (0, 0)))
+
+    meta = (bool(causal), bq, bk, Sk, q_offset)
+    o = _flash(meta, q, k, v)
+    return o[:, :, :Sq].transpose(0, 2, 1, 3)

@@ -1,0 +1,259 @@
+"""Declarative parameter trees.
+
+A single table per architecture declares every parameter's shape, logical
+sharding axes, and init scale.  Everything else — real initialization,
+abstract ShapeDtypeStructs for the dry-run, and PartitionSpec trees — is
+derived from that one table, so the three can never drift apart.  (This is
+the same single-source-of-truth discipline pocl applies to its kernel
+metadata: the parallelism info is attached once and every later stage
+reads it.)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.sharding import ShardingRules, logical_to_sharding
+from .config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    init: str = "normal"          # normal | zeros | ones | ssm_a | ssm_dt
+    scale: Optional[float] = None  # None -> 1/sqrt(fan_in)
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+ParamTree = Dict[str, object]   # nested dicts of ParamDef / arrays
+
+
+def _fan_in_scale(shape: Tuple[int, ...]) -> float:
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    return 1.0 / math.sqrt(max(fan_in, 1))
+
+
+def _init_leaf(key, d: ParamDef, dtype) -> jnp.ndarray:
+    if d.init == "zeros":
+        return jnp.zeros(d.shape, dtype)
+    if d.init == "ones":
+        return jnp.ones(d.shape, dtype)
+    if d.init == "ssm_a":       # Mamba2: A in [-1.5, -0.5]
+        u = jax.random.uniform(key, d.shape, jnp.float32, 0.5, 1.5)
+        return (-u).astype(dtype)
+    if d.init == "ssm_dt":      # dt bias ~ softplus^-1(U(1e-3, 1e-1))
+        u = jax.random.uniform(key, d.shape, jnp.float32, 1e-3, 1e-1)
+        return jnp.log(jnp.expm1(u)).astype(dtype)
+    scale = d.scale if d.scale is not None else _fan_in_scale(d.shape)
+    return (jax.random.normal(key, d.shape, jnp.float32) * scale).astype(dtype)
+
+
+def init_params(defs: ParamTree, key, dtype=jnp.float32):
+    leaves, treedef = jax.tree.flatten(
+        defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    keys = jax.random.split(key, len(leaves))
+    out = [_init_leaf(k, d, dtype) for k, d in zip(keys, leaves)]
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(defs: ParamTree, dtype=jnp.float32):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_shardings(defs: ParamTree, mesh, rules: ShardingRules):
+    return jax.tree.map(
+        lambda d: logical_to_sharding(mesh, rules, d.logical), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def param_pspecs(defs: ParamTree, rules: ShardingRules):
+    return jax.tree.map(
+        lambda d: rules.spec(*d.logical), defs,
+        is_leaf=lambda x: isinstance(x, ParamDef))
+
+
+def count_params(defs: ParamTree) -> int:
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    return int(sum(int(np.prod(d.shape)) for d in leaves))
+
+
+# ---------------------------------------------------------------------------
+# per-family parameter tables
+# ---------------------------------------------------------------------------
+
+def _stack(n: int, d: ParamDef) -> ParamDef:
+    """Stack a per-layer def along a leading (replicated) layer axis."""
+    return ParamDef((n,) + d.shape, (None,) + d.logical, d.init, d.scale)
+
+
+def _resid_scale(cfg: ModelConfig, fan_in: int) -> float:
+    """Residual-branch output projections: fan-in init divided by
+    sqrt(2L) (GPT-2 style) so the residual stream's scale — and hence the
+    backward through the pre-norm chain — stays depth-stable."""
+    return 1.0 / (math.sqrt(fan_in) * math.sqrt(2.0 * max(cfg.n_layers, 1)))
+
+
+def attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, hd, H, KV = cfg.d_model, cfg.hd, cfg.n_heads, cfg.n_kv
+    return {
+        # explicit fan-in scales: the heuristic (shape[-2]) would read the
+        # HEAD COUNT for these 3D projections, not d_model
+        "wq": ParamDef((d, H, hd), ("embed_fsdp", "heads", "head_dim"),
+                       scale=1.0 / math.sqrt(d)),
+        "wk": ParamDef((d, KV, hd), ("embed_fsdp", "kv_heads", "head_dim"),
+                       scale=1.0 / math.sqrt(d)),
+        "wv": ParamDef((d, KV, hd), ("embed_fsdp", "kv_heads", "head_dim"),
+                       scale=1.0 / math.sqrt(d)),
+        "wo": ParamDef((H, hd, d), ("heads", "head_dim", "embed_fsdp"),
+                       scale=_resid_scale(cfg, H * hd)),
+    }
+
+
+def cross_attn_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    return attn_defs(cfg)
+
+
+def mlp_defs(cfg: ModelConfig, d_ff: Optional[int] = None,
+             ff_axis: str = "mlp") -> Dict[str, ParamDef]:
+    d = cfg.d_model
+    f = d_ff if d_ff is not None else cfg.d_ff
+    out = {
+        "w_up": ParamDef((d, f), ("embed_fsdp", ff_axis)),
+        "w_down": ParamDef((f, d), (ff_axis, "embed_fsdp"),
+                           scale=_resid_scale(cfg, f)),
+    }
+    if cfg.act == "silu":       # gated
+        out["w_gate"] = ParamDef((d, f), ("embed_fsdp", ff_axis))
+    return out
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.n_experts
+    return {
+        "router": ParamDef((d, E), ("embed_fsdp", None), scale=0.02),
+        "w_up": ParamDef((E, d, f), ("experts", "embed_fsdp", "expert_mlp")),
+        "w_gate": ParamDef((E, d, f), ("experts", "embed_fsdp", "expert_mlp")),
+        "w_down": ParamDef((E, f, d), ("experts", "expert_mlp", "embed_fsdp"),
+                           scale=_resid_scale(cfg, f)),
+    }
+
+
+def mamba2_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    """Mamba-2 (SSD) mixer.  The input projection is kept as SEPARATE
+    z/x/B/C/dt matrices rather than one packed matmul: slicing a packed,
+    model-sharded output dim at non-shard-aligned offsets would force XLA
+    to reshard; separate projections shard each segment cleanly."""
+    d = cfg.d_model
+    inner = cfg.ssm_inner
+    H, N, G = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_groups
+    return {
+        "w_z": ParamDef((d, inner), ("embed_fsdp", "conv_dim")),
+        "w_x": ParamDef((d, inner), ("embed_fsdp", "conv_dim")),
+        "w_B": ParamDef((d, G * N), ("embed_fsdp", None)),
+        "w_C": ParamDef((d, G * N), ("embed_fsdp", None)),
+        "w_dt": ParamDef((d, H), ("embed_fsdp", "ssm_heads")),
+        "conv_x_w": ParamDef((cfg.ssm_conv, inner), (None, "conv_dim")),
+        "conv_x_b": ParamDef((inner,), ("conv_dim",), init="zeros"),
+        "conv_B_w": ParamDef((cfg.ssm_conv, G * N), (None, None)),
+        "conv_B_b": ParamDef((G * N,), (None,), init="zeros"),
+        "conv_C_w": ParamDef((cfg.ssm_conv, G * N), (None, None)),
+        "conv_C_b": ParamDef((G * N,), (None,), init="zeros"),
+        "A_log": ParamDef((H,), ("ssm_heads",), init="ssm_a"),
+        "dt_bias": ParamDef((H,), ("ssm_heads",), init="ssm_dt"),
+        "D": ParamDef((H,), ("ssm_heads",), init="ones"),
+        "norm_w": ParamDef((inner,), ("conv_dim",), init="ones"),
+        "w_out": ParamDef((inner, d), ("conv_dim", "embed_fsdp"),
+                          scale=_resid_scale(cfg, inner)),
+    }
+
+
+def _norm(cfg: ModelConfig, dim: Optional[int] = None) -> Dict[str, ParamDef]:
+    dim = dim if dim is not None else cfg.d_model
+    out = {"w": ParamDef((dim,), ("d_model",), init="ones")}
+    if cfg.norm == "layernorm":
+        out["b"] = ParamDef((dim,), ("d_model",), init="zeros")
+    return out
+
+
+def block_defs(cfg: ModelConfig, kind: str) -> Dict[str, ParamDef]:
+    """One residual block: pre-norm + mixer (+ pre-norm + ffn for attn)."""
+    if kind == "attn":
+        ffn = moe_defs(cfg) if cfg.family == "moe" else mlp_defs(cfg)
+        return {"ln1": _norm(cfg), "attn": attn_defs(cfg),
+                "ln2": _norm(cfg), "ffn": ffn}
+    if kind == "mamba":
+        return {"ln1": _norm(cfg), "mixer": mamba2_defs(cfg)}
+    if kind == "cross":
+        return {"ln": _norm(cfg), "xattn": cross_attn_defs(cfg),
+                "gate": ParamDef((1,), (None,), init="zeros")}
+    raise ValueError(kind)
+
+
+def model_defs(cfg: ModelConfig) -> ParamTree:
+    """Full parameter table for any of the six supported families."""
+    V = cfg.padded_vocab
+    out: ParamTree = {
+        "embed": ParamDef((V, cfg.d_model), ("vocab", "embed_fsdp"), scale=0.02),
+        "ln_f": _norm(cfg),
+    }
+    if not cfg.tie_embeddings:
+        out["unembed"] = ParamDef((cfg.d_model, V), ("embed_fsdp", "vocab"))
+
+    L = cfg.n_layers
+    if cfg.family in ("dense", "moe"):
+        out["layers"] = jax.tree.map(
+            lambda p: _stack(L, p), block_defs(cfg, "attn"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+    elif cfg.family == "ssm":
+        out["layers"] = jax.tree.map(
+            lambda p: _stack(L, p), block_defs(cfg, "mamba"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+    elif cfg.family == "hybrid":
+        out["layers"] = jax.tree.map(
+            lambda p: _stack(L, p), block_defs(cfg, "mamba"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        # zamba2-style single SHARED attention block, applied every
+        # ``attn_every`` mamba blocks — parameters are not stacked.
+        out["shared_attn"] = block_defs(cfg, "attn")
+    elif cfg.family == "vlm":
+        every = cfg.cross_attn_every
+        assert L % every == 0
+        n_groups = L // every
+        # self-attn decoder layers grouped (n_groups, every, ...)
+        grouped = jax.tree.map(
+            lambda p: ParamDef((n_groups, every) + p.shape,
+                               (None, None) + p.logical, p.init, p.scale),
+            block_defs(cfg, "attn"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        out["layers"] = grouped
+        out["cross"] = jax.tree.map(
+            lambda p: _stack(n_groups, p), block_defs(cfg, "cross"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+    elif cfg.family == "encdec":
+        out["layers"] = jax.tree.map(          # decoder: self+cross+ffn
+            lambda p: _stack(L, p), {**block_defs(cfg, "attn"),
+                                     "lnx": _norm(cfg),
+                                     "xattn": cross_attn_defs(cfg)},
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        out["enc_layers"] = jax.tree.map(
+            lambda p: _stack(cfg.enc_layers, p), block_defs(cfg, "attn"),
+            is_leaf=lambda x: isinstance(x, ParamDef))
+        out["ln_enc"] = _norm(cfg)
+        out["pos_embed"] = ParamDef((4096, cfg.d_model), (None, "d_model"),
+                                    scale=0.02)
+        out["enc_pos_embed"] = ParamDef((cfg.enc_seq, cfg.d_model),
+                                        (None, "d_model"), scale=0.02)
+    else:
+        raise ValueError(cfg.family)
+    return out

@@ -1,0 +1,8 @@
+"""OpenCL-shaped runtime: host layer over the device layer (paper §3)."""
+
+from .bufalloc import Bufalloc, OutOfMemory
+from .platform import Buffer, Device, DeviceInfo, Platform, create_buffer
+from .queue import CommandQueue, Event
+
+__all__ = ["Bufalloc", "OutOfMemory", "Platform", "Device", "DeviceInfo",
+           "Buffer", "create_buffer", "CommandQueue", "Event"]

@@ -1,0 +1,176 @@
+"""Bufalloc — the pocl kernel-buffer allocator (paper §3).
+
+Faithful reimplementation of the design described in the paper:
+
+* a single large *region* is obtained up front (one malloc / static array /
+  known device-memory range) — here it models an HBM arena;
+* internal book-keeping is a list of **chunks** ordered by start address,
+  each with a free/allocated flag and a size;
+* the **last chunk is a sentinel** holding all unallocated memory;
+* allocation walks the list **first-fit** and splits the found chunk in two:
+  one with the exact request size (returned) and one with the remainder;
+* an optional **greedy mode** always serves new requests from the sentinel
+  (end of region) when possible, so successive allocations of a kernel's
+  buffer group land in continuous memory;
+* frees coalesce with free neighbours — the workload assumption is
+  long-lived buffers allocated and freed in groups, so fragmentation stays
+  low by construction.
+
+The serving engine uses a Bufalloc arena for its paged KV cache
+(:mod:`repro.serve.kvcache`), and the OpenCL-style runtime uses it for
+``clCreateBuffer`` book-keeping on devices without their own allocator.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, List, Optional
+
+
+class OutOfMemory(Exception):
+    pass
+
+
+@dataclass
+class Chunk:
+    start: int
+    size: int
+    free: bool
+    prev: Optional["Chunk"] = None
+    next: Optional["Chunk"] = None
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"<{'F' if self.free else 'A'} @{self.start} +{self.size}>"
+
+
+class Bufalloc:
+    def __init__(self, region_size: int, alignment: int = 64,
+                 greedy: bool = False):
+        assert region_size > 0 and alignment > 0
+        self.region_size = region_size
+        self.alignment = alignment
+        self.greedy = greedy
+        # sentinel last chunk holds all unallocated memory
+        self._head = Chunk(0, region_size, True)
+        self._sentinel = self._head
+        self._allocated = 0
+        self.n_allocs = 0
+        self.n_frees = 0
+
+    # -- helpers ---------------------------------------------------------------
+    def _align(self, n: int) -> int:
+        a = self.alignment
+        return (n + a - 1) // a * a
+
+    def chunks(self) -> Iterator[Chunk]:
+        c = self._head
+        while c is not None:
+            yield c
+            c = c.next
+
+    # -- allocation --------------------------------------------------------------
+    def alloc(self, size: int) -> Chunk:
+        """First-fit allocation; greedy mode serves from the sentinel."""
+        req = self._align(max(size, 1))
+        target: Optional[Chunk] = None
+        if self.greedy and self._sentinel.free and self._sentinel.size >= req:
+            target = self._sentinel
+        else:
+            for c in self.chunks():
+                if c.free and c.size >= req:
+                    target = c
+                    break
+        if target is None:
+            raise OutOfMemory(
+                f"Bufalloc: {size} bytes requested, "
+                f"{self.free_bytes()} free (fragmented into "
+                f"{sum(1 for c in self.chunks() if c.free)} chunks)")
+        # split: exact-size allocated chunk + remainder chunk
+        if target.size > req:
+            rest = Chunk(target.start + req, target.size - req, True,
+                         prev=target, next=target.next)
+            if target.next is not None:
+                target.next.prev = rest
+            target.next = rest
+            target.size = req
+            if target is self._sentinel:
+                self._sentinel = rest
+        elif target is self._sentinel:
+            # sentinel fully consumed; new sentinel is the last free chunk
+            self._sentinel = target
+        target.free = False
+        self._allocated += req
+        self.n_allocs += 1
+        return target
+
+    def free(self, chunk: Chunk) -> None:
+        assert not chunk.free, "double free"
+        chunk.free = True
+        self._allocated -= chunk.size
+        self.n_frees += 1
+        # coalesce with free neighbours
+        if chunk.next is not None and chunk.next.free:
+            nxt = chunk.next
+            chunk.size += nxt.size
+            chunk.next = nxt.next
+            if nxt.next is not None:
+                nxt.next.prev = chunk
+            if nxt is self._sentinel:
+                self._sentinel = chunk
+        if chunk.prev is not None and chunk.prev.free:
+            prv = chunk.prev
+            prv.size += chunk.size
+            prv.next = chunk.next
+            if chunk.next is not None:
+                chunk.next.prev = prv
+            if chunk is self._sentinel:
+                self._sentinel = prv
+
+    def alloc_group(self, sizes: List[int]) -> List[Chunk]:
+        """Allocate a kernel's buffer group with successive calls (the
+        paper's usage pattern); greedy mode makes these contiguous."""
+        out: List[Chunk] = []
+        try:
+            for s in sizes:
+                out.append(self.alloc(s))
+        except OutOfMemory:
+            for c in out:
+                self.free(c)
+            raise
+        return out
+
+    def free_group(self, chunks: List[Chunk]) -> None:
+        for c in chunks:
+            self.free(c)
+
+    # -- introspection -------------------------------------------------------------
+    def free_bytes(self) -> int:
+        return self.region_size - self._allocated
+
+    def allocated_bytes(self) -> int:
+        return self._allocated
+
+    def largest_free(self) -> int:
+        return max((c.size for c in self.chunks() if c.free), default=0)
+
+    def fragmentation(self) -> float:
+        """1 - largest_free/free_bytes (0 = unfragmented)."""
+        fb = self.free_bytes()
+        if fb == 0:
+            return 0.0
+        return 1.0 - self.largest_free() / fb
+
+    def check_invariants(self) -> None:
+        prev_end = 0
+        prev = None
+        for c in self.chunks():
+            assert c.start == prev_end, "chunks must be contiguous"
+            assert c.size > 0
+            assert c.prev is prev
+            prev_end = c.start + c.size
+            prev = c
+        assert prev_end == self.region_size
+        # no two adjacent free chunks (coalescing invariant)
+        for c in self.chunks():
+            if c.free and c.next is not None:
+                assert not c.next.free, "adjacent free chunks not coalesced"

@@ -1,0 +1,109 @@
+"""OpenCL-shaped host layer: Platform / Device / Buffer (paper §3, Fig. 2).
+
+The host layer is generic; device-specific behaviour lives behind the
+device-layer interface, mirroring pocl's ``basic`` / ``pthread`` / ``ttasim``
+driver split:
+
+  ``basic``   — single JAX device, serial work-group execution (loop target)
+  ``vector``  — single JAX device, vectorized work-groups (vector target)
+  ``pallas``  — Pallas grid execution (interpret on CPU, Mosaic on TPU)
+  ``mesh``    — work-groups distributed over a jax.Mesh axis (the
+                multi-device analogue of the pthread driver's TLP)
+
+Device queries (global memory size, max work-group size, …) are delegated to
+the device layer exactly as the paper describes for ``clGetDeviceInfo``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, List, Optional, Sequence
+
+import jax
+import numpy as np
+
+from ..core.api import CompiledKernel, compile_kernel
+from ..core.ir import Function
+from .bufalloc import Bufalloc, Chunk
+
+
+@dataclasses.dataclass
+class DeviceInfo:
+    name: str
+    driver: str                 # basic | vector | pallas | mesh
+    global_mem_size: int
+    local_mem_size: int
+    max_work_group_size: int
+    compute_units: int
+
+
+class Device:
+    """Device-layer object: owns resource management for its memory."""
+
+    def __init__(self, info: DeviceInfo, jax_device=None):
+        self.info = info
+        self.jax_device = jax_device or jax.devices()[0]
+        # Bufalloc manages the device buffer address space (the paper's
+        # "host keeps book of all buffer allocations for a known region")
+        self.allocator = Bufalloc(info.global_mem_size, greedy=True)
+        self._target = {"basic": "loop", "vector": "vector",
+                        "pallas": "pallas", "mesh": "vector"}[info.driver]
+
+    # -- device layer: kernel compilation -------------------------------------
+    def build_kernel(self, build: Callable[[], Function],
+                     local_size: Sequence[int], **opts) -> CompiledKernel:
+        return compile_kernel(build, local_size, target=self._target, **opts)
+
+    def query(self, what: str):
+        return getattr(self.info, what)
+
+
+class Buffer:
+    """A device buffer (cl_mem analogue) backed by a Bufalloc chunk plus a
+    host-side array mirror (the actual payload on this simulated device)."""
+
+    def __init__(self, device: Device, size_bytes: int, dtype: str,
+                 n_elems: int):
+        self.device = device
+        self.chunk: Chunk = device.allocator.alloc(size_bytes)
+        self.dtype = dtype
+        self.n_elems = n_elems
+        self.data = np.zeros(n_elems, dtype)
+
+    def release(self) -> None:
+        if self.chunk is not None:
+            self.device.allocator.free(self.chunk)
+            self.chunk = None
+
+
+class Platform:
+    """clGetPlatformIDs analogue: enumerates devices for the process."""
+
+    def __init__(self):
+        self.devices: List[Device] = []
+        ndev = len(jax.devices())
+        for i, d in enumerate(jax.devices()):
+            self.devices.append(Device(DeviceInfo(
+                name=f"repro-{d.platform}-{i}", driver="vector",
+                global_mem_size=1 << 30, local_mem_size=1 << 20,
+                max_work_group_size=1024, compute_units=ndev), d))
+        # a 'basic' serial device is always available (pocl's reference)
+        self.devices.append(Device(DeviceInfo(
+            name="repro-basic", driver="basic",
+            global_mem_size=1 << 30, local_mem_size=1 << 20,
+            max_work_group_size=1024, compute_units=1)))
+        self.devices.append(Device(DeviceInfo(
+            name="repro-pallas", driver="pallas",
+            global_mem_size=1 << 30, local_mem_size=1 << 20,
+            max_work_group_size=1024, compute_units=1)))
+
+    def get_devices(self, driver: Optional[str] = None) -> List[Device]:
+        if driver is None:
+            return list(self.devices)
+        return [d for d in self.devices if d.info.driver == driver]
+
+
+def create_buffer(device: Device, n_elems: int, dtype: str = "float32"
+                  ) -> Buffer:
+    itemsize = np.dtype(dtype).itemsize
+    return Buffer(device, n_elems * itemsize, dtype, n_elems)

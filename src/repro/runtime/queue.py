@@ -1,0 +1,156 @@
+"""Command queues and events (OpenCL Runtime layer, paper §2/§3).
+
+Commands (kernel launches, buffer reads/writes) are enqueued with optional
+event dependencies.  In-order queues preserve enqueue order; out-of-order
+queues execute any command whose dependencies are resolved — the analogue of
+the paper's observation that commands in an out-of-order queue "can be
+assumed to be independent of each other unless explicitly synchronized using
+events".
+
+Execution is host-driven: ``flush()`` walks the ready set; a background
+thread pool overlaps host-side staging with device execution, which is the
+same role the pthread driver's launcher threads play in pocl.
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence
+
+import numpy as np
+
+from ..core.api import CompiledKernel
+from .platform import Buffer, Device
+
+_event_ids = itertools.count()
+
+
+class Event:
+    """cl_event analogue: a future with status + profiling timestamps."""
+
+    def __init__(self, name: str):
+        self.id = next(_event_ids)
+        self.name = name
+        self.future: Optional[Future] = None
+        self._done = threading.Event()
+
+    def complete(self) -> None:
+        self._done.set()
+
+    def wait(self) -> None:
+        if self.future is not None:
+            self.future.result()
+        self._done.wait()
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+
+class _Command:
+    def __init__(self, fn: Callable[[], None], event: Event,
+                 deps: Sequence[Event]):
+        self.fn = fn
+        self.event = event
+        self.deps = list(deps)
+
+
+class CommandQueue:
+    def __init__(self, device: Device, out_of_order: bool = False,
+                 workers: int = 2):
+        self.device = device
+        self.out_of_order = out_of_order
+        self._pending: List[_Command] = []
+        self._pool = ThreadPoolExecutor(max_workers=workers)
+        self._lock = threading.Lock()
+        self._last_event: Optional[Event] = None
+
+    # -- enqueue APIs -------------------------------------------------------------
+    def _enqueue(self, name: str, fn: Callable[[], None],
+                 wait_for: Optional[Sequence[Event]]) -> Event:
+        ev = Event(name)
+        deps = list(wait_for or [])
+        if not self.out_of_order and self._last_event is not None:
+            deps.append(self._last_event)
+        with self._lock:
+            self._pending.append(_Command(fn, ev, deps))
+            self._last_event = ev
+        return ev
+
+    def enqueue_write_buffer(self, buf: Buffer, host: np.ndarray,
+                             wait_for=None) -> Event:
+        def run():
+            buf.data = np.array(host, dtype=buf.dtype, copy=True)
+        return self._enqueue("write", run, wait_for)
+
+    def enqueue_read_buffer(self, buf: Buffer, out: np.ndarray,
+                            wait_for=None) -> Event:
+        def run():
+            out[...] = buf.data
+        return self._enqueue("read", run, wait_for)
+
+    def enqueue_ndrange_kernel(self, kernel: CompiledKernel,
+                               global_size: Sequence[int],
+                               buffers: Dict[str, Buffer],
+                               scalars: Optional[Dict[str, object]] = None,
+                               wait_for=None) -> Event:
+        def run():
+            arrs = {k: b.data for k, b in buffers.items()}
+            out = kernel(arrs, global_size, scalars)
+            for k, b in buffers.items():
+                b.data = out[k]
+        return self._enqueue(f"ndrange:{kernel.name}", run, wait_for)
+
+    def enqueue_barrier(self) -> Event:
+        """Queue barrier: waits for everything enqueued so far."""
+        with self._lock:
+            deps = [c.event for c in self._pending]
+            if self._last_event is not None:
+                deps.append(self._last_event)
+        return self._enqueue("queue-barrier", lambda: None, deps)
+
+    # -- execution -----------------------------------------------------------------
+    def flush(self) -> None:
+        """Submit every command whose dependencies are resolved; loop until
+        the queue drains (dependencies between pending commands resolve as
+        their predecessors complete)."""
+        while True:
+            with self._lock:
+                if not self._pending:
+                    return
+                ready = [c for c in self._pending
+                         if all(d.done for d in c.deps)]
+                for c in ready:
+                    self._pending.remove(c)
+            if not ready:
+                # wait for any in-flight command, then retry
+                with self._lock:
+                    blockers = [d for c in self._pending for d in c.deps]
+                for d in blockers:
+                    if d.future is not None:
+                        d.wait()
+                        break
+                else:
+                    raise RuntimeError("command queue deadlock")
+                continue
+            for c in ready:
+                def run(c=c):
+                    try:
+                        c.fn()
+                    finally:
+                        c.event.complete()
+                c.event.future = self._pool.submit(run)
+            for c in ready:
+                if not self.out_of_order:
+                    c.event.wait()
+        # unreachable
+
+    def finish(self) -> None:
+        """clFinish: flush and wait for completion of everything."""
+        self.flush()
+        with self._lock:
+            last = self._last_event
+        if last is not None:
+            last.wait()

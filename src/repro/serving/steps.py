@@ -1,0 +1,35 @@
+"""Jit-able prefill / decode step functions (shared by the serving engine
+and the multi-pod dry-run)."""
+
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import ShardingRules
+from repro.models import ModelConfig, forward
+
+
+def _aux(batch: Dict[str, Any]):
+    return {k: v for k, v in batch.items() if k != "tokens"}
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules):
+    def prefill_step(params, batch, caches):
+        logits, _, caches = forward(params, batch["tokens"], cfg, rules,
+                                    aux_inputs=_aux(batch), caches=caches,
+                                    mode="prefill")
+        return logits[:, -1], caches
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig, rules: ShardingRules):
+    def decode_step(params, batch, caches):
+        logits, _, caches = forward(params, batch["tokens"], cfg, rules,
+                                    aux_inputs=_aux(batch), caches=caches,
+                                    mode="decode")
+        tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return tok, caches
+    return decode_step

@@ -1,0 +1,5 @@
+from .optimizer import OptimizerConfig, adamw_update, init_opt_state, \
+    lr_schedule, global_norm
+from .trainer import (TrainConfig, Trainer, make_train_step, init_state,
+                      abstract_state, state_shardings, batch_pspec)
+from . import checkpoint

@@ -1,0 +1,179 @@
+"""Distributed train step + training loop with fault tolerance.
+
+The step is a single pjit'd function: microbatched grad accumulation
+(``lax.scan`` over microbatches, optionally accumulating in bf16 — the
+gradient-compression trick), AdamW, and metric reduction.  Sharding comes
+exclusively from the logical-rule table; the same step function lowers for
+1 CPU device or the 512-chip production mesh.
+
+Fault tolerance: the loop checkpoints every N steps (atomic rename),
+restores on restart (elastic: checkpoints are mesh-independent), and an
+injectable failure hook in the loop exercises the restart path in tests.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import (ShardingRules, adapt_rules_for,
+                                        logical_to_sharding)
+from repro.models import (ModelConfig, init_params, abstract_params,
+                          loss_fn, model_defs)
+from repro.models import params as PP
+from .optimizer import (OptimizerConfig, adamw_update, init_opt_state)
+from . import checkpoint as ckpt
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    num_microbatches: int = 1
+    ckpt_every: int = 50
+    ckpt_dir: Optional[str] = None
+    keep_ckpts: int = 3
+    log_every: int = 10
+    opt: OptimizerConfig = OptimizerConfig()
+
+
+def batch_pspec(cfg: ModelConfig, rules: ShardingRules) -> Dict[str, P]:
+    out = {"tokens": rules.spec("batch", None),
+           "targets": rules.spec("batch", None)}
+    if cfg.family == "vlm":
+        out["img_embeds"] = rules.spec("batch", None, None)
+    if cfg.family == "encdec":
+        out["frames"] = rules.spec("batch", None, None)
+    return out
+
+
+def make_train_step(cfg: ModelConfig, rules: ShardingRules,
+                    tcfg: TrainConfig):
+    """Returns step(state, batch) -> (state, metrics); pure, jit-able."""
+    ocfg = tcfg.opt
+    nmb = tcfg.num_microbatches
+
+    def grads_of(params, batch):
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: loss_fn(p, batch, cfg, rules), has_aux=True)(params)
+        return loss, metrics, grads
+
+    def step(state, batch):
+        params = state["params"]
+        if nmb == 1:
+            loss, metrics, grads = grads_of(params, batch)
+        else:
+            # microbatch accumulation: reshape leading batch dim to
+            # (nmb, B/nmb, ...) and scan, accumulating in grad_dtype
+            # (bf16 accumulation halves the grad-buffer memory + any
+            # cross-slice reduce traffic = gradient compression).
+            gdt = jnp.dtype(ocfg.grad_dtype)
+            mb = jax.tree.map(
+                lambda x: x.reshape((nmb, x.shape[0] // nmb) + x.shape[1:]),
+                batch)
+            acc0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, gdt), params)
+
+            def mb_step(carry, mbatch):
+                acc, loss_sum, aux_sum = carry
+                loss, metrics, grads = grads_of(params, mbatch)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(gdt), acc, grads)
+                return (acc, loss_sum + loss, aux_sum + metrics["aux"]), None
+
+            (grads, loss, aux), _ = jax.lax.scan(
+                mb_step, (acc0, 0.0, 0.0), mb)
+            grads = jax.tree.map(lambda g: (g / nmb).astype(jnp.float32),
+                                 grads)
+            loss = loss / nmb
+            metrics = {"ce": loss, "aux": aux / nmb,
+                       "ppl": jnp.exp(jnp.clip(loss, a_max=20.0))}
+
+        new_params, new_opt, opt_metrics = adamw_update(
+            ocfg, params, grads, state["opt"], state["step"])
+        metrics = {**metrics, **opt_metrics, "loss": loss}
+        return {"params": new_params, "opt": new_opt,
+                "step": state["step"] + 1}, metrics
+
+    return step
+
+
+def state_shardings(cfg: ModelConfig, mesh: Mesh, rules: ShardingRules):
+    defs = model_defs(cfg)
+    pshard = PP.param_shardings(defs, mesh, rules)
+    return {"params": pshard,
+            "opt": {"m": pshard, "v": pshard},
+            "step": NamedSharding(mesh, P())}
+
+
+def init_state(cfg: ModelConfig, key):
+    params = init_params(cfg, key)
+    return {"params": params, "opt": init_opt_state(params),
+            "step": jnp.zeros((), jnp.int32)}
+
+
+def abstract_state(cfg: ModelConfig):
+    params = abstract_params(cfg)
+    zeros = lambda tree: jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype), tree)
+    return {"params": params,
+            "opt": {"m": zeros(params), "v": zeros(params)},
+            "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+
+class Trainer:
+    """Orchestrates the jitted step + checkpoint/restore + failure
+    recovery.  On CPU this drives real (small) training; on a cluster the
+    same object drives the production mesh."""
+
+    def __init__(self, cfg: ModelConfig, rules: ShardingRules,
+                 tcfg: TrainConfig, mesh: Optional[Mesh] = None):
+        self.cfg, self.rules, self.tcfg = cfg, rules, tcfg
+        self.mesh = mesh
+        step = make_train_step(cfg, rules, tcfg)
+        if mesh is not None:
+            shardings = state_shardings(cfg, mesh, rules)
+            bspec = batch_pspec(cfg, rules)
+            bshard = {k: NamedSharding(mesh, v) for k, v in bspec.items()}
+            self.step_fn = jax.jit(
+                step, in_shardings=(shardings, bshard),
+                out_shardings=(shardings, None),
+                donate_argnums=(0,))
+        else:
+            self.step_fn = jax.jit(step, donate_argnums=(0,))
+        self.state = None
+
+    def init(self, seed: int = 0):
+        restored = None
+        if self.tcfg.ckpt_dir:
+            restored = ckpt.restore_latest(self.tcfg.ckpt_dir,
+                                           abstract_state(self.cfg))
+        if restored is not None:
+            self.state = restored
+        else:
+            self.state = init_state(self.cfg, jax.random.PRNGKey(seed))
+        return int(self.state["step"])
+
+    def run(self, data_iter, num_steps: int,
+            failure_hook: Optional[Callable[[int], None]] = None):
+        """Train for num_steps batches.  ``failure_hook(step)`` may raise
+        to simulate a node failure; the caller restarts via ``init()``."""
+        assert self.state is not None, "call init() first"
+        history = []
+        for _ in range(num_steps):
+            batch = next(data_iter)
+            step_no = int(self.state["step"])
+            if failure_hook is not None:
+                failure_hook(step_no)
+            self.state, metrics = self.step_fn(self.state, batch)
+            if self.tcfg.ckpt_dir and \
+                    (step_no + 1) % self.tcfg.ckpt_every == 0:
+                ckpt.save(self.tcfg.ckpt_dir, self.state,
+                          keep=self.tcfg.keep_ckpts)
+            if (step_no + 1) % self.tcfg.log_every == 0 or not history:
+                history.append({k: float(v) for k, v in metrics.items()})
+        return history

@@ -1,0 +1,303 @@
+"""Vecmathlib (paper §5): vectorized elemental functions in pure jnp.
+
+Design rules carried over from the paper:
+
+* **Bit manipulation** for the low-level pieces (sign/exponent surgery for
+  ``fabs``/``copysign``/exponent scaling, §5.1 first paragraph), assuming
+  IEEE-754 layout.
+* **Newton's method** for functions with cheap inverses: ``sqrt`` divides the
+  exponent by two via an integer shift for the initial guess, then iterates
+  :math:`r_{n+1} = (r_n + x/r_n)/2`; ``rsqrt`` iterates
+  :math:`y_{n+1} = y_n (1.5 - 0.5 x y_n^2)` (§5.1 second paragraph).
+* **Range reduction + polynomial expansion** for the transcendental
+  functions (§5.1 third paragraph): ``exp`` reduces by powers of two with a
+  Cody–Waite split, ``sin``/``cos`` reduce modulo :math:`\\pi/2` with
+  quadrant selection, ``log`` reduces to the mantissa and uses the atanh
+  series.
+
+Everything is elementwise jnp, so these functions *fuse with surrounding
+code* (the paper's core argument against scalarizing to libm) — inside
+Pallas kernel bodies they lower to straight VPU vector ops.
+
+All routines compute in float32 (upcasting half/bfloat16 inputs) and
+preserve the input dtype on return; float64 inputs are computed in float64
+by falling back to the same algorithms with the f32 coefficient tables —
+accuracy is float32-grade, which is what the OpenCL built-ins profile
+requires.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from . import poly
+from .poly import horner
+
+_F32 = jnp.float32
+_I32 = jnp.int32
+
+
+def _prep(x):
+    x = jnp.asarray(x)
+    orig = x.dtype
+    if x.dtype in (jnp.bfloat16, jnp.float16):
+        x = x.astype(_F32)
+    elif x.dtype not in (jnp.float32, jnp.float64):
+        x = x.astype(_F32)
+    return x, orig
+
+
+def _fin(y, orig):
+    return y.astype(orig) if y.dtype != orig else y
+
+
+# ---------------------------------------------------------------------------
+# bit-manipulation primitives (§5.1)
+# ---------------------------------------------------------------------------
+
+@jax.custom_jvp
+def _fabs_f32(x):
+    bits = x.view(_I32) & np.int32(0x7FFFFFFF)
+    return bits.view(_F32)
+
+
+@_fabs_f32.defjvp
+def _fabs_f32_jvp(primals, tangents):
+    # bitcast int ops have no autodiff rule (silent zero gradient!), so
+    # the bit-manipulation primitives carry explicit JVPs
+    (x,), (dx,) = primals, tangents
+    y = _fabs_f32(x)
+    return y, jnp.where(x < 0, -dx, dx)
+
+
+def fabs(x):
+    """Clear the sign bit."""
+    x, orig = _prep(x)
+    if x.dtype == jnp.float32:
+        return _fin(_fabs_f32(x), orig)
+    return _fin(jnp.abs(x), orig)
+
+
+@jax.custom_jvp
+def _copysign_f32(x, s):
+    m = np.int32(np.uint32(0x80000000).view(np.int32))
+    bits = (x.view(_I32) & np.int32(0x7FFFFFFF)) | (s.view(_I32) & m)
+    return bits.view(_F32)
+
+
+@_copysign_f32.defjvp
+def _copysign_f32_jvp(primals, tangents):
+    (x, s), (dx, _) = primals, tangents
+    y = _copysign_f32(x, s)
+    flip = (x < 0) != (s < 0)
+    return y, jnp.where(flip, -dx, dx)
+
+
+def copysign(x, s):
+    x, orig = _prep(x)
+    s = jnp.asarray(s, x.dtype)
+    if x.dtype == jnp.float32:
+        return _fin(_copysign_f32(x, s), orig)
+    return _fin(jnp.copysign(x, s), orig)
+
+
+def signbit(x):
+    x, _ = _prep(x)
+    if x.dtype == jnp.float32:
+        return (x.view(_I32) >> 31) != 0
+    return jnp.signbit(x)
+
+
+def _ldexp_f32(x, k):
+    """x * 2^k via exponent-field addition (k int32, result float32)."""
+    # split into two steps to stay in the normal range
+    k1 = k // 2
+    k2 = k - k1
+    f1 = ((k1 + 127) << 23).view(_F32)
+    f2 = ((k2 + 127) << 23).view(_F32)
+    return x * f1 * f2
+
+
+def _frexp_f32(x):
+    """Return (mantissa in [sqrt(2)/2, sqrt(2)), exponent) for positive x."""
+    bits = x.view(_I32)
+    e = ((bits >> 23) & 0xFF) - 127
+    m_bits = (bits & np.int32(0x007FFFFF)) | np.int32(0x3F800000)
+    m = m_bits.view(_F32)  # in [1, 2)
+    # shift mantissa to [sqrt(2)/2, sqrt(2)) for symmetric log reduction
+    big = m > 1.4142135623730951
+    m = jnp.where(big, m * 0.5, m)
+    e = e + big.astype(_I32)
+    return m, e
+
+
+# ---------------------------------------------------------------------------
+# Newton-iteration functions (§5.1)
+# ---------------------------------------------------------------------------
+
+def sqrt(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.sqrt(x), orig)
+    # initial guess: halve the exponent with an integer shift
+    bits = x.view(_I32)
+    guess_bits = (bits >> 1) + np.int32(0x1FC00000)
+    r = guess_bits.view(_F32)
+    # Newton: r <- (r + x/r) / 2 ; three iterations double the digits each
+    for _ in range(3):
+        r = 0.5 * (r + x / r)
+    r = jnp.where(x > 0, r, jnp.where(x == 0, 0.0, jnp.nan))
+    r = jnp.where(jnp.isinf(x) & (x > 0), jnp.inf, r)
+    return _fin(r.astype(_F32), orig)
+
+
+def rsqrt(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(1.0 / jnp.sqrt(x), orig)
+    bits = x.view(_I32)
+    y = (np.int32(0x5F3759DF) - (bits >> 1)).view(_F32)  # magic initial guess
+    for _ in range(3):
+        y = y * (1.5 - 0.5 * x * y * y)
+    y = jnp.where(x > 0, y, jnp.where(x == 0, jnp.inf, jnp.nan))
+    y = jnp.where(jnp.isinf(x) & (x > 0), 0.0, y)
+    return _fin(y.astype(_F32), orig)
+
+
+def reciprocal(x):
+    """1/x via Newton on f(y)=1/y - x: y <- y*(2 - x*y)."""
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(1.0 / x, orig)
+    bits = x.view(_I32)
+    y = (np.int32(0x7EF311C3) - bits).view(_F32)
+    for _ in range(3):
+        y = y * (2.0 - x * y)
+    y = jnp.where(x == 0, jnp.inf * jnp.sign(1.0 / jnp.where(x == 0, 1.0, x)),
+                  y)
+    y = jnp.where(jnp.isinf(x), 0.0, y)
+    return _fin(y, orig)
+
+
+# ---------------------------------------------------------------------------
+# range reduction + polynomial (§5.1)
+# ---------------------------------------------------------------------------
+
+def exp(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.exp(x), orig)
+    xc = jnp.clip(x, -87.3, 88.72)
+    k = jnp.round(xc * poly.INV_LN2)
+    ki = k.astype(_I32)
+    # Cody–Waite: r = x - k*ln2 computed in two pieces for accuracy
+    r = xc - k * poly.LN2_HI
+    r = r - k * poly.LN2_LO
+    p = horner(r, poly.EXP_COEFFS)
+    er = 1.0 + r + r * r * p
+    y = _ldexp_f32(er, ki)
+    # saturate outside the clamp range (incl. +/-inf inputs)
+    y = jnp.where(x >= 88.72, jnp.inf, y)
+    y = jnp.where(x <= -87.3, 0.0, y)
+    y = jnp.where(jnp.isnan(x), jnp.nan, y)
+    return _fin(y, orig)
+
+
+def log(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.log(x), orig)
+    m, e = _frexp_f32(jnp.maximum(x, 1e-45))
+    f = m - 1.0
+    s = f / (2.0 + f)
+    z = s * s
+    r = 2.0 * s * horner(z, poly.LOG_COEFFS)
+    y = r + e.astype(_F32) * np.float32(poly.LN2)
+    y = jnp.where(x > 0, y, jnp.where(x == 0, -jnp.inf, jnp.nan))
+    y = jnp.where(jnp.isinf(x) & (x > 0), jnp.inf, y)
+    return _fin(y, orig)
+
+
+def _sincos_reduce(x):
+    """Reduce to r in [-pi/4, pi/4] and quadrant q (mod 4)."""
+    q = jnp.round(x * poly.INV_PI_2)
+    qi = q.astype(_I32)
+    r = x - q * poly.PIO2_HI
+    r = r - q * poly.PIO2_MID
+    r = r - q * poly.PIO2_LO
+    return r.astype(_F32), qi
+
+
+def _sin_core(r):
+    z = r * r
+    return r + r * z * horner(z, poly.SIN_COEFFS)
+
+
+def _cos_core(r):
+    z = r * r
+    return 1.0 - 0.5 * z + z * z * horner(z, poly.COS_COEFFS)
+
+
+def sin(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.sin(x), orig)
+    r, q = _sincos_reduce(x)
+    sc = jnp.where(q % 2 == 0, _sin_core(r), _cos_core(r))
+    sign = jnp.where((q % 4) >= 2, -1.0, 1.0)
+    return _fin(sign * sc, orig)
+
+
+def cos(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.cos(x), orig)
+    r, q = _sincos_reduce(x)
+    sc = jnp.where(q % 2 == 0, _cos_core(r), _sin_core(r))
+    sign = jnp.where(((q + 1) % 4) >= 2, -1.0, 1.0)
+    return _fin(sign * sc, orig)
+
+
+def tanh(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        return _fin(jnp.tanh(x), orig)
+    # tanh(x) = 1 - 2/(e^{2x}+1), clamped: |x|>9 saturates in f32
+    xa = jnp.clip(x, -9.0, 9.0)
+    e2 = exp(2.0 * xa)
+    y = (e2 - 1.0) / (e2 + 1.0)
+    return _fin(y, orig)
+
+
+def erf(x):
+    x, orig = _prep(x)
+    if x.dtype != jnp.float32:
+        import jax.scipy.special as jsp
+        return _fin(jsp.erf(x), orig)
+    a = fabs(x)
+    t = 1.0 / (1.0 + poly.ERF_P * a)
+    y = 1.0 - horner(t, poly.ERF_A) * t * exp(-a * a)
+    return _fin(copysign(y, x), orig)
+
+
+def sigmoid(x):
+    x, orig = _prep(x)
+    e = exp(-fabs(x).astype(x.dtype))
+    pos = 1.0 / (1.0 + e)
+    y = jnp.where(x >= 0, pos, 1.0 - pos)
+    return _fin(y, orig)
+
+
+def gelu_tanh(x):
+    """GELU with the tanh approximation — the LM-stack consumer of vml."""
+    x, orig = _prep(x)
+    c = np.float32(0.7978845608028654)  # sqrt(2/pi)
+    y = 0.5 * x * (1.0 + tanh(c * (x + 0.044715 * x * x * x)))
+    return _fin(y, orig)
+
+
+def silu(x):
+    x, orig = _prep(x)
+    return _fin(x * sigmoid(x), orig)

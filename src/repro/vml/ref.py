@@ -1,0 +1,31 @@
+"""Oracles for Vecmathlib: the jnp/XLA "libm" the paper compares against."""
+
+import jax.numpy as jnp
+import jax.scipy.special as jsp
+from jax import lax
+
+exp = jnp.exp
+log = jnp.log
+sin = jnp.sin
+cos = jnp.cos
+tanh = jnp.tanh
+erf = jsp.erf
+sqrt = jnp.sqrt
+rsqrt = lax.rsqrt
+fabs = jnp.abs
+sigmoid = lambda x: jnp.where(x >= 0, 1 / (1 + jnp.exp(-jnp.abs(x))),
+                              1 - 1 / (1 + jnp.exp(-jnp.abs(x))))
+
+
+def reciprocal(x):
+    return 1.0 / x
+
+
+def gelu_tanh(x):
+    import numpy as np
+    c = np.float32(0.7978845608028654)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x * x * x)))
+
+
+def silu(x):
+    return x * sigmoid(x)

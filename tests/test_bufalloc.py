@@ -1,0 +1,92 @@
+"""Bufalloc property tests (paper §3): chunked first-fit allocator with
+greedy mode — invariants under random alloc/free interleavings."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.runtime.bufalloc import Bufalloc, OutOfMemory
+
+
+def test_basic_alloc_free():
+    a = Bufalloc(1024, alignment=64)
+    c1 = a.alloc(100)
+    c2 = a.alloc(200)
+    assert c1.start % 64 == 0 and c2.start % 64 == 0
+    assert c2.start >= c1.start + 100
+    a.free(c1)
+    a.free(c2)
+    assert a.allocated_bytes() == 0
+    assert a.largest_free() == 1024
+
+
+def test_first_fit_reuses_freed_hole():
+    a = Bufalloc(1024, alignment=1)
+    c1 = a.alloc(128)
+    c2 = a.alloc(128)
+    a.free(c1)
+    c3 = a.alloc(64)            # first fit -> the hole at offset 0
+    assert c3.start == 0
+    a.free(c2)
+    a.free(c3)
+
+
+def test_out_of_memory():
+    a = Bufalloc(256, alignment=1)
+    a.alloc(200)
+    with pytest.raises(OutOfMemory):
+        a.alloc(100)
+
+
+def test_group_alloc_contiguous_in_greedy_mode():
+    """Paper: greedy mode serves successive kernel-argument allocations
+    from the region tail so buffer groups land contiguously."""
+    a = Bufalloc(4096, alignment=1, greedy=True)
+    hole_maker = a.alloc(64)
+    filler = a.alloc(64)
+    a.free(hole_maker)          # leave a hole at the front
+    group = a.alloc_group([128, 128, 128])
+    starts = sorted(c.start for c in group)
+    assert starts[1] == starts[0] + 128 and starts[2] == starts[1] + 128
+    a.free_group(group)
+    a.free(filler)
+
+
+def test_coalescing():
+    a = Bufalloc(1024, alignment=1)
+    cs = [a.alloc(100) for _ in range(5)]
+    for c in cs:
+        a.free(c)
+    assert a.largest_free() == 1024      # all holes merged
+    assert a.fragmentation() == 0.0
+
+
+@settings(max_examples=60, deadline=None)
+@given(st.lists(st.tuples(st.booleans(), st.integers(1, 300)),
+                min_size=1, max_size=60),
+       st.booleans())
+def test_allocator_invariants(ops, greedy):
+    """Random alloc/free sequences: chunks never overlap, stay in-region,
+    accounting adds up, and the internal chunk list stays consistent."""
+    a = Bufalloc(8192, alignment=16, greedy=greedy)
+    live = []
+    for do_alloc, size in ops:
+        if do_alloc or not live:
+            try:
+                c = a.alloc(size)
+            except OutOfMemory:
+                continue
+            assert c.start % 16 == 0
+            assert c.start + size <= 8192
+            live.append((c, size))
+        else:
+            c, _ = live.pop(np.random.default_rng(size).integers(len(live)))
+            a.free(c)
+        # no two live chunks overlap
+        spans = sorted((c.start, c.start + s) for c, s in live)
+        for (s1, e1), (s2, e2) in zip(spans, spans[1:]):
+            assert e1 <= s2, "overlapping chunks"
+        a.check_invariants()
+    for c, _ in live:
+        a.free(c)
+    assert a.allocated_bytes() == 0

@@ -1,0 +1,96 @@
+"""Roofline extraction: HLO collective/convert parsers, flop models,
+ideal-byte accounting, and the rederive path."""
+
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.launch import roofline as RL
+from repro.launch.mesh import HW
+from repro.models.config import TRAIN_4K, PREFILL_32K, DECODE_32K
+
+
+HLO = """
+HloModule test
+%fused (p: bf16[8,128]) -> f32[8,128] {
+  %p = bf16[8,128]{1,0} parameter(0)
+  %convert.1 = f32[8,128]{1,0} convert(%p)
+}
+ENTRY %main {
+  %x = f32[1024]{0} parameter(0)
+  %ar = f32[1024]{0} all-reduce(%x), replica_groups={}
+  %ag = bf16[16,512]{1,0} all-gather(%y), dimensions={0}
+  %aa = f32[64,32]{1,0} all-to-all(%z)
+  %cp = f32[128]{0} collective-permute(%w)
+  %rs = f32[256]{0} reduce-scatter(%v)
+  %notacoll = f32[999]{0} add(%x, %x)
+}
+"""
+
+
+def test_collective_bytes_parser():
+    out = RL.collective_bytes(HLO)
+    assert out["bytes"]["all-reduce"] == 1024 * 4
+    assert out["bytes"]["all-gather"] == 16 * 512 * 2
+    assert out["bytes"]["all-to-all"] == 64 * 32 * 4
+    assert out["bytes"]["collective-permute"] == 128 * 4
+    assert out["bytes"]["reduce-scatter"] == 256 * 4
+    assert out["count"]["all-reduce"] == 1
+    assert out["total_bytes"] == sum(out["bytes"].values())
+
+
+def test_cpu_upconvert_parser():
+    n = RL.cpu_upconvert_bytes(HLO)
+    # one bf16->f32 convert of 8*128 elems, x4 bytes, x2 (write+read)
+    assert n == 8 * 128 * 4 * 2
+
+
+def test_model_flops_scaling():
+    cfg = configs.get_config("internlm2-20b")
+    na = RL.active_params(cfg)
+    assert na > 19e9
+    train = RL.model_flops(cfg, TRAIN_4K, na, "train")
+    prefill = RL.model_flops(cfg, PREFILL_32K, na, "prefill")
+    decode = RL.model_flops(cfg, DECODE_32K, na, "decode")
+    # train is 3x the fwd flops of the same token count + attention terms
+    assert train > 3 * 6.0 * na * 1e5
+    assert decode < prefill < train * 10
+    # remat adds about a third for block-remat configs
+    ex = RL.executed_flops(cfg, TRAIN_4K, na)
+    assert 1.25 < ex / train < 1.45
+
+
+def test_moe_active_params_smaller_than_total():
+    cfg = configs.get_config("phi3.5-moe-42b-a6.6b")
+    from repro.models import model_defs
+    from repro.models.params import count_params
+    total = count_params(model_defs(cfg))
+    active = RL.active_params(cfg)
+    assert active < 0.3 * total          # 2 of 16 experts active
+    assert total > 40e9 and active < 8e9
+
+
+def test_ideal_bytes_decode_includes_cache():
+    cfg = configs.get_config("granite-34b")
+    dec = RL.ideal_bytes(cfg, DECODE_32K, 256)
+    pre = RL.ideal_bytes(cfg, PREFILL_32K, 256)
+    assert dec > cfg.n_layers * 2 * DECODE_32K.seq_len \
+        * cfg.n_kv * cfg.hd * 2 * DECODE_32K.global_batch / 256
+
+
+def test_report_roundtrip_and_dominance():
+    cfg = configs.get_config("smollm-135m")
+    rep = RL.build_report(arch="smollm-135m", shape=TRAIN_4K,
+                          mesh_name="t", chips=256,
+                          cost={"flops": 1e12, "bytes accessed": 1e9},
+                          mem_bytes=1e9, hlo_text=HLO, cfg=cfg)
+    d = rep.to_dict()
+    assert d["dominant"] in ("compute", "memory", "collective")
+    assert 0 <= d["roofline_fraction"] <= 1.5
+    assert d["hlo_gbytes_adj"] <= d["hlo_gbytes"] + 1e-9
+
+    from repro.launch.rederive import rederive
+    d2 = rederive(dict(d))
+    assert d2["dominant"] == d["dominant"]
+    assert d2["roofline_fraction"] == pytest.approx(
+        d["roofline_fraction"], rel=1e-6)

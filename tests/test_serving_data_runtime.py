@@ -1,0 +1,162 @@
+"""Serving engine, data pipeline, and the pocl-style runtime layer."""
+
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.data import synth_batch, data_iterator
+from repro.distributed.sharding import BASELINE_RULES
+from repro.models import init_params, forward
+from repro.serving import ServingEngine, Request
+
+
+# --------------------------------------------------------------------------
+# serving
+# --------------------------------------------------------------------------
+
+def test_engine_greedy_matches_teacher_forced():
+    cfg = configs.get_smoke("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, BASELINE_RULES, batch_slots=2,
+                        max_seq=64)
+    prompt = np.arange(6, dtype=np.int32) + 3
+    reqs = [Request(prompt=prompt, max_new_tokens=5)]
+    done = eng.generate(reqs)
+    assert len(done) == 1 and len(done[0].out_tokens) == 5
+
+    # teacher-forced greedy reference
+    toks = list(prompt)
+    for _ in range(5):
+        logits, _, _ = forward(params,
+                               jnp.asarray([toks], jnp.int32), cfg,
+                               BASELINE_RULES, mode="train")
+        toks.append(int(jnp.argmax(logits[0, -1])))
+    assert done[0].out_tokens == toks[len(prompt):]
+
+
+def test_engine_batches_multiple_groups():
+    cfg = configs.get_smoke("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(1))
+    eng = ServingEngine(cfg, params, BASELINE_RULES, batch_slots=2,
+                        max_seq=32)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, cfg.vocab, 4).astype(np.int32),
+                    max_new_tokens=3) for _ in range(5)]
+    done = eng.generate(reqs)
+    assert len(done) == 5
+    assert all(len(r.out_tokens) == 3 for r in done)
+
+
+# --------------------------------------------------------------------------
+# data pipeline
+# --------------------------------------------------------------------------
+
+def test_synth_batch_deterministic():
+    cfg = configs.get_smoke("smollm-135m")
+    a = synth_batch(cfg, 4, 16, step=7, seed=1)
+    b = synth_batch(cfg, 4, 16, step=7, seed=1)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    c = synth_batch(cfg, 4, 16, step=8, seed=1)
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_synth_batch_targets_shifted():
+    cfg = configs.get_smoke("smollm-135m")
+    b = synth_batch(cfg, 2, 16, step=0)
+    assert b["tokens"].shape == (2, 16)
+    assert b["targets"].shape == (2, 16)
+    # copy structure: second half repeats the first half
+    half = 17 // 2
+    np.testing.assert_array_equal(
+        b["tokens"][:, half:half * 2 - 1], b["tokens"][:, :half - 1])
+
+
+def test_iterator_resume_regenerates_stream():
+    cfg = configs.get_smoke("smollm-135m")
+    it = data_iterator(cfg, 2, 8, start_step=0)
+    first = [next(it) for _ in range(3)]
+    it2 = data_iterator(cfg, 2, 8, start_step=2)
+    resumed = next(it2)
+    np.testing.assert_array_equal(first[2]["tokens"], resumed["tokens"])
+
+
+def test_modality_stubs_present():
+    vlm = configs.get_smoke("llama-3.2-vision-11b")
+    b = synth_batch(vlm, 2, 8, 0)
+    assert b["img_embeds"].shape == (2, vlm.n_img_tokens, vlm.d_model)
+    whisper = configs.get_smoke("whisper-small")
+    b = synth_batch(whisper, 2, 8, 0)
+    assert b["frames"].shape == (2, whisper.enc_seq, whisper.d_model)
+
+
+# --------------------------------------------------------------------------
+# runtime (pocl host layer)
+# --------------------------------------------------------------------------
+
+def test_platform_devices_and_queue_ordering():
+    from repro.runtime.platform import Platform, create_buffer
+    from repro.runtime.queue import CommandQueue
+
+    plat = Platform()
+    devs = plat.get_devices()
+    assert devs, "platform exposes no devices"
+    dev = devs[0]
+    assert dev.query("max_work_group_size") >= 1
+
+    from repro.core import KernelBuilder
+
+    def build():
+        b = KernelBuilder("scale")
+        x = b.arg_buffer("x", "float32")
+        gid = b.global_id(0)
+        x[gid] = x[gid] * 2.0
+        return b.finish()
+
+    kern = dev.build_kernel(build, (8,))
+    q = CommandQueue(dev)
+    buf = create_buffer(dev, 8, "float32")
+    host = np.arange(8, dtype=np.float32)
+    out = np.zeros(8, np.float32)
+    e1 = q.enqueue_write_buffer(buf, host)
+    e2 = q.enqueue_ndrange_kernel(kern, (8,), {"x": buf}, wait_for=[e1])
+    e3 = q.enqueue_read_buffer(buf, out, wait_for=[e2])
+    q.finish()
+    assert e1.done and e2.done and e3.done
+    np.testing.assert_allclose(out, host * 2)
+
+
+def test_out_of_order_queue_respects_deps():
+    from repro.runtime.platform import Platform, create_buffer
+    from repro.runtime.queue import CommandQueue
+
+    plat = Platform()
+    dev = plat.get_devices()[0]
+    q = CommandQueue(dev, out_of_order=True)
+    order = []
+
+    def mk(tag):
+        def fn():
+            time.sleep(0.01)
+            order.append(tag)
+        return fn
+
+    e1 = q._enqueue("a", mk("a"), [])
+    e2 = q._enqueue("b", mk("b"), [e1])
+    e3 = q._enqueue("c", mk("c"), [e2])
+    q.finish()
+    assert order == ["a", "b", "c"]
+
+
+def test_bufalloc_backed_buffers():
+    from repro.runtime.platform import Platform, create_buffer
+    plat = Platform()
+    dev = plat.get_devices()[0]
+    b1 = create_buffer(dev, 128, "float32")
+    b2 = create_buffer(dev, 128, "float32")
+    assert b1.chunk.start != b2.chunk.start
+    b1.release()
+    b2.release()

@@ -1,0 +1,132 @@
+"""Sharding-rule table, adaptation, and dry-run spec plumbing (no 512-dev
+requirement: these run on the single CPU device with tiny meshes)."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro import configs
+from repro.distributed.sharding import (BASELINE_RULES, DECODE_RULES,
+                                        LONG_DECODE_RULES, ShardingRules,
+                                        adapt_rules_for, divisible,
+                                        prune_to_mesh)
+from repro.models import model_defs, cache_logical_axes, init_caches
+from repro.models.params import param_pspecs, ParamDef
+
+
+def tiny_mesh():
+    return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def test_spec_builds():
+    r = BASELINE_RULES
+    assert r.spec("batch", None, "mlp") == P(("pod", "data"), None, "model")
+
+
+def test_prune_drops_missing_axes():
+    mesh = tiny_mesh()      # no "pod"
+    r = prune_to_mesh(BASELINE_RULES, mesh)
+    assert r.batch == ("data",)
+    assert r.heads == "model"
+
+
+def test_adapt_replicates_indivisible_dims():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    # fake a 16-wide model axis via a real mesh is impossible on 1 CPU;
+    # test the logic with the divisibility helper directly
+    assert divisible(32, mesh, "model")
+    r = adapt_rules_for(BASELINE_RULES, mesh, n_kv=3, n_experts=40,
+                        n_heads=9, vocab=49155)
+    # 1-wide axes divide everything -> nothing changes
+    assert r.kv_heads == BASELINE_RULES.kv_heads
+
+
+class FakeMesh:
+    """Mesh stand-in with arbitrary axis sizes for divisibility logic."""
+    def __init__(self, shape):
+        self.shape = shape
+        self.axis_names = tuple(shape)
+
+
+def test_adapt_on_production_shape():
+    mesh = FakeMesh({"data": 16, "model": 16})
+    r = adapt_rules_for(BASELINE_RULES, mesh, n_kv=3, n_experts=40,
+                        n_heads=9, vocab=49155 + 253)
+    assert r.kv_heads is None          # 3 % 16 != 0
+    assert r.heads is None             # 9 % 16
+    assert r.experts is None           # 40 % 16
+    assert r.moe_capacity == "model"   # token-parallel fallback (§Perf H2)
+    r2 = adapt_rules_for(BASELINE_RULES, mesh, n_kv=8, n_experts=16,
+                         n_heads=32, vocab=32256)
+    assert r2.heads == "model" and r2.experts == "model"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_pspecs_no_axis_conflicts(arch):
+    """Every full-config param leaf yields a PartitionSpec with no mesh
+    axis used twice (the error the dry-run would hit at lowering)."""
+    cfg = configs.get_config(arch)
+    mesh = FakeMesh({"data": 16, "model": 16})
+    rules = adapt_rules_for(BASELINE_RULES, mesh, n_kv=cfg.n_kv,
+                            n_experts=cfg.n_experts, n_heads=cfg.n_heads,
+                            vocab=cfg.padded_vocab)
+    specs = param_pspecs(model_defs(cfg), rules)
+    for spec in jax.tree.leaves(specs, is_leaf=lambda s: isinstance(s, P)):
+        used = []
+        for entry in spec:
+            if entry is None:
+                continue
+            axes = (entry,) if isinstance(entry, str) else entry
+            used.extend(axes)
+        assert len(used) == len(set(used)), f"{arch}: duplicate axis {spec}"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_param_dims_divide_production_axes(arch):
+    """Every sharded param dim divides the 16-wide production axes after
+    rule adaptation — the invariant that makes lowering succeed."""
+    cfg = configs.get_config(arch)
+    mesh = FakeMesh({"data": 16, "model": 16, "pod": 2})
+    rules = adapt_rules_for(BASELINE_RULES, mesh, n_kv=cfg.n_kv,
+                            n_experts=cfg.n_experts, n_heads=cfg.n_heads,
+                            vocab=cfg.padded_vocab)
+    defs = model_defs(cfg)
+    leaves = jax.tree.leaves(defs, is_leaf=lambda x: isinstance(x, ParamDef))
+    for d in leaves:
+        for size, logical in zip(d.shape, d.logical):
+            if logical is None:
+                continue
+            axis = getattr(rules, logical)
+            if axis is None:
+                continue
+            axes = (axis,) if isinstance(axis, str) else axis
+            total = int(np.prod([mesh.shape[a] for a in axes
+                                 if a in mesh.shape]))
+            assert size % total == 0, \
+                f"{arch}: dim {logical}={size} not divisible by {total}"
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_cache_axes_cover_cache_tree(arch):
+    cfg = configs.get_config(arch)
+    caches = init_caches(cfg, 4, 64, abstract=True)
+    ax = cache_logical_axes(cfg)
+    assert set(ax) == set(caches)
+    for k, v in caches.items():
+        assert len(ax[k]) == len(v.shape), k
+
+
+def test_decode_rules_shard_cache_seq():
+    assert DECODE_RULES.cache_seq == "model"
+    assert DECODE_RULES.act_seq is None
+    assert LONG_DECODE_RULES.batch is None
+    assert LONG_DECODE_RULES.cache_seq == ("data", "model")
+
+
+def test_constrain_is_noop_outside_mesh():
+    from repro.distributed.sharding import constrain
+    x = jnp.ones((4, 4))
+    y = constrain(x, BASELINE_RULES, "batch", None)
+    np.testing.assert_array_equal(np.asarray(x), np.asarray(y))

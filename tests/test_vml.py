@@ -1,0 +1,112 @@
+"""Vecmathlib (paper §5) accuracy tests: polynomial/bit-twiddling
+implementations vs the libm-quality jnp references, over wide ranges and
+both float dtypes, plus hypothesis sweeps."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro import vml
+
+
+# (lo, hi, reference, rtol, atol) — atol covers zero crossings / underflow
+# where relative error is meaningless (e.g. sin near k*pi)
+RANGES = {
+    "exp": (-80.0, 80.0, jnp.exp, 4e-6, 0.0),
+    "log": (1e-30, 1e30, jnp.log, 4e-6, 1e-6),
+    "sin": (-50.0, 50.0, jnp.sin, 2e-5, 2e-7),
+    "cos": (-50.0, 50.0, jnp.cos, 2e-5, 2e-7),
+    "sqrt": (0.0, 1e30, jnp.sqrt, 2e-6, 0.0),
+    "rsqrt": (1e-30, 1e30, jax.lax.rsqrt, 4e-6, 0.0),
+    "reciprocal": (1e-30, 1e30, lambda x: 1.0 / x, 4e-6, 0.0),
+    "tanh": (-20.0, 20.0, jnp.tanh, 4e-5, 2e-7),
+    "sigmoid": (-30.0, 30.0, jax.nn.sigmoid, 4e-5, 2e-7),
+    "erf": (-5.0, 5.0, jax.scipy.special.erf, 1e-3, 1e-6),
+}
+
+
+@pytest.mark.parametrize("name", sorted(RANGES))
+def test_vml_accuracy_f32(name):
+    lo, hi, ref_fn, rtol, atol = RANGES[name]
+    rng = np.random.default_rng(42)
+    if lo >= 0:   # log-uniform for positive-domain functions
+        x = np.exp(rng.uniform(np.log(max(lo, 1e-30)),
+                               np.log(hi), 20_000)).astype(np.float32)
+    else:
+        x = rng.uniform(lo, hi, 20_000).astype(np.float32)
+    got = np.asarray(getattr(vml, name)(jnp.asarray(x)), np.float64)
+    want = np.asarray(ref_fn(jnp.asarray(x)), np.float64)
+    err = np.abs(got - want) - (atol + rtol * np.abs(want))
+    worst = np.nanmax(err)
+    assert worst <= 0, \
+        f"{name}: worst excess err {worst:.2e} at x={x[np.nanargmax(err)]}"
+
+
+def test_vml_special_values():
+    x = jnp.asarray([0.0, -0.0, np.inf, -np.inf, np.nan], jnp.float32)
+    assert np.isnan(float(vml.exp(x)[4]))
+    assert float(vml.exp(x)[2]) == np.inf
+    assert float(vml.exp(x)[3]) == 0.0
+    assert float(vml.sqrt(x)[0]) == 0.0
+    # fabs/signbit/copysign: pure bit manipulation (§5.1)
+    assert float(vml.fabs(jnp.float32(-3.5))) == 3.5
+    assert bool(vml.signbit(jnp.float32(-0.0)))
+    assert not bool(vml.signbit(jnp.float32(0.0)))
+    assert float(vml.copysign(jnp.float32(2.0), jnp.float32(-1.0))) == -2.0
+
+
+def test_vml_bfloat16_roundtrip():
+    """bf16 inputs evaluate in f32 and cast back (the paper's 'evaluate
+    single precision in single precision' point)."""
+    x = jnp.linspace(-4, 4, 256).astype(jnp.bfloat16)
+    for name in ("exp", "sin", "tanh", "silu", "gelu_tanh", "sigmoid"):
+        y = getattr(vml, name)(x)
+        assert y.dtype == jnp.bfloat16, name
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(-80, 80, allow_nan=False, width=32))
+def test_exp_pointwise(x):
+    got = float(vml.exp(jnp.float32(x)))
+    want = float(np.exp(np.float64(x)))
+    assert got == pytest.approx(want, rel=1e-5, abs=1e-38)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.floats(-50, 50, allow_nan=False, width=32))
+def test_sin_pointwise(x):
+    got = float(vml.sin(jnp.float32(x)))
+    want = float(np.sin(np.float64(x)))
+    assert got == pytest.approx(want, rel=1e-4, abs=2e-5)
+
+
+def test_activations_match_jax():
+    x = jnp.linspace(-10, 10, 4096, dtype=jnp.float32)
+    np.testing.assert_allclose(np.asarray(vml.silu(x)),
+                               np.asarray(jax.nn.silu(x)),
+                               atol=2e-5, rtol=2e-5)
+    np.testing.assert_allclose(np.asarray(vml.gelu_tanh(x)),
+                               np.asarray(jax.nn.gelu(x, approximate=True)),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_bit_manipulation_gradients():
+    """Regression: bitcast-based fabs/copysign silently produced ZERO
+    gradients (found via exploding grad norms at 30-layer depth — the
+    silu gate lost its x·sigmoid' term).  The bit-twiddled primitives
+    carry custom JVPs now."""
+    x = jnp.linspace(-4.0, 4.0, 33)
+    for name, ref in (("silu", jax.nn.silu),
+                      ("gelu_tanh",
+                       lambda v: jax.nn.gelu(v, approximate=True)),
+                      ("sigmoid", jax.nn.sigmoid),
+                      ("erf", jax.scipy.special.erf)):
+        g = jax.vmap(jax.grad(getattr(vml, name)))(x)
+        gr = jax.vmap(jax.grad(ref))(x)
+        np.testing.assert_allclose(np.asarray(g), np.asarray(gr),
+                                   atol=2e-5, rtol=1e-4, err_msg=name)
+    gf = jax.vmap(jax.grad(vml.fabs))(x)
+    want = np.where(np.asarray(x) < 0, -1.0, 1.0)   # jax convention at 0
+    np.testing.assert_allclose(np.asarray(gf), want)
