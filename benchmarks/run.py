@@ -7,6 +7,7 @@
   Tables 3/4  -> bench_vml            (vecmathlib vs scalarized libm)
   §3          -> bench_bufalloc       (buffer allocator)
   §Roofline   -> roofline_report      (dry-run derived, if results exist)
+  §4.1        -> bench_cache          (compile cache: cold vs hit dispatch)
 """
 
 from __future__ import annotations
@@ -28,7 +29,7 @@ def main(argv=None):
 
     t0 = time.time()
     print("=" * 72)
-    print("[1/6] Kernel suite across execution targets (paper Fig. 12-14)")
+    print("[1/7] Kernel suite across execution targets (paper Fig. 12-14)")
     print("=" * 72)
     from . import bench_kernel_suite
     res = bench_kernel_suite.main()
@@ -36,14 +37,14 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[2/6] DCT horizontal inner-loop parallelization (paper §6.4)")
+    print("[2/7] DCT horizontal inner-loop parallelization (paper §6.4)")
     print("=" * 72)
     from . import bench_horizontal
     summary["horizontal"] = bench_horizontal.main()
 
     print()
     print("=" * 72)
-    print("[3/6] Vecmathlib vs scalarized libm (paper Tables 3/4)")
+    print("[3/7] Vecmathlib vs scalarized libm (paper Tables 3/4)")
     print("=" * 72)
     from . import bench_vml
     res = bench_vml.main()
@@ -51,21 +52,28 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[4/6] Bufalloc (paper §3)")
+    print("[4/7] Bufalloc (paper §3)")
     print("=" * 72)
     from . import bench_bufalloc
     summary["bufalloc"] = bench_bufalloc.main()
 
     print()
     print("=" * 72)
-    print("[5/6] Context-array uniform merging (paper §4.7)")
+    print("[5/7] Context-array uniform merging (paper §4.7)")
     print("=" * 72)
     from . import bench_context
     summary["context"] = bench_context.main()
 
     print()
     print("=" * 72)
-    print("[6/6] Roofline report (dry-run derived)")
+    print("[6/7] Compilation cache: cold vs cache-hit dispatch (§4.1)")
+    print("=" * 72)
+    from . import bench_cache
+    summary["cache"] = bench_cache.main()
+
+    print()
+    print("=" * 72)
+    print("[7/7] Roofline report (dry-run derived)")
     print("=" * 72)
     from . import roofline_report
     roofline_report.main()

@@ -1,13 +1,27 @@
 """repro.core — the pocl kernel compiler, rebuilt for JAX/TPU.
 
 Public API:
-  KernelBuilder  — author SPMD kernels (OpenCL C analogue)
-  compile_kernel — run the pocl pipeline for a local size + target
-  run_ndrange    — fiber-based reference executor (semantics oracle)
+  KernelBuilder    — author SPMD kernels (OpenCL C analogue)
+  compile_kernel   — run the pocl pipeline for a local size + target
+                     (memoized in a content-addressed compilation cache;
+                     target="auto" routes through the autotuner)
+  run_ndrange      — fiber-based reference executor (semantics oracle)
+  CompilationCache — LRU + disk compilation cache (docs/caching.md)
+  TuningTable      — persistent per-kernel-shape target winners
 """
 
 from .dsl import KernelBuilder
-from .api import compile_kernel, CompiledKernel
+from .api import compile_kernel, compile_count, CompiledKernel
+from .cache import (CacheKey, CompilationCache, canonical_ir, default_cache,
+                    ir_hash, reset_default_cache)
+from .autotune import AutotunedKernel, TuningTable, default_table, \
+    set_default_table
 from .interp import run_ndrange
 
-__all__ = ["KernelBuilder", "compile_kernel", "CompiledKernel", "run_ndrange"]
+__all__ = [
+    "KernelBuilder", "compile_kernel", "compile_count", "CompiledKernel",
+    "CacheKey", "CompilationCache", "canonical_ir", "default_cache",
+    "ir_hash", "reset_default_cache",
+    "AutotunedKernel", "TuningTable", "default_table", "set_default_table",
+    "run_ndrange",
+]

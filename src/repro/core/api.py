@@ -9,32 +9,66 @@ Targets:
   ``loop``    — serial work-item loops ('basic' driver analogue)
   ``pallas``  — vector mapping wrapped in a ``pl.pallas_call`` (TPU path,
                 validated with interpret=True on CPU)
+  ``auto``    — target chosen per kernel shape by the autotuner
+                (:mod:`repro.core.autotune`)
 
 ``build`` is a zero-argument function returning a fresh
 :class:`repro.core.ir.Function` (the pipeline mutates the CFG, and one
-work-group function is generated per local size, so the builder is re-run
-per compilation — the analogue of recompiling the kernel per enqueue).
+work-group function is generated per local size).  Compilation is memoized
+in a content-addressed :class:`repro.core.cache.CompilationCache` keyed by
+the canonical IR hash + specialization parameters, so re-enqueueing an
+identical kernel is a hash lookup, not a pipeline re-run (docs/caching.md).
+Pass ``cache=False`` to force a fresh compile, or a ``CompilationCache``
+instance to use a private cache (each runtime ``Device`` owns one).
 """
 
 from __future__ import annotations
 
 import functools
-from typing import Callable, Dict, Optional, Sequence
+import threading
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from .cache import CacheKey, CompilationCache, default_cache
 from .ir import Function
 from .targets.loop import LoopWGProgram
 from .targets.vector import WGProgram
+
+# running count of actual pipeline executions (cache misses); tests and
+# bench_cache use it to prove steady-state launches do zero compile work.
+# Guarded: compiles run concurrently on CommandQueue worker threads.
+_compiles_done = 0
+_compiles_lock = threading.Lock()
+
+
+def compile_count() -> int:
+    with _compiles_lock:
+        return _compiles_done
 
 
 class CompiledKernel:
     def __init__(self, prog: WGProgram, name: str):
         self.prog = prog
         self.name = name
+        # cached kernels are shared across queue worker threads; guard the
+        # per-shape jit cache's check-then-insert
         self._jit_cache: Dict[tuple, Callable] = {}
+        self._jit_lock = threading.Lock()
+
+    # the per-shape jit cache holds live jax callables; drop it (and the
+    # lock) when the compilation cache pickles us to the disk tier
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state["_jit_cache"] = {}
+        state.pop("_jit_lock", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._jit_lock = threading.Lock()
 
     def __call__(self, buffers: Dict[str, np.ndarray],
                  global_size: Sequence[int],
@@ -52,12 +86,13 @@ class CompiledKernel:
             return {k: np.asarray(v) for k, v in out.items()}
         key = (gsz, tuple(sorted((k, v.shape, str(v.dtype))
                                  for k, v in buffers.items())))
-        fn = self._jit_cache.get(key)
-        if fn is None:
-            def launch(bufs, scals):
-                return self.prog.run_ndrange(bufs, scals, gsz)
-            fn = jax.jit(launch)
-            self._jit_cache[key] = fn
+        with self._jit_lock:
+            fn = self._jit_cache.get(key)
+            if fn is None:
+                def launch(bufs, scals):
+                    return self.prog.run_ndrange(bufs, scals, gsz)
+                fn = jax.jit(launch)
+                self._jit_cache[key] = fn
         out = fn(buffers, {k: np.asarray(v) for k, v in scalars.items()})
         return {k: np.asarray(v) for k, v in out.items()}
 
@@ -71,13 +106,13 @@ class CompiledKernel:
         return self.prog.plan.stats(self.prog.L)
 
 
-def compile_kernel(build: Callable[[], Function],
-                   local_size: Sequence[int],
-                   target: str = "vector",
-                   horizontal: bool = True,
-                   merge_uniform: bool = True,
-                   use_vml: bool = False) -> CompiledKernel:
-    fn = build()
+def _run_pipeline(fn: Function, local_size: Sequence[int], target: str,
+                  horizontal: bool, merge_uniform: bool,
+                  use_vml: bool) -> CompiledKernel:
+    """The actual pocl pipeline: region formation + target lowering."""
+    global _compiles_done
+    with _compiles_lock:
+        _compiles_done += 1
     if target == "vector":
         prog = WGProgram(fn, local_size, horizontal=horizontal,
                          merge_uniform=merge_uniform, use_vml=use_vml)
@@ -91,3 +126,41 @@ def compile_kernel(build: Callable[[], Function],
     else:
         raise ValueError(f"unknown target {target!r}")
     return CompiledKernel(prog, fn.name)
+
+
+def compile_kernel(build: Callable[[], Function],
+                   local_size: Sequence[int],
+                   target: str = "vector",
+                   horizontal: bool = True,
+                   merge_uniform: bool = True,
+                   use_vml: bool = False,
+                   cache: Union[bool, CompilationCache, None] = True):
+    """Compile ``build()`` for ``local_size`` on ``target``.
+
+    ``cache=True`` uses the process-default compilation cache; pass a
+    :class:`CompilationCache` for a private one (runtime devices do) or
+    ``False``/``None`` to always recompile.  ``target="auto"`` defers the
+    choice to the autotuner and returns an
+    :class:`repro.core.autotune.AutotunedKernel`.
+    """
+    opts = dict(horizontal=horizontal, merge_uniform=merge_uniform,
+                use_vml=use_vml)
+    cache_obj: Optional[CompilationCache]
+    if cache is True:
+        cache_obj = default_cache()
+    elif isinstance(cache, CompilationCache):
+        cache_obj = cache
+    else:
+        cache_obj = None
+    fn = build()
+    if target == "auto":
+        from .autotune import (AutotunedKernel, DEFAULT_CANDIDATES,
+                               default_table)
+        return AutotunedKernel(fn, build, local_size, opts,
+                               DEFAULT_CANDIDATES, default_table(),
+                               cache_obj, compile_kernel)
+    if cache_obj is None:
+        return _run_pipeline(fn, local_size, target, **opts)
+    key = CacheKey.make(fn, local_size, target, **opts)
+    return cache_obj.get_or_compile(
+        key, lambda: _run_pipeline(fn, local_size, target, **opts))

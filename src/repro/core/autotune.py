@@ -1,0 +1,302 @@
+"""Per-kernel target autotuner (docs/caching.md §Autotuning).
+
+pocl picks the parallel mapping per *device driver*; which mapping wins for
+a given kernel is platform- and kernel-dependent (the central observation of
+Rupp & Weinbub's portability study).  Instead of hard-coding the choice we
+measure it:
+
+* ``compile_kernel(build, lsz, target="auto")`` returns an
+  :class:`AutotunedKernel`.
+* On the **first launch of a (kernel, local size, global size) shape**, the
+  candidate targets (``loop``, ``vector``, and ``pallas`` where it works for
+  the kernel) are compiled through the compilation cache, warmed up, and
+  timed on the real launch buffers.
+* The winner is recorded in a :class:`TuningTable` (JSON on disk when a path
+  is configured, e.g. via ``REPRO_TUNING_TABLE``), so later processes skip
+  the measurement entirely.
+* Every subsequent launch routes straight through the cached winner — a dict
+  lookup, no timing, no recompilation.
+
+A kernel can be **pinned** to a target (``table.pin("mykernel", "vector")``)
+which bypasses measurement for every shape of that kernel.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+import time
+import warnings
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from .cache import CacheKey, CompilationCache, ir_hash
+from .ir import Function
+
+DEFAULT_CANDIDATES: Tuple[str, ...] = ("loop", "vector", "pallas")
+
+
+class TuningTable:
+    """Persistent (kernel shape -> winning target) table.
+
+    Schema (JSON): ``{"winners": {key: {"target", "timings_us",
+    "failed"?}}, "pins": {kernel_name: target}}``.  Keys are
+    ``"<ir-hash>|l=<local>|g=<global>|<options>"`` so a tuning decision is
+    exactly as specific as the compilation it selects.
+    """
+
+    def __init__(self, path: Optional[str] = None):
+        self.path = path
+        self._winners: Dict[str, Dict[str, object]] = {}
+        self._pins: Dict[str, str] = {}
+        self._lock = threading.Lock()
+        # per-key tuning locks: concurrent first launches of the same
+        # shape must not time candidates against each other's noise and
+        # must record exactly one decision; unrelated shapes tune freely
+        self._tune_locks: Dict[str, threading.Lock] = {}
+        if path and os.path.exists(path):
+            self._load()
+
+    def tune_lock(self, key: str) -> threading.Lock:
+        with self._lock:
+            lk = self._tune_locks.get(key)
+            if lk is None:
+                lk = threading.Lock()
+                self._tune_locks[key] = lk
+            return lk
+
+    # -- keying ----------------------------------------------------------------
+    @staticmethod
+    def make_key(ir: str, local_size: Sequence[int],
+                 global_size: Sequence[int],
+                 options: Sequence[Tuple[str, object]]) -> str:
+        l = "x".join(str(int(x)) for x in local_size)
+        g = "x".join(str(int(x)) for x in global_size)
+        o = ",".join(f"{k}={v}" for k, v in options)
+        return f"{ir}|l={l}|g={g}|{o}"
+
+    # -- persistence -----------------------------------------------------------
+    def _load(self) -> None:
+        try:
+            with open(self.path) as f:
+                raw = json.load(f)
+            self._winners = dict(raw.get("winners", {}))
+            self._pins = dict(raw.get("pins", {}))
+        except Exception:
+            self._winners, self._pins = {}, {}
+
+    def _save(self) -> None:
+        if not self.path:
+            return
+        try:
+            tmp = self.path + ".tmp"
+            os.makedirs(os.path.dirname(os.path.abspath(self.path)),
+                        exist_ok=True)
+            with open(tmp, "w") as f:
+                json.dump({"winners": self._winners, "pins": self._pins},
+                          f, indent=1, sort_keys=True)
+            os.replace(tmp, self.path)
+        except Exception as e:
+            # keep tuning decisions usable in-process even when the table
+            # path is unwritable (read-only FS, bad REPRO_TUNING_TABLE);
+            # mirror the disk cache's soft-failure policy but stay audible
+            warnings.warn(f"tuning table not persisted to {self.path!r}: "
+                          f"{type(e).__name__}: {e}", RuntimeWarning)
+
+    # -- API --------------------------------------------------------------------
+    def get(self, key: str) -> Optional[str]:
+        with self._lock:
+            ent = self._winners.get(key)
+            return ent["target"] if ent else None
+
+    def record(self, key: str, target: str, timings_us: Dict[str, float],
+               failures: Optional[Dict[str, str]] = None) -> None:
+        with self._lock:
+            ent = {"target": target, "timings_us": dict(timings_us)}
+            if failures:
+                ent["failed"] = dict(failures)
+            self._winners[key] = ent
+            self._save()
+
+    def pin(self, kernel_name: str, target: str) -> None:
+        with self._lock:
+            self._pins[kernel_name] = target
+            self._save()
+
+    def pinned(self, kernel_name: str) -> Optional[str]:
+        with self._lock:
+            return self._pins.get(kernel_name)
+
+    def clear(self) -> None:
+        with self._lock:
+            self._winners.clear()
+            self._pins.clear()
+            self._save()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._winners)
+
+
+class AutotunedKernel:
+    """A launchable kernel whose target is chosen by measurement.
+
+    Compilation of every candidate goes through the compilation cache, so
+    tuning N candidates costs N cached compiles once; the steady state is a
+    tuning-table lookup plus the winner's cache hit.
+    """
+
+    def __init__(self, fn: Function, build: Callable[[], Function],
+                 local_size: Sequence[int],
+                 options: Dict[str, object],
+                 candidates: Sequence[str],
+                 table: TuningTable,
+                 cache: object,
+                 compile_fn: Callable[..., object],
+                 warmup: int = 1, repeats: int = 3):
+        self.name = fn.name
+        self._ir = ir_hash(fn)
+        self.local_size = tuple(int(x) for x in local_size)
+        self.options = dict(options)
+        self.candidates = tuple(candidates)
+        self.table = table
+        self.cache = cache
+        self._compile = compile_fn        # compile_kernel, injected (no cycle)
+        self._build = build
+        self._kernels: Dict[str, object] = {}
+        self._kernels_lock = threading.Lock()
+        self.warmup, self.repeats = warmup, repeats
+        self.last_winner: Optional[str] = None
+
+    # -- candidate compilation (cached) -----------------------------------------
+    def kernel_for(self, target: str):
+        with self._kernels_lock:
+            return self._kernel_for_locked(target)
+
+    def _kernel_for_locked(self, target: str):
+        k = self._kernels.get(target)
+        if k is None:
+            if self.cache is not None:
+                # reuse the IR hash computed at construction: a cache hit
+                # here costs a key build + dict lookup, not a re-build and
+                # re-canonicalization of the kernel
+                key = CacheKey(self._ir, self.local_size, target,
+                               tuple(sorted(self.options.items())))
+                k = self.cache.get_or_compile(
+                    key, lambda: self._compile(
+                        self._build, self.local_size, target=target,
+                        cache=None, **self.options))
+            else:
+                k = self._compile(self._build, self.local_size,
+                                  target=target, cache=None, **self.options)
+            self._kernels[target] = k
+        return k
+
+    # -- launch ------------------------------------------------------------------
+    def __call__(self, buffers, global_size, scalars=None, jit: bool = True):
+        gsz = tuple(int(x) for x in global_size)
+        pinned = self.table.pinned(self.name)
+        if pinned is not None:
+            self.last_winner = pinned
+            return self.kernel_for(pinned)(buffers, gsz, scalars, jit=jit)
+        key = TuningTable.make_key(self._ir, self.local_size, gsz,
+                                   sorted(self.options.items()))
+        winner = self.table.get(key)
+        if winner is None:
+            # single-flight tuning: concurrent first launches of the same
+            # shape would time candidates against each other's load and
+            # race the recorded decision
+            with self.table.tune_lock(key):
+                winner = self.table.get(key)
+                if winner is None:
+                    winner, out = self._tune(key, buffers, gsz, scalars,
+                                             jit)
+                    self.last_winner = winner
+                    return out
+        self.last_winner = winner
+        return self.kernel_for(winner)(buffers, gsz, scalars, jit=jit)
+
+    def _tune(self, key: str, buffers, gsz, scalars, jit):
+        """Time every candidate on the real launch; returns (winner, output).
+
+        Kernel launches are functional over the buffer dict (inputs are never
+        mutated), so timing candidates back-to-back is safe.
+        """
+        timings: Dict[str, float] = {}
+        outputs: Dict[str, object] = {}
+        failures: Dict[str, str] = {}
+        for target in self.candidates:
+            try:
+                k = self.kernel_for(target)
+                for _ in range(self.warmup):
+                    outputs[target] = k(buffers, gsz, scalars, jit=jit)
+                best = float("inf")
+                for _ in range(self.repeats):
+                    t0 = time.perf_counter()
+                    outputs[target] = k(buffers, gsz, scalars, jit=jit)
+                    best = min(best, time.perf_counter() - t0)
+                timings[target] = best * 1e6
+            except Exception as e:
+                # a candidate failing may be expected (target unsupported
+                # for this kernel) or a real backend bug — keep it visible:
+                # warn now and persist the error next to the timings
+                failures[target] = f"{type(e).__name__}: {e}"
+                warnings.warn(
+                    f"autotuner: candidate {target!r} failed for "
+                    f"{self.name!r}: {failures[target]}", RuntimeWarning)
+        if not timings:
+            raise RuntimeError(
+                f"autotuner: no candidate target compiled {self.name!r} "
+                f"(tried {self.candidates}): {failures}")
+        winner = min(timings, key=timings.get)
+        self.table.record(key, winner, timings, failures)
+        if self.cache is not None:
+            self.cache.note_tune_decision()
+        return winner, outputs[winner]
+
+    # -- introspection (mirror CompiledKernel) ------------------------------------
+    def _delegate(self):
+        """The compiled kernel introspection reads from: the winner or pin
+        when known, else any already-compiled candidate, else (before the
+        first launch) the first candidate — which is then compiled as the
+        reference.  Region/context structure is produced by the
+        target-independent pipeline half, so the numbers agree across
+        candidates."""
+        tgt = self.last_winner or self.table.pinned(self.name)
+        if tgt is None:
+            with self._kernels_lock:
+                if self._kernels:
+                    return next(iter(self._kernels.values()))
+            tgt = self.candidates[0]
+        return self.kernel_for(tgt)
+
+    @property
+    def num_regions(self) -> int:
+        return self._delegate().num_regions
+
+    @property
+    def context_stats(self):
+        return self._delegate().context_stats
+
+
+# ---------------------------------------------------------------------------
+# Process-default tuning table
+# ---------------------------------------------------------------------------
+
+_default_table: Optional[TuningTable] = None
+_table_lock = threading.Lock()
+
+
+def default_table() -> TuningTable:
+    global _default_table
+    with _table_lock:
+        if _default_table is None:
+            _default_table = TuningTable(
+                os.environ.get("REPRO_TUNING_TABLE") or None)
+        return _default_table
+
+
+def set_default_table(table: Optional[TuningTable]) -> None:
+    global _default_table
+    with _table_lock:
+        _default_table = table

@@ -1,0 +1,307 @@
+"""Kernel-compiler compilation cache (docs/caching.md).
+
+pocl compiles one work-group function per (kernel, local size) at enqueue
+time and *reuses* it across enqueues — recompilation only happens when the
+kernel or the specialization parameters change.  Our pipeline (normalize →
+region formation → target lowering) previously re-ran on every
+``compile_kernel`` call.  This module memoizes the whole compilation:
+
+* **Key** — ``CacheKey``: a canonical, content-addressed hash of the kernel
+  IR (stable across DSL re-definition: SSA value ids and block-name counters
+  are renamed away), plus the local size, the target name, and the target
+  option tuple.  Two ``build()`` closures producing structurally identical
+  CFGs map to the same entry.
+* **In-memory tier** — an LRU over compiled :class:`CompiledKernel` objects
+  (``capacity`` entries; least-recently-used eviction).
+* **Disk tier** (optional) — pickled kernels under ``disk_dir`` for
+  cross-process reuse; per-shape jit caches are dropped on pickle and
+  rebuilt lazily after load.  Entries that fail to pickle (e.g. exotic
+  targets) are silently kept memory-only.
+
+Invalidation is purely content-driven: any IR change, local-size change, or
+option change produces a different key.  ``CACHE_SCHEMA_VERSION`` is folded
+into every key so that compiler-pipeline changes invalidate stale disk
+entries wholesale.
+
+Stats (hits / misses / compiles / evictions / disk traffic) are surfaced
+per-device through :meth:`repro.runtime.platform.Device.cache_stats`.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import os
+import pickle
+import threading
+from collections import OrderedDict
+from dataclasses import dataclass, field
+from typing import Callable, Dict, Optional, Sequence, Tuple
+
+from .ir import CondBranch, Function, Jump, Return, Value
+
+# bump when the compiler pipeline changes in ways that invalidate old
+# compiled programs (folded into every cache key, incl. disk entries)
+CACHE_SCHEMA_VERSION = 1
+
+
+# ---------------------------------------------------------------------------
+# Canonical IR text + content hash
+# ---------------------------------------------------------------------------
+
+def canonical_ir(fn: Function) -> str:
+    """Render ``fn`` to a canonical text form.
+
+    Canonicalization renames every basic block to its reverse-post-order
+    index and every SSA value to its first-reference index, so the result is
+    independent of the process-global value counter and the builder's block
+    name counters — re-running the same DSL code yields the same text.
+    """
+    order = fn.rpo()
+    bmap = {n: f"b{i}" for i, n in enumerate(order)}
+    vmap: Dict[int, str] = {}
+
+    def vref(v: object) -> str:
+        if isinstance(v, Value):
+            if v.id not in vmap:
+                vmap[v.id] = f"v{len(vmap)}"
+            return f"{vmap[v.id]}:{v.dtype}"
+        return f"lit({type(v).__name__},{v!r})"
+
+    lines = [f"func {fn.name} ndim={fn.ndim}"]
+    for a in fn.buffer_args:
+        lines.append(f"buf {a.name}:{a.dtype}@{a.space} size={a.size}")
+    for a in fn.scalar_args:
+        # scalar args bind SSA values; fix their canonical names up front
+        lines.append(f"scalar {a.name}:{a.dtype} {vref(fn.arg_values[a.name])}")
+
+    for n in order:
+        blk = fn.blocks[n]
+        lines.append(f"block {bmap[n]}")
+        for phi in blk.phis:
+            incs = sorted((bmap.get(p, p), vref(val))
+                          for p, val in phi.incomings.items())
+            lines.append(f"  {vref(phi.result)} = phi {incs}")
+        for ins in blk.instrs:
+            ops = ",".join(vref(o) for o in ins.operands)
+            attrs = ";".join(f"{k}={v!r}" for k, v in sorted(ins.attrs.items()))
+            res = vref(ins.result) if ins.result is not None else "_"
+            lines.append(f"  {res} = {ins.op}({ops}) [{attrs}]")
+        t = blk.terminator
+        if isinstance(t, CondBranch):
+            lines.append(f"  condbr {vref(t.cond)} "
+                         f"{bmap.get(t.if_true, t.if_true)} "
+                         f"{bmap.get(t.if_false, t.if_false)}")
+        elif isinstance(t, Jump):
+            lines.append(f"  jump {bmap.get(t.target, t.target)}")
+        elif isinstance(t, Return):
+            lines.append("  return")
+        else:
+            lines.append(f"  term {t!r}")
+    return "\n".join(lines)
+
+
+def ir_hash(fn: Function) -> str:
+    """Content hash of the kernel (sha256 of the canonical IR text)."""
+    return hashlib.sha256(canonical_ir(fn).encode()).hexdigest()
+
+
+@dataclass(frozen=True)
+class CacheKey:
+    """(what to compile, how to specialize it) — the full cache identity."""
+
+    ir: str                      # canonical IR hash
+    local_size: Tuple[int, ...]
+    target: str
+    options: Tuple[Tuple[str, object], ...]  # sorted (name, value) pairs
+    schema: int = CACHE_SCHEMA_VERSION
+
+    @classmethod
+    def make(cls, fn: Function, local_size: Sequence[int], target: str,
+             **options) -> "CacheKey":
+        return cls(ir_hash(fn), tuple(int(x) for x in local_size), target,
+                   tuple(sorted(options.items())))
+
+    def digest(self) -> str:
+        """Filesystem-safe digest for the disk tier."""
+        raw = repr((self.ir, self.local_size, self.target, self.options,
+                    self.schema))
+        return hashlib.sha256(raw.encode()).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# The cache
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheStats:
+    hits: int = 0
+    misses: int = 0
+    compiles: int = 0
+    evictions: int = 0
+    disk_hits: int = 0
+    disk_writes: int = 0
+    tune_decisions: int = 0
+
+    def as_dict(self) -> Dict[str, int]:
+        return dict(self.__dict__)
+
+    def reset(self) -> None:
+        for k in list(self.__dict__):
+            setattr(self, k, 0)
+
+
+class CompilationCache:
+    """LRU compilation cache with an optional on-disk pickle tier.
+
+    Thread-safe and single-flight: the command queue compiles from worker
+    threads, and concurrent ``get_or_compile`` calls for the same key run
+    the pipeline exactly once — the winner compiles outside the lock while
+    the others wait on a per-key event and then take the memory hit.
+    """
+
+    def __init__(self, capacity: int = 128,
+                 disk_dir: Optional[str] = None):
+        self.capacity = int(capacity)
+        self.disk_dir = disk_dir
+        self._entries: "OrderedDict[CacheKey, object]" = OrderedDict()
+        self._inflight: Dict[CacheKey, threading.Event] = {}
+        self._lock = threading.Lock()
+        self.stats = CacheStats()
+
+    @classmethod
+    def from_env(cls, capacity: int = 128) -> "CompilationCache":
+        """A cache whose disk tier follows REPRO_KERNEL_CACHE_DIR (the one
+        place this env var is interpreted)."""
+        return cls(capacity=capacity,
+                   disk_dir=os.environ.get("REPRO_KERNEL_CACHE_DIR") or None)
+
+    def note_tune_decision(self) -> None:
+        with self._lock:
+            self.stats.tune_decisions += 1
+
+    # -- lookup ---------------------------------------------------------------
+    def get_or_compile(self, key: CacheKey, compile_fn: Callable[[], object]):
+        while True:
+            with self._lock:
+                ent = self._entries.get(key)
+                if ent is not None:
+                    self._entries.move_to_end(key)
+                    self.stats.hits += 1
+                    return ent
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                # another thread is compiling this key; wait and re-check
+                # (re-loop also handles the owner failing: we take over)
+                ev.wait()
+                continue
+            store_to_disk = False
+            try:
+                ent = self._disk_load(key)
+                if ent is not None:
+                    with self._lock:
+                        self.stats.hits += 1
+                        self.stats.disk_hits += 1
+                    self._insert(key, ent)
+                    return ent
+                with self._lock:
+                    self.stats.misses += 1
+                ent = compile_fn()
+                with self._lock:
+                    self.stats.compiles += 1
+                self._insert(key, ent)
+                store_to_disk = True
+                return ent
+            finally:
+                # release waiters as soon as the memory tier is populated;
+                # the (potentially slow) disk write must not block them
+                with self._lock:
+                    self._inflight.pop(key, None)
+                ev.set()
+                if store_to_disk:
+                    self._disk_store(key, ent)
+
+    # -- mutation --------------------------------------------------------------
+    def _insert(self, key: CacheKey, ent: object) -> None:
+        with self._lock:
+            self._entries[key] = ent
+            self._entries.move_to_end(key)
+            while len(self._entries) > self.capacity:
+                self._entries.popitem(last=False)
+                self.stats.evictions += 1
+
+    def clear(self) -> None:
+        with self._lock:
+            self._entries.clear()
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def __contains__(self, key: CacheKey) -> bool:
+        with self._lock:
+            return key in self._entries
+
+    # -- disk tier --------------------------------------------------------------
+    def _disk_path(self, key: CacheKey) -> Optional[str]:
+        if not self.disk_dir:
+            return None
+        return os.path.join(self.disk_dir, key.digest() + ".pkl")
+
+    def _disk_load(self, key: CacheKey):
+        path = self._disk_path(key)
+        if path is None or not os.path.exists(path):
+            return None
+        try:
+            with open(path, "rb") as f:
+                return pickle.load(f)
+        except Exception:
+            # stale/corrupt entry: content-addressed, so just drop it
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+
+    def _disk_store(self, key: CacheKey, ent: object) -> None:
+        path = self._disk_path(key)
+        if path is None:
+            return
+        try:
+            os.makedirs(self.disk_dir, exist_ok=True)
+            tmp = path + ".tmp"
+            with open(tmp, "wb") as f:
+                pickle.dump(ent, f)
+            os.replace(tmp, path)
+            with self._lock:
+                self.stats.disk_writes += 1
+        except Exception:
+            pass  # memory-only fallback (e.g. unpicklable target state)
+
+
+# ---------------------------------------------------------------------------
+# Process-default cache (used by compile_kernel when cache=True)
+# ---------------------------------------------------------------------------
+
+_default_cache: Optional[CompilationCache] = None
+_default_lock = threading.Lock()
+
+
+def default_cache() -> CompilationCache:
+    global _default_cache
+    with _default_lock:
+        if _default_cache is None:
+            _default_cache = CompilationCache.from_env()
+        return _default_cache
+
+
+def reset_default_cache() -> None:
+    """Testing hook: drop the process-default cache (stats included)."""
+    global _default_cache
+    with _default_lock:
+        _default_cache = None

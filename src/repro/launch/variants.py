@@ -3,9 +3,30 @@
 Each entry maps (base_rules, cfg, shape, mesh) -> ShardingRules.  The
 baseline is paper-faithful 2D DP x TP; variants are the beyond-paper
 optimizations and are recorded separately in EXPERIMENTS.md §Perf.
+
+``KERNEL_VARIANTS`` is the kernel-compiler analogue: named compile policies
+(target pinning + cache policy) used by ``benchmarks/bench_cache.py`` and
+the serving steady-state measurements (docs/caching.md).
 """
 
 VARIANTS = {}
+
+# kernel-compiler execution variants: how compile_kernel is invoked per
+# launch.  "uncached" is the seed behaviour (full pipeline per enqueue);
+# "cached" is the steady-state hash-lookup path; "autotuned" additionally
+# lets the tuning table choose the target per kernel shape.
+KERNEL_VARIANTS = {
+    "uncached": {"target": "vector", "cache": False},
+    "cached": {"target": "vector", "cache": True},
+    "cached_loop": {"target": "loop", "cache": True},
+    "cached_pallas": {"target": "pallas", "cache": True},
+    "autotuned": {"target": "auto", "cache": True},
+}
+
+
+def kernel_variant(name: str) -> dict:
+    """Resolve a named kernel-compile policy to compile_kernel kwargs."""
+    return dict(KERNEL_VARIANTS[name])
 
 
 def variant(name):

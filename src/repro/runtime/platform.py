@@ -9,9 +9,14 @@ driver split:
   ``pallas``  — Pallas grid execution (interpret on CPU, Mosaic on TPU)
   ``mesh``    — work-groups distributed over a jax.Mesh axis (the
                 multi-device analogue of the pthread driver's TLP)
+  ``auto``    — target picked per kernel shape by the autotuner
 
 Device queries (global memory size, max work-group size, …) are delegated to
 the device layer exactly as the paper describes for ``clGetDeviceInfo``.
+Every device owns a :class:`repro.core.cache.CompilationCache`, so repeated
+``build_kernel`` calls for the same kernel/local-size are hash lookups;
+``Device.cache_stats()`` / ``Platform.cache_stats()`` surface hit/miss/tune
+counters (the clGetDeviceInfo-style introspection for the cache subsystem).
 """
 
 from __future__ import annotations
@@ -23,6 +28,7 @@ import jax
 import numpy as np
 
 from ..core.api import CompiledKernel, compile_kernel
+from ..core.cache import CompilationCache
 from ..core.ir import Function
 from .bufalloc import Bufalloc, Chunk
 
@@ -47,12 +53,23 @@ class Device:
         # "host keeps book of all buffer allocations for a known region")
         self.allocator = Bufalloc(info.global_mem_size, greedy=True)
         self._target = {"basic": "loop", "vector": "vector",
-                        "pallas": "pallas", "mesh": "vector"}[info.driver]
+                        "pallas": "pallas", "mesh": "vector",
+                        "auto": "auto"}[info.driver]
+        # per-device compilation cache (pocl: "the kernel compiler caches
+        # the work-group function per kernel + local size"); the disk tier
+        # activates when REPRO_KERNEL_CACHE_DIR is set
+        self.compile_cache = CompilationCache.from_env()
 
     # -- device layer: kernel compilation -------------------------------------
     def build_kernel(self, build: Callable[[], Function],
                      local_size: Sequence[int], **opts) -> CompiledKernel:
+        opts.setdefault("cache", self.compile_cache)
         return compile_kernel(build, local_size, target=self._target, **opts)
+
+    def cache_stats(self) -> Dict[str, int]:
+        """Compilation-cache counters for this device (hits, misses,
+        compiles, evictions, disk traffic, tune decisions)."""
+        return self.compile_cache.stats.as_dict()
 
     def query(self, what: str):
         return getattr(self.info, what)
@@ -96,11 +113,21 @@ class Platform:
             name="repro-pallas", driver="pallas",
             global_mem_size=1 << 30, local_mem_size=1 << 20,
             max_work_group_size=1024, compute_units=1)))
+        # an autotuned device: the target is picked per kernel shape by
+        # measurement (the per-platform mapping choice of Rupp & Weinbub)
+        self.devices.append(Device(DeviceInfo(
+            name="repro-auto", driver="auto",
+            global_mem_size=1 << 30, local_mem_size=1 << 20,
+            max_work_group_size=1024, compute_units=1)))
 
     def get_devices(self, driver: Optional[str] = None) -> List[Device]:
         if driver is None:
             return list(self.devices)
         return [d for d in self.devices if d.info.driver == driver]
+
+    def cache_stats(self) -> Dict[str, Dict[str, int]]:
+        """Per-device compilation-cache counters, keyed by device name."""
+        return {d.info.name: d.cache_stats() for d in self.devices}
 
 
 def create_buffer(device: Device, n_elems: int, dtype: str = "float32"

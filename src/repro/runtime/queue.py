@@ -10,6 +10,12 @@ events".
 Execution is host-driven: ``flush()`` walks the ready set; a background
 thread pool overlaps host-side staging with device execution, which is the
 same role the pthread driver's launcher threads play in pocl.
+
+``enqueue_kernel`` is the pocl-faithful enqueue path: the work-group
+function is specialized at enqueue time (paper §4.1), but through the
+device's compilation cache — so the first enqueue compiles and every later
+enqueue of the same kernel/local-size is a hash lookup.  ``self.stats``
+counts launches and enqueue-time compiles for the dispatch-overhead story.
 """
 
 from __future__ import annotations
@@ -66,6 +72,25 @@ class CommandQueue:
         self._pool = ThreadPoolExecutor(max_workers=workers)
         self._lock = threading.Lock()
         self._last_event: Optional[Event] = None
+        self._issued: List[Event] = []
+        self._launches = 0
+        self._compiles0 = device.compile_cache.stats.compiles
+
+    @property
+    def stats(self) -> Dict[str, int]:
+        """Launch count + pipeline compiles that hit this queue's *device*
+        cache since queue creation.  The compile counter is device-wide:
+        other queues (or direct ``build_kernel`` calls) on the same device
+        contribute, and an autotuned device compiles one candidate per
+        target on first launch.  Compiles are single-flight, so for a
+        single queue on a static-target device the steady state is exactly
+        1 per distinct kernel/local-size."""
+        with self._lock:
+            launches = self._launches
+        return {"launches": launches,
+                "enqueue_compiles":
+                    self.device.compile_cache.stats.compiles
+                    - self._compiles0}
 
     # -- enqueue APIs -------------------------------------------------------------
     def _enqueue(self, name: str, fn: Callable[[], None],
@@ -77,6 +102,7 @@ class CommandQueue:
         with self._lock:
             self._pending.append(_Command(fn, ev, deps))
             self._last_event = ev
+            self._issued.append(ev)
         return ev
 
     def enqueue_write_buffer(self, buf: Buffer, host: np.ndarray,
@@ -97,11 +123,32 @@ class CommandQueue:
                                scalars: Optional[Dict[str, object]] = None,
                                wait_for=None) -> Event:
         def run():
-            arrs = {k: b.data for k, b in buffers.items()}
-            out = kernel(arrs, global_size, scalars)
-            for k, b in buffers.items():
-                b.data = out[k]
+            self._launch(kernel, buffers, global_size, scalars)
         return self._enqueue(f"ndrange:{kernel.name}", run, wait_for)
+
+    def enqueue_kernel(self, build, local_size: Sequence[int],
+                       global_size: Sequence[int],
+                       buffers: Dict[str, Buffer],
+                       scalars: Optional[Dict[str, object]] = None,
+                       wait_for=None, **opts) -> Event:
+        """Enqueue-time specialization (paper §4.1): compile ``build`` for
+        ``local_size`` on this queue's device and launch it.  Compilation
+        goes through the device cache, so a steady-state enqueue does zero
+        region-formation or lowering work."""
+        def run():
+            kernel = self.device.build_kernel(build, local_size, **opts)
+            self._launch(kernel, buffers, global_size, scalars)
+        return self._enqueue("ndrange:<enqueue-compiled>", run, wait_for)
+
+    def _launch(self, kernel, buffers: Dict[str, Buffer], global_size,
+                scalars) -> None:
+        """Run a compiled kernel over device buffers and write back."""
+        with self._lock:
+            self._launches += 1
+        arrs = {k: b.data for k, b in buffers.items()}
+        out = kernel(arrs, global_size, scalars)
+        for k, b in buffers.items():
+            b.data = out[k]
 
     def enqueue_barrier(self) -> Event:
         """Queue barrier: waits for everything enqueued so far."""
@@ -116,6 +163,10 @@ class CommandQueue:
         """Submit every command whose dependencies are resolved; loop until
         the queue drains (dependencies between pending commands resolve as
         their predecessors complete)."""
+        with self._lock:
+            # completed events need no further tracking; pruning here keeps
+            # _issued bounded on long-lived queues driven by flush() alone
+            self._issued = [e for e in self._issued if not e.done]
         while True:
             with self._lock:
                 if not self._pending:
@@ -148,9 +199,12 @@ class CommandQueue:
         # unreachable
 
     def finish(self) -> None:
-        """clFinish: flush and wait for completion of everything."""
+        """clFinish: flush and wait for completion of *every* issued
+        command.  (Waiting only on the last event is wrong for
+        out-of-order queues: the last-enqueued command can finish while
+        earlier independent commands are still executing.)"""
         self.flush()
         with self._lock:
-            last = self._last_event
-        if last is not None:
-            last.wait()
+            issued = list(self._issued)
+        for ev in issued:
+            ev.wait()

@@ -3,6 +3,8 @@ greedy mode — invariants under random alloc/free interleavings."""
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.runtime.bufalloc import Bufalloc, OutOfMemory

@@ -10,6 +10,8 @@ uniform merging, and divergence handling in combination.
 
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (requirements-dev.txt)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import KernelBuilder, compile_kernel, run_ndrange
