@@ -1,0 +1,210 @@
+"""Event-DAG runtime benchmark: overlap + multi-device co-execution.
+
+Three measurements (docs/runtime.md):
+
+* ``overlap``     — K independent write->kernel->read chains on an
+                    in-order queue vs an out-of-order 4-worker queue.
+                    The chains share no events, so the DAG scheduler may
+                    run them concurrently; the in-order queue serializes
+                    them by construction.  ``speedup = t_inorder / t_ooo``
+                    is the acceptance gate (>= 1.1x on any multi-core
+                    host; the theoretical ceiling is min(K, cores)).
+* ``multidevice`` — one NDRange co-executed across 2 devices
+                    (static split and work-stealing) vs the same kernel
+                    on a single device, with a bitwise-identity check.
+* ``profiling``   — per-command dispatch overhead of the event machinery
+                    (enqueue + schedule + status/timestamp bookkeeping),
+                    measured over no-op commands.
+
+  PYTHONPATH=src python -m benchmarks.bench_events
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core import KernelBuilder
+from repro.runtime import CoExecutor, CommandQueue, Platform, create_buffer
+
+N = 8192
+LSZ = 64
+CHAINS = 4
+REPEATS = 3
+
+
+def build_heavy():
+    """Compute-heavy kernel: a 100-iteration accumulation per work-item,
+    so launch time dominates dispatch time and overlap is observable."""
+    b = KernelBuilder("heavy")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    acc = b.var(0.0, name="acc")
+    i = b.var(b.const(0), name="i")
+    with b.while_loop() as loop:
+        loop.cond(i.get() < 100)
+        acc.set(acc.get() + (x[g] + i.get() * 0.5))
+        i.set(i.get() + 1)
+    y[g] = acc.get()
+    return b.finish()
+
+
+def bench_overlap(plat: Platform) -> Dict[str, float]:
+    """Independent chains: in-order (serialized) vs out-of-order (DAG)."""
+    dev = plat.get_devices()[0]
+    k = dev.build_kernel(build_heavy, (LSZ,))
+    host = (np.arange(N, dtype=np.float32) / N)
+    k({"x": host, "y": np.zeros(N, np.float32)}, (N,))   # jit warm-up
+    bufs = [(create_buffer(dev, N, "float32"),
+             create_buffer(dev, N, "float32")) for _ in range(CHAINS)]
+    outs = [np.zeros(N, np.float32) for _ in range(CHAINS)]
+
+    def run(out_of_order: bool) -> float:
+        best = float("inf")
+        for _ in range(REPEATS):
+            q = CommandQueue(dev, out_of_order=out_of_order, workers=4)
+            t0 = time.perf_counter()
+            for (xb, yb), out in zip(bufs, outs):
+                e1 = q.enqueue_write_buffer(xb, host)
+                e2 = q.enqueue_ndrange_kernel(k, (N,), {"x": xb, "y": yb},
+                                              wait_for=[e1])
+                q.enqueue_read_buffer(yb, out, wait_for=[e2])
+            q.finish()
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    t_in = run(False)
+    t_ooo = run(True)
+    expect = host * 100 + np.arange(100, dtype=np.float32).sum() * 0.5
+    for out in outs:
+        np.testing.assert_allclose(out, expect, rtol=1e-5)
+    return {"chains": CHAINS, "inorder_s": t_in, "ooo_s": t_ooo,
+            "overlap_speedup": t_in / t_ooo}
+
+
+def bench_multidevice(plat: Platform) -> Dict[str, object]:
+    """One NDRange split across 2 devices vs a single device."""
+    dev = plat.get_devices("vector")[0]
+    k = dev.build_kernel(build_heavy, (LSZ,))
+    host = (np.arange(N, dtype=np.float32) / N)
+    zeros = np.zeros(N, np.float32)
+    single = k({"x": host, "y": zeros}, (N,))   # warm + reference
+    t0 = time.perf_counter()
+    for _ in range(REPEATS):
+        single = k({"x": host, "y": zeros}, (N,))
+    t_single = (time.perf_counter() - t0) / REPEATS
+
+    co = CoExecutor(plat.co_devices(2), chunks_per_device=3)
+    # warm every (device, chunk-range) pair: work-stealing assigns chunks
+    # dynamically, so any chunk may land on any device; the device cache
+    # returns the same kernel object co-execution uses, so its per-shape
+    # jit cache warms here
+    n_groups = N // LSZ
+    n_chunks = co.chunks_per_device * len(co.devices)
+    chunk = -(-n_groups // n_chunks)
+    for d in co.devices:
+        kd = d.build_kernel(build_heavy, (LSZ,))
+        for lo in range(0, n_groups, chunk):
+            kd({"x": host, "y": zeros}, (N,),
+               group_range=(lo, min(lo + chunk, n_groups)))
+    res: Dict[str, object] = {"single_s": t_single}
+    for mode in ("static", "steal"):
+        co.run(build_heavy, (LSZ,), (N,), {"x": host, "y": zeros},
+               mode=mode)  # warm the static spans too
+        t0 = time.perf_counter()
+        for _ in range(REPEATS):
+            merged = co.run(build_heavy, (LSZ,), (N,),
+                            {"x": host, "y": zeros}, mode=mode)
+        t_co = (time.perf_counter() - t0) / REPEATS
+        identical = merged["y"].tobytes() == \
+            np.asarray(single["y"]).tobytes()
+        res[mode] = {
+            "co_s": t_co,
+            "speedup_vs_single": t_single / t_co,
+            "bitwise_identical": identical,
+            "groups_per_device": co.last_stats.groups_per_device,
+            "migrations": co.last_stats.migrations,
+        }
+    co.finish()
+    return res
+
+
+def bench_profiling(plat: Platform) -> Dict[str, float]:
+    """Dispatch overhead of the event machinery on no-op commands."""
+    dev = plat.get_devices()[0]
+    n_cmds = 200
+    best = float("inf")
+    for _ in range(REPEATS):
+        q = CommandQueue(dev, out_of_order=True, workers=2)
+        t0 = time.perf_counter()
+        ev = None
+        for i in range(n_cmds):
+            ev = q._enqueue(f"nop{i}", lambda: None,
+                            [ev] if ev is not None else [])
+        q.finish()
+        best = min(best, time.perf_counter() - t0)
+    return {"commands": n_cmds,
+            "per_command_us": best / n_cmds * 1e6}
+
+
+def run() -> Dict[str, object]:
+    plat = Platform()
+    return {"overlap": bench_overlap(plat),
+            "multidevice": bench_multidevice(plat),
+            "profiling": bench_profiling(plat)}
+
+
+def main(trajectory: bool = True):
+    res = run()
+    ov = res["overlap"]
+    print(f"overlap     : {ov['chains']} chains  "
+          f"in-order {ov['inorder_s'] * 1e3:7.1f}ms  "
+          f"out-of-order {ov['ooo_s'] * 1e3:7.1f}ms  "
+          f"speedup {ov['overlap_speedup']:.2f}x")
+    md = res["multidevice"]
+    print(f"multidevice : single {md['single_s'] * 1e3:7.1f}ms")
+    for mode in ("static", "steal"):
+        m = md[mode]
+        print(f"  {mode:7s}: {m['co_s'] * 1e3:7.1f}ms  "
+              f"speedup {m['speedup_vs_single']:.2f}x  "
+              f"bitwise_identical={m['bitwise_identical']}  "
+              f"groups={m['groups_per_device']}")
+    pr = res["profiling"]
+    print(f"profiling   : {pr['per_command_us']:.0f}us/command "
+          f"({pr['commands']} chained no-ops)")
+
+    ok = ov["overlap_speedup"] >= 1.1 and \
+        all(md[m]["bitwise_identical"] for m in ("static", "steal"))
+    status = "OK" if ok else "BELOW TARGET"
+    print(f"\nDAG overlap gate (>=1.1x + bitwise-identical split): {status}")
+    if trajectory:
+        _append_trajectory(res)
+    res["_gate_ok"] = ok
+    return res
+
+
+def _append_trajectory(res) -> None:
+    """Append this run to BENCH_EVENTS.json (one record per run, so
+    overlap and co-execution speedups are tracked across PRs)."""
+    path = os.path.join(os.path.dirname(__file__), "BENCH_EVENTS.json")
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = []
+    hist.append({"timestamp": time.time(), "results": res})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
+    print(f"trajectory -> {path} ({len(hist)} runs)")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main().get("_gate_ok") else 1)

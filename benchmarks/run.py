@@ -8,6 +8,7 @@
   §3          -> bench_bufalloc       (buffer allocator)
   §Roofline   -> roofline_report      (dry-run derived, if results exist)
   §4.1        -> bench_cache          (compile cache: cold vs hit dispatch)
+  §3 runtime  -> bench_events         (event DAG overlap + co-execution)
 """
 
 from __future__ import annotations
@@ -29,7 +30,7 @@ def main(argv=None):
 
     t0 = time.time()
     print("=" * 72)
-    print("[1/7] Kernel suite across execution targets (paper Fig. 12-14)")
+    print("[1/8] Kernel suite across execution targets (paper Fig. 12-14)")
     print("=" * 72)
     from . import bench_kernel_suite
     res = bench_kernel_suite.main()
@@ -37,14 +38,14 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[2/7] DCT horizontal inner-loop parallelization (paper §6.4)")
+    print("[2/8] DCT horizontal inner-loop parallelization (paper §6.4)")
     print("=" * 72)
     from . import bench_horizontal
     summary["horizontal"] = bench_horizontal.main()
 
     print()
     print("=" * 72)
-    print("[3/7] Vecmathlib vs scalarized libm (paper Tables 3/4)")
+    print("[3/8] Vecmathlib vs scalarized libm (paper Tables 3/4)")
     print("=" * 72)
     from . import bench_vml
     res = bench_vml.main()
@@ -52,28 +53,35 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[4/7] Bufalloc (paper §3)")
+    print("[4/8] Bufalloc (paper §3)")
     print("=" * 72)
     from . import bench_bufalloc
     summary["bufalloc"] = bench_bufalloc.main()
 
     print()
     print("=" * 72)
-    print("[5/7] Context-array uniform merging (paper §4.7)")
+    print("[5/8] Context-array uniform merging (paper §4.7)")
     print("=" * 72)
     from . import bench_context
     summary["context"] = bench_context.main()
 
     print()
     print("=" * 72)
-    print("[6/7] Compilation cache: cold vs cache-hit dispatch (§4.1)")
+    print("[6/8] Compilation cache: cold vs cache-hit dispatch (§4.1)")
     print("=" * 72)
     from . import bench_cache
     summary["cache"] = bench_cache.main()
 
     print()
     print("=" * 72)
-    print("[7/7] Roofline report (dry-run derived)")
+    print("[7/8] Event-DAG runtime: overlap + multi-device co-execution (§3)")
+    print("=" * 72)
+    from . import bench_events
+    summary["events"] = bench_events.main()
+
+    print()
+    print("=" * 72)
+    print("[8/8] Roofline report (dry-run derived)")
     print("=" * 72)
     from . import roofline_report
     roofline_report.main()

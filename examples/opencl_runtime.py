@@ -1,6 +1,7 @@
 """The pocl host-runtime path (paper §2/§3): platform query, buffer
-allocation through Bufalloc, command queues with event dependencies, and
-an out-of-order queue exploiting command-level parallelism.
+allocation through Bufalloc, command queues with event dependencies, an
+out-of-order queue exploiting command-level parallelism, event profiling,
+and one NDRange co-executed across two devices (docs/runtime.md).
 
   PYTHONPATH=src python examples/opencl_runtime.py
 """
@@ -8,6 +9,7 @@ an out-of-order queue exploiting command-level parallelism.
 import numpy as np
 
 from repro.core import KernelBuilder
+from repro.runtime import CoExecutor
 from repro.runtime.platform import Platform, create_buffer
 from repro.runtime.queue import CommandQueue
 
@@ -55,13 +57,35 @@ def main():
                                    wait_for=[e_w])
     e_o = q.enqueue_ndrange_kernel(offset, (n,), {"x": buf}, {"o": 1.0},
                                    wait_for=[e_s])
-    q.enqueue_read_buffer(buf, out, wait_for=[e_o])
+    e_r = q.enqueue_read_buffer(buf, out, wait_for=[e_o])
     q.finish()
 
     np.testing.assert_allclose(out, host * 2.0 + 1.0)
     print(f"pipeline OK: buffer at chunk offset {buf.chunk.start}, "
           f"result[:4]={out[:4].tolist()}")
+
+    # event profiling: the clGetEventProfilingInfo counters
+    print("event profile (us relative to first enqueue):")
+    t0 = e_w.queued_ns
+    for ev in (e_w, e_s, e_o, e_r):
+        p = ev.profile
+        print(f"  {ev.name:14s} queued={(p['queued_ns'] - t0) / 1e3:8.1f} "
+              f"submit={(p['submit_ns'] - t0) / 1e3:8.1f} "
+              f"start={(p['start_ns'] - t0) / 1e3:8.1f} "
+              f"end={(p['end_ns'] - t0) / 1e3:8.1f}")
     buf.release()
+
+    # multi-device co-execution: one NDRange split across two devices,
+    # bitwise identical to the single-device result
+    single = scale({"x": host.copy()}, (n,), {"s": 2.0})
+    co = CoExecutor(plat.co_devices(2))
+    merged = co.run(build_scale, (64,), (n,), {"x": host.copy()},
+                    {"s": 2.0}, mode="static")
+    assert merged["x"].tobytes() == np.asarray(single["x"]).tobytes()
+    st = co.last_stats
+    print(f"co-execution OK: groups per device {st.groups_per_device}, "
+          f"{st.migrations} buffer migrations")
+    co.finish()
 
 
 if __name__ == "__main__":

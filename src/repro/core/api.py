@@ -73,8 +73,17 @@ class CompiledKernel:
     def __call__(self, buffers: Dict[str, np.ndarray],
                  global_size: Sequence[int],
                  scalars: Optional[Dict[str, object]] = None,
-                 jit: bool = True) -> Dict[str, np.ndarray]:
+                 jit: bool = True,
+                 group_range: Optional[Sequence[int]] = None
+                 ) -> Dict[str, np.ndarray]:
+        """Launch over ``global_size``.  ``group_range=(lo, hi)`` executes
+        only that contiguous range of linearized work-groups of the full
+        NDRange (the multi-device co-execution unit, runtime/scheduler.py);
+        group-id decoding is unchanged, so results over the sub-range are
+        identical to the same groups of a full launch."""
         gsz = tuple(global_size)
+        grange = None if group_range is None \
+            else (int(group_range[0]), int(group_range[1]))
         scalars = scalars or {}
         # the pallas target needs scalar args as jaxpr literals (pallas
         # rejects captured device constants), so launch it un-jitted —
@@ -82,15 +91,17 @@ class CompiledKernel:
         if type(self.prog).__name__ == "PallasWGProgram":
             jit = False
         if not jit:
-            out = self.prog.run_ndrange(buffers, scalars, gsz)
+            out = self.prog.run_ndrange(buffers, scalars, gsz,
+                                        group_range=grange)
             return {k: np.asarray(v) for k, v in out.items()}
-        key = (gsz, tuple(sorted((k, v.shape, str(v.dtype))
-                                 for k, v in buffers.items())))
+        key = (gsz, grange, tuple(sorted((k, v.shape, str(v.dtype))
+                                         for k, v in buffers.items())))
         with self._jit_lock:
             fn = self._jit_cache.get(key)
             if fn is None:
                 def launch(bufs, scals):
-                    return self.prog.run_ndrange(bufs, scals, gsz)
+                    return self.prog.run_ndrange(bufs, scals, gsz,
+                                                 group_range=grange)
                 fn = jax.jit(launch)
                 self._jit_cache[key] = fn
         out = fn(buffers, {k: np.asarray(v) for k, v in scalars.items()})
@@ -134,14 +145,19 @@ def compile_kernel(build: Callable[[], Function],
                    horizontal: bool = True,
                    merge_uniform: bool = True,
                    use_vml: bool = False,
-                   cache: Union[bool, CompilationCache, None] = True):
+                   cache: Union[bool, CompilationCache, None] = True,
+                   device_key: Optional[str] = None):
     """Compile ``build()`` for ``local_size`` on ``target``.
 
     ``cache=True`` uses the process-default compilation cache; pass a
     :class:`CompilationCache` for a private one (runtime devices do) or
     ``False``/``None`` to always recompile.  ``target="auto"`` defers the
     choice to the autotuner and returns an
-    :class:`repro.core.autotune.AutotunedKernel`.
+    :class:`repro.core.autotune.AutotunedKernel`; ``device_key`` names the
+    device the tuning decision belongs to (runtime devices pass their
+    name), so heterogeneous devices tune independently.  Compiled code is
+    device-independent here, so ``device_key`` never enters the
+    compilation-cache key — only the tuning-table key.
     """
     opts = dict(horizontal=horizontal, merge_uniform=merge_uniform,
                 use_vml=use_vml)
@@ -158,7 +174,8 @@ def compile_kernel(build: Callable[[], Function],
                                default_table)
         return AutotunedKernel(fn, build, local_size, opts,
                                DEFAULT_CANDIDATES, default_table(),
-                               cache_obj, compile_kernel)
+                               cache_obj, compile_kernel,
+                               device_key=device_key or "")
     if cache_obj is None:
         return _run_pipeline(fn, local_size, target, **opts)
     key = CacheKey.make(fn, local_size, target, **opts)

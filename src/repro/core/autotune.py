@@ -69,11 +69,18 @@ class TuningTable:
     @staticmethod
     def make_key(ir: str, local_size: Sequence[int],
                  global_size: Sequence[int],
-                 options: Sequence[Tuple[str, object]]) -> str:
+                 options: Sequence[Tuple[str, object]],
+                 device: str = "") -> str:
+        """Tuning key: kernel identity + specialization + (optionally) the
+        device the measurement was taken on.  Runtime devices pass their
+        name (``Device.build_kernel``), so a slow device's winner never
+        leaks onto a fast one; ``device=""`` keeps the device-agnostic key
+        (process-default tuning outside the runtime layer)."""
         l = "x".join(str(int(x)) for x in local_size)
         g = "x".join(str(int(x)) for x in global_size)
         o = ",".join(f"{k}={v}" for k, v in options)
-        return f"{ir}|l={l}|g={g}|{o}"
+        d = f"|dev={device}" if device else ""
+        return f"{ir}{d}|l={l}|g={g}|{o}"
 
     # -- persistence -----------------------------------------------------------
     def _load(self) -> None:
@@ -153,8 +160,10 @@ class AutotunedKernel:
                  table: TuningTable,
                  cache: object,
                  compile_fn: Callable[..., object],
-                 warmup: int = 1, repeats: int = 3):
+                 warmup: int = 1, repeats: int = 3,
+                 device_key: str = ""):
         self.name = fn.name
+        self.device_key = device_key   # tuning decisions are per device
         self._ir = ir_hash(fn)
         self.local_size = tuple(int(x) for x in local_size)
         self.options = dict(options)
@@ -193,14 +202,17 @@ class AutotunedKernel:
         return k
 
     # -- launch ------------------------------------------------------------------
-    def __call__(self, buffers, global_size, scalars=None, jit: bool = True):
+    def __call__(self, buffers, global_size, scalars=None, jit: bool = True,
+                 group_range=None):
         gsz = tuple(int(x) for x in global_size)
         pinned = self.table.pinned(self.name)
         if pinned is not None:
             self.last_winner = pinned
-            return self.kernel_for(pinned)(buffers, gsz, scalars, jit=jit)
+            return self.kernel_for(pinned)(buffers, gsz, scalars, jit=jit,
+                                           group_range=group_range)
         key = TuningTable.make_key(self._ir, self.local_size, gsz,
-                                   sorted(self.options.items()))
+                                   sorted(self.options.items()),
+                                   device=self.device_key)
         winner = self.table.get(key)
         if winner is None:
             # single-flight tuning: concurrent first launches of the same
@@ -210,17 +222,21 @@ class AutotunedKernel:
                 winner = self.table.get(key)
                 if winner is None:
                     winner, out = self._tune(key, buffers, gsz, scalars,
-                                             jit)
+                                             jit, group_range)
                     self.last_winner = winner
                     return out
         self.last_winner = winner
-        return self.kernel_for(winner)(buffers, gsz, scalars, jit=jit)
+        return self.kernel_for(winner)(buffers, gsz, scalars, jit=jit,
+                                       group_range=group_range)
 
-    def _tune(self, key: str, buffers, gsz, scalars, jit):
+    def _tune(self, key: str, buffers, gsz, scalars, jit, group_range=None):
         """Time every candidate on the real launch; returns (winner, output).
 
         Kernel launches are functional over the buffer dict (inputs are never
-        mutated), so timing candidates back-to-back is safe.
+        mutated), so timing candidates back-to-back is safe.  A
+        ``group_range`` sub-launch times only the sub-range (the decision is
+        still keyed on the full shape — co-executed chunks of one NDRange
+        share the winner).
         """
         timings: Dict[str, float] = {}
         outputs: Dict[str, object] = {}
@@ -229,11 +245,13 @@ class AutotunedKernel:
             try:
                 k = self.kernel_for(target)
                 for _ in range(self.warmup):
-                    outputs[target] = k(buffers, gsz, scalars, jit=jit)
+                    outputs[target] = k(buffers, gsz, scalars, jit=jit,
+                                        group_range=group_range)
                 best = float("inf")
                 for _ in range(self.repeats):
                     t0 = time.perf_counter()
-                    outputs[target] = k(buffers, gsz, scalars, jit=jit)
+                    outputs[target] = k(buffers, gsz, scalars, jit=jit,
+                                        group_range=group_range)
                     best = min(best, time.perf_counter() - t0)
                 timings[target] = best * 1e6
             except Exception as e:

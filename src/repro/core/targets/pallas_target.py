@@ -19,7 +19,7 @@ to Mosaic.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from typing import Dict, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,12 +35,23 @@ class PallasWGProgram(WGProgram):
 
     def run_ndrange(self, buffers: Dict[str, np.ndarray],
                     scalars: Optional[Dict[str, object]],
-                    global_size: Sequence[int]):
+                    global_size: Sequence[int],
+                    group_range: Optional[Tuple[int, int]] = None):
+        """Execute the NDRange on the Pallas grid.  ``group_range=(lo,
+        hi)`` shrinks the grid to ``hi - lo`` cells and offsets
+        ``program_id`` by ``lo``, so the sub-range sees its true group ids
+        of the full NDRange (multi-device co-execution unit)."""
         gsz = tuple(global_size) + (1,) * (3 - len(global_size))
         for g, l in zip(gsz, self.lsz):
             assert g % l == 0, "global size must divide local size"
         self.ngrp = tuple(g // l for g, l in zip(gsz, self.lsz))
         n_groups = int(np.prod(self.ngrp))
+        lo, hi = (0, n_groups) if group_range is None \
+            else (int(group_range[0]), int(group_range[1]))
+        assert 0 <= lo <= hi <= n_groups, \
+            f"group_range {group_range} outside [0, {n_groups}]"
+        if hi == lo:
+            return {k: jnp.asarray(v) for k, v in buffers.items()}
         self.scalars = {}
         scalars = scalars or {}
         for a in self.wg.fn.scalar_args:
@@ -57,7 +68,7 @@ class PallasWGProgram(WGProgram):
         def kernel(*refs):
             # inputs are aliased to outputs: out_refs carry the running state
             out_refs = refs[len(names):]
-            g = pl.program_id(0)
+            g = pl.program_id(0) + lo  # true group id within the full grid
             b = {nm: oref[...] for nm, oref in zip(names, out_refs)}
             for la in local_defs:
                 b[la.name] = jnp.zeros((la.size,), la.dtype)
@@ -67,7 +78,7 @@ class PallasWGProgram(WGProgram):
 
         call = pl.pallas_call(
             kernel,
-            grid=(n_groups,),
+            grid=(hi - lo,),
             in_specs=[pl.BlockSpec(bufs[n].shape,
                                    lambda g, nd=bufs[n].ndim: (0,) * nd)
                       for n in names],

@@ -703,7 +703,13 @@ class WGProgram:
     # -- NDRange execution ------------------------------------------------------
     def run_ndrange(self, buffers: Dict[str, np.ndarray],
                     scalars: Optional[Dict[str, object]],
-                    global_size: Sequence[int]):
+                    global_size: Sequence[int],
+                    group_range: Optional[Tuple[int, int]] = None):
+        """Execute the NDRange.  ``group_range=(lo, hi)`` runs only that
+        contiguous range of linearized work-groups *of the full NDRange*
+        (group-id decoding still uses the full grid) — the sub-range unit
+        the multi-device co-execution scheduler dispatches
+        (runtime/scheduler.py); ``None`` runs every group."""
         gsz = tuple(global_size) + (1,) * (3 - len(global_size))
         for g, l in zip(gsz, self.lsz):
             assert g % l == 0, "global size must divide local size"
@@ -726,12 +732,16 @@ class WGProgram:
             out = self.run_wg(b, g)
             return tuple(out[n] for n in global_names)
 
+        lo, hi = (0, n_groups) if group_range is None \
+            else (int(group_range[0]), int(group_range[1]))
+        assert 0 <= lo <= hi <= n_groups, \
+            f"group_range {group_range} outside [0, {n_groups}]"
         bufs_t = tuple(bufs[n] for n in global_names)
-        if n_groups == 1:
-            bufs_t = one_group(jnp.int32(0), bufs_t)
-        else:
+        if hi - lo == 1:
+            bufs_t = one_group(jnp.int32(lo), bufs_t)
+        elif hi > lo:
             bufs_t = lax.fori_loop(
-                0, n_groups, lambda g, bt: one_group(jnp.int32(g), bt),
+                lo, hi, lambda g, bt: one_group(jnp.int32(g), bt),
                 bufs_t)
         return dict(zip(global_names, bufs_t))
 

@@ -55,6 +55,10 @@ def main(argv=None):
     total_toks = sum(len(r.out_tokens) for r in done)
     print(f"served {len(done)} requests, {total_toks} tokens "
           f"in {dt:.2f}s ({total_toks / max(dt, 1e-9):.1f} tok/s)")
+    dag = eng.dag_stats
+    if dag:
+        print(f"  dag: {dag['groups']} group(s), {dag['events']} events, "
+              f"overlap {dag['overlap']:.2f}x")
     for i, r in enumerate(done):
         print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> {r.out_tokens}")

@@ -1,8 +1,28 @@
-"""OpenCL-shaped runtime: host layer over the device layer (paper §3)."""
+"""OpenCL-shaped runtime: host layer over the device layer (paper §3).
 
-from .bufalloc import Bufalloc, OutOfMemory
-from .platform import Buffer, Device, DeviceInfo, Platform, create_buffer
-from .queue import CommandQueue, Event
+Layering (docs/runtime.md):
 
-__all__ = ["Bufalloc", "OutOfMemory", "Platform", "Device", "DeviceInfo",
-           "Buffer", "create_buffer", "CommandQueue", "Event"]
+  events.py     — Event / UserEvent: status ladder + profiling counters
+  queue.py      — CommandQueue: the event-DAG scheduler per device
+  scheduler.py  — CoExecutor: one NDRange split across several devices
+  platform.py   — Platform / Device / Buffer (clGetPlatformIDs et al.)
+  bufalloc.py   — the pocl buffer allocator + cross-device residency
+"""
+
+from .bufalloc import Bufalloc, OutOfMemory, ResidencyTracker
+from .events import (CommandError, DependencyError, Event, EventStatus,
+                     UserEvent, wait_for_events)
+from .platform import (Buffer, Device, DeviceInfo, Platform, create_buffer,
+                       default_platform)
+from .queue import CommandQueue
+from .scheduler import CoExecStats, CoExecutor, SharedBuffer, split_groups
+
+__all__ = [
+    "Bufalloc", "OutOfMemory", "ResidencyTracker",
+    "Event", "EventStatus", "UserEvent", "CommandError", "DependencyError",
+    "wait_for_events",
+    "Platform", "Device", "DeviceInfo", "Buffer", "create_buffer",
+    "default_platform",
+    "CommandQueue",
+    "CoExecutor", "CoExecStats", "SharedBuffer", "split_groups",
+]

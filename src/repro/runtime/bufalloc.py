@@ -19,12 +19,21 @@ Faithful reimplementation of the design described in the paper:
 The serving engine uses a Bufalloc arena for its paged KV cache
 (:mod:`repro.serve.kvcache`), and the OpenCL-style runtime uses it for
 ``clCreateBuffer`` book-keeping on devices without their own allocator.
+
+:class:`ResidencyTracker` extends the same host-side book-keeping across
+*devices*: it records which devices currently hold a valid copy of each
+shared buffer, so the multi-device co-execution scheduler
+(:mod:`repro.runtime.scheduler`) migrates a buffer to a device **once** —
+not once per sub-range launch — and invalidates stale copies when a launch
+writes it (the implicit cl_mem migration of OpenCL §5.3: "moved to the
+device on first use, cached until another device writes").
 """
 
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass
-from typing import Iterator, List, Optional
+from typing import Dict, Hashable, Iterator, List, Optional, Set
 
 
 class OutOfMemory(Exception):
@@ -174,3 +183,60 @@ class Bufalloc:
         for c in self.chunks():
             if c.free and c.next is not None:
                 assert not c.next.free, "adjacent free chunks not coalesced"
+
+
+class ResidencyTracker:
+    """Which devices hold a valid copy of each shared buffer.
+
+    Keys are opaque hashables (the scheduler uses buffer identities);
+    devices likewise.  The contract mirrors OpenCL's implicit cl_mem
+    migration:
+
+    * :meth:`acquire` — a device is about to *read* the buffer.  Returns
+      True when the device has no valid copy (the caller must copy the
+      canonical data over; counted as a **migration**), False on a
+      residency hit (no copy needed — this is what makes a buffer touched
+      on two devices copy once, not once per launch).
+    * :meth:`wrote` — a launch *wrote* the buffer on (or back to) a
+      device/host; every other copy becomes stale.
+    * :meth:`drop` — forget a buffer entirely (released).
+
+    Thread-safe: sub-range launches acquire concurrently from the
+    per-device queue workers.
+    """
+
+    def __init__(self) -> None:
+        self._valid: Dict[Hashable, Set[Hashable]] = {}
+        self._lock = threading.Lock()
+        self.migrations = 0       # copies that actually happened
+        self.hits = 0             # reads served by an existing valid copy
+
+    def acquire(self, key: Hashable, device: Hashable) -> bool:
+        """Record a read of ``key`` on ``device``; True if a copy is due."""
+        with self._lock:
+            holders = self._valid.setdefault(key, set())
+            if device in holders:
+                self.hits += 1
+                return False
+            holders.add(device)
+            self.migrations += 1
+            return True
+
+    def wrote(self, key: Hashable, device: Hashable) -> None:
+        """Record a write on ``device``: it becomes the sole valid copy."""
+        with self._lock:
+            self._valid[key] = {device}
+
+    def resident(self, key: Hashable, device: Hashable) -> bool:
+        with self._lock:
+            return device in self._valid.get(key, ())
+
+    def drop(self, key: Hashable) -> None:
+        with self._lock:
+            self._valid.pop(key, None)
+
+    def stats(self) -> Dict[str, int]:
+        """Migration/hit counters plus the number of tracked buffers."""
+        with self._lock:
+            return {"migrations": self.migrations, "hits": self.hits,
+                    "tracked": len(self._valid)}

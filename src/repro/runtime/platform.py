@@ -22,6 +22,7 @@ counters (the clGetDeviceInfo-style introspection for the cache subsystem).
 from __future__ import annotations
 
 import dataclasses
+import threading
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
@@ -44,7 +45,13 @@ class DeviceInfo:
 
 
 class Device:
-    """Device-layer object: owns resource management for its memory."""
+    """Device-layer object (cl_device_id analogue).
+
+    Owns resource management for its memory (a :class:`Bufalloc` arena),
+    a private compilation cache, and the target its driver kind maps to
+    (``basic``→loop, ``vector``→vector, ``pallas``→pallas, ``auto``→
+    autotuned).  Command queues bind to exactly one device; multi-device
+    work uses one queue per device (runtime/scheduler.py)."""
 
     def __init__(self, info: DeviceInfo, jax_device=None):
         self.info = info
@@ -63,7 +70,13 @@ class Device:
     # -- device layer: kernel compilation -------------------------------------
     def build_kernel(self, build: Callable[[], Function],
                      local_size: Sequence[int], **opts) -> CompiledKernel:
+        """clBuildProgram + clCreateKernel for this device: run the pocl
+        pipeline for ``local_size`` on the device's target, memoized in
+        the device cache.  Autotuned devices key their tuning decisions by
+        device name, so co-executing heterogeneous devices measure
+        independently."""
         opts.setdefault("cache", self.compile_cache)
+        opts.setdefault("device_key", self.info.name)
         return compile_kernel(build, local_size, target=self._target, **opts)
 
     def cache_stats(self) -> Dict[str, int]:
@@ -121,9 +134,27 @@ class Platform:
             max_work_group_size=1024, compute_units=1)))
 
     def get_devices(self, driver: Optional[str] = None) -> List[Device]:
+        """clGetDeviceIDs: all devices, or those of one driver kind."""
         if driver is None:
             return list(self.devices)
         return [d for d in self.devices if d.info.driver == driver]
+
+    def co_devices(self, n: int, driver: str = "vector") -> List[Device]:
+        """Create ``n`` fresh homogeneous devices for multi-device
+        co-execution (the analogue of EngineCL's device set over one
+        platform).  Each device owns its own allocator and compilation
+        cache; the multi-device scheduler (runtime/scheduler.py) fans
+        sub-ranges of one NDRange out across them.  The devices are
+        appended to :attr:`devices` so ``cache_stats`` sees them."""
+        out = []
+        for i in range(n):
+            d = Device(DeviceInfo(
+                name=f"repro-co-{driver}-{i}", driver=driver,
+                global_mem_size=1 << 30, local_mem_size=1 << 20,
+                max_work_group_size=1024, compute_units=1))
+            out.append(d)
+        self.devices.extend(out)
+        return out
 
     def cache_stats(self) -> Dict[str, Dict[str, int]]:
         """Per-device compilation-cache counters, keyed by device name."""
@@ -132,5 +163,27 @@ class Platform:
 
 def create_buffer(device: Device, n_elems: int, dtype: str = "float32"
                   ) -> Buffer:
+    """clCreateBuffer: allocate ``n_elems`` of ``dtype`` on ``device``."""
     itemsize = np.dtype(dtype).itemsize
     return Buffer(device, n_elems * itemsize, dtype, n_elems)
+
+
+# ---------------------------------------------------------------------------
+# Process-default platform (lazy singleton)
+# ---------------------------------------------------------------------------
+
+_default_platform: Optional[Platform] = None
+_platform_lock = threading.Lock()
+
+
+def default_platform() -> Platform:
+    """The process-default :class:`Platform` (clGetPlatformIDs returns the
+    same platform object for every caller).  Subsystems that need *a*
+    device for host-side command scheduling — e.g. the serving engine's
+    DAG queue — share this one instead of enumerating devices per
+    instance."""
+    global _default_platform
+    with _platform_lock:
+        if _default_platform is None:
+            _default_platform = Platform()
+        return _default_platform

@@ -1,81 +1,96 @@
-"""Command queues and events (OpenCL Runtime layer, paper §2/§3).
+"""Command queues over an explicit event dependency DAG (paper §2/§3).
 
-Commands (kernel launches, buffer reads/writes) are enqueued with optional
-event dependencies.  In-order queues preserve enqueue order; out-of-order
-queues execute any command whose dependencies are resolved — the analogue of
-the paper's observation that commands in an out-of-order queue "can be
-assumed to be independent of each other unless explicitly synchronized using
-events".
+Commands (kernel launches, buffer reads/writes, native host functions) are
+enqueued with optional ``wait_for`` event lists and return an
+:class:`~repro.runtime.events.Event`.  In-order queues add an implicit
+dependency on the previously enqueued command; out-of-order queues execute
+any command whose dependencies are resolved — the paper's observation that
+commands in an out-of-order queue "can be assumed to be independent of each
+other unless explicitly synchronized using events".
 
-Execution is host-driven: ``flush()`` walks the ready set; a background
-thread pool overlaps host-side staging with device execution, which is the
-same role the pthread driver's launcher threads play in pocl.
+Scheduling is **push-based**: ``flush()`` submits every flushed command
+whose wait list is already resolved, and each event completion decrements
+its dependents' outstanding-dependency counters, submitting newly-ready
+commands from the completing thread — no polling loop.  The worker pool
+plays the role of pocl's pthread-driver launcher threads; cross-queue and
+cross-device dependencies work because the resolution mechanism is the
+event itself, not queue-local state.
+
+Every event moves QUEUED -> SUBMITTED -> RUNNING -> COMPLETE with
+nanosecond profiling timestamps (docs/runtime.md maps each call here to
+its OpenCL counterpart).  A failing command terminates its event with the
+error and every transitive dependent fails with ``DependencyError``
+without running.
 
 ``enqueue_kernel`` is the pocl-faithful enqueue path: the work-group
-function is specialized at enqueue time (paper §4.1), but through the
-device's compilation cache — so the first enqueue compiles and every later
-enqueue of the same kernel/local-size is a hash lookup.  ``self.stats``
-counts launches and enqueue-time compiles for the dispatch-overhead story.
+function is specialized at enqueue time (paper §4.1) through the device's
+compilation cache — the first enqueue compiles, every later enqueue of the
+same kernel/local-size is a hash lookup.  ``self.stats`` counts launches
+and enqueue-time compiles for the dispatch-overhead story.
 """
 
 from __future__ import annotations
 
-import itertools
 import threading
-from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Callable, Dict, List, Optional, Sequence
+from concurrent.futures import ThreadPoolExecutor
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.api import CompiledKernel
+from .events import (CommandError, DependencyError, Event, EventStatus,
+                     UserEvent, wait_for_events)
 from .platform import Buffer, Device
-
-_event_ids = itertools.count()
-
-
-class Event:
-    """cl_event analogue: a future with status + profiling timestamps."""
-
-    def __init__(self, name: str):
-        self.id = next(_event_ids)
-        self.name = name
-        self.future: Optional[Future] = None
-        self._done = threading.Event()
-
-    def complete(self) -> None:
-        self._done.set()
-
-    def wait(self) -> None:
-        if self.future is not None:
-            self.future.result()
-        self._done.wait()
-
-    @property
-    def done(self) -> bool:
-        return self._done.is_set()
 
 
 class _Command:
+    """One node of the DAG: a host thunk plus its event and wait list."""
+
+    __slots__ = ("fn", "event", "deps", "remaining", "submitted",
+                 "failed_dep")
+
     def __init__(self, fn: Callable[[], None], event: Event,
                  deps: Sequence[Event]):
         self.fn = fn
         self.event = event
-        self.deps = list(deps)
+        self.deps: List[Event] = list(deps)
+        self.remaining = 0            # unresolved deps (set when armed)
+        self.submitted = False
+        self.failed_dep: Optional[Event] = None
 
 
 class CommandQueue:
+    """cl_command_queue analogue: a DAG scheduler over one device.
+
+    Parameters
+    ----------
+    device:
+        The :class:`~repro.runtime.platform.Device` commands execute on
+        (and whose compilation cache ``enqueue_kernel`` compiles through).
+    out_of_order:
+        ``False`` (default) chains every command after the previous one —
+        clCreateCommandQueue without
+        ``CL_QUEUE_OUT_OF_ORDER_EXEC_MODE_ENABLE``.  ``True`` runs any
+        command whose ``wait_for`` list is resolved, concurrently up to
+        ``workers``.
+    workers:
+        Size of the worker pool (the pthread-driver launcher threads).
+    """
+
     def __init__(self, device: Device, out_of_order: bool = False,
                  workers: int = 2):
         self.device = device
         self.out_of_order = out_of_order
-        self._pending: List[_Command] = []
         self._pool = ThreadPoolExecutor(max_workers=workers)
         self._lock = threading.Lock()
+        self._pending: List[_Command] = []     # enqueued, not yet flushed
+        self._issued: List[Event] = []         # all live events (for finish)
         self._last_event: Optional[Event] = None
-        self._issued: List[Event] = []
+        self._ooo_barrier: Optional[Event] = None
         self._launches = 0
         self._compiles0 = device.compile_cache.stats.compiles
 
+    # -- introspection -----------------------------------------------------------
     @property
     def stats(self) -> Dict[str, int]:
         """Launch count + pipeline compiles that hit this queue's *device*
@@ -92,27 +107,56 @@ class CommandQueue:
                     self.device.compile_cache.stats.compiles
                     - self._compiles0}
 
+    def events(self) -> List[Event]:
+        """Snapshot of live (not yet pruned) events, in enqueue order."""
+        with self._lock:
+            return list(self._issued)
+
     # -- enqueue APIs -------------------------------------------------------------
     def _enqueue(self, name: str, fn: Callable[[], None],
                  wait_for: Optional[Sequence[Event]]) -> Event:
-        ev = Event(name)
+        """Core enqueue: record a command node and return its event.
+
+        The full ``wait_for`` list is always preserved on the command (an
+        in-order queue *adds* the previous command, it never replaces the
+        explicit list)."""
+        ev = Event(name, queue=self)
         deps = list(wait_for or [])
-        if not self.out_of_order and self._last_event is not None:
-            deps.append(self._last_event)
         with self._lock:
-            self._pending.append(_Command(fn, ev, deps))
+            if not self.out_of_order and self._last_event is not None:
+                deps.append(self._last_event)
+            if self.out_of_order and self._ooo_barrier is not None:
+                if self._ooo_barrier.succeeded:
+                    # a completed barrier gates nothing anymore; clearing
+                    # it keeps long-lived queues at zero steady-state cost
+                    # (a FAILED barrier stays: dependents must still fail)
+                    self._ooo_barrier = None
+                else:
+                    deps.append(self._ooo_barrier)
+            cmd = _Command(fn, ev, deps)
+            self._pending.append(cmd)
             self._last_event = ev
             self._issued.append(ev)
         return ev
 
+    def enqueue_native(self, fn: Callable[[], None],
+                       wait_for: Optional[Sequence[Event]] = None,
+                       name: str = "native") -> Event:
+        """clEnqueueNativeKernel analogue: run a host function as a DAG
+        node.  The serving engine and the multi-device scheduler build
+        their pipelines out of these."""
+        return self._enqueue(name, fn, wait_for)
+
     def enqueue_write_buffer(self, buf: Buffer, host: np.ndarray,
                              wait_for=None) -> Event:
+        """clEnqueueWriteBuffer: copy ``host`` into the device buffer."""
         def run():
             buf.data = np.array(host, dtype=buf.dtype, copy=True)
         return self._enqueue("write", run, wait_for)
 
     def enqueue_read_buffer(self, buf: Buffer, out: np.ndarray,
                             wait_for=None) -> Event:
+        """clEnqueueReadBuffer: copy the device buffer into ``out``."""
         def run():
             out[...] = buf.data
         return self._enqueue("read", run, wait_for)
@@ -121,9 +165,17 @@ class CommandQueue:
                                global_size: Sequence[int],
                                buffers: Dict[str, Buffer],
                                scalars: Optional[Dict[str, object]] = None,
-                               wait_for=None) -> Event:
+                               wait_for=None,
+                               group_range: Optional[Tuple[int, int]] = None
+                               ) -> Event:
+        """clEnqueueNDRangeKernel: launch a pre-compiled kernel.
+
+        ``group_range=(lo, hi)`` restricts execution to a contiguous range
+        of linearized work-groups of the *full* NDRange — the co-execution
+        unit the multi-device scheduler fans out
+        (:mod:`repro.runtime.scheduler`)."""
         def run():
-            self._launch(kernel, buffers, global_size, scalars)
+            self._launch(kernel, buffers, global_size, scalars, group_range)
         return self._enqueue(f"ndrange:{kernel.name}", run, wait_for)
 
     def enqueue_kernel(self, build, local_size: Sequence[int],
@@ -137,74 +189,136 @@ class CommandQueue:
         region-formation or lowering work."""
         def run():
             kernel = self.device.build_kernel(build, local_size, **opts)
-            self._launch(kernel, buffers, global_size, scalars)
+            self._launch(kernel, buffers, global_size, scalars, None)
         return self._enqueue("ndrange:<enqueue-compiled>", run, wait_for)
 
     def _launch(self, kernel, buffers: Dict[str, Buffer], global_size,
-                scalars) -> None:
+                scalars, group_range) -> None:
         """Run a compiled kernel over device buffers and write back."""
         with self._lock:
             self._launches += 1
         arrs = {k: b.data for k, b in buffers.items()}
-        out = kernel(arrs, global_size, scalars)
+        if group_range is None:
+            out = kernel(arrs, global_size, scalars)
+        else:
+            out = kernel(arrs, global_size, scalars,
+                         group_range=group_range)
         for k, b in buffers.items():
             b.data = out[k]
 
-    def enqueue_barrier(self) -> Event:
-        """Queue barrier: waits for everything enqueued so far."""
-        with self._lock:
-            deps = [c.event for c in self._pending]
-            if self._last_event is not None:
-                deps.append(self._last_event)
-        return self._enqueue("queue-barrier", lambda: None, deps)
-
-    # -- execution -----------------------------------------------------------------
-    def flush(self) -> None:
-        """Submit every command whose dependencies are resolved; loop until
-        the queue drains (dependencies between pending commands resolve as
-        their predecessors complete)."""
-        with self._lock:
-            # completed events need no further tracking; pruning here keeps
-            # _issued bounded on long-lived queues driven by flush() alone
-            self._issued = [e for e in self._issued if not e.done]
-        while True:
+    def enqueue_marker(self, wait_for: Optional[Sequence[Event]] = None
+                       ) -> Event:
+        """clEnqueueMarkerWithWaitList: an empty command that completes
+        when ``wait_for`` does — or, with no list, when everything
+        enqueued so far has completed.  Markers do not block later
+        commands; use them to hand one queue's progress to another."""
+        if wait_for is None:
             with self._lock:
-                if not self._pending:
-                    return
-                ready = [c for c in self._pending
-                         if all(d.done for d in c.deps)]
-                for c in ready:
-                    self._pending.remove(c)
-            if not ready:
-                # wait for any in-flight command, then retry
-                with self._lock:
-                    blockers = [d for c in self._pending for d in c.deps]
-                for d in blockers:
-                    if d.future is not None:
-                        d.wait()
-                        break
-                else:
-                    raise RuntimeError("command queue deadlock")
-                continue
-            for c in ready:
-                def run(c=c):
-                    try:
-                        c.fn()
-                    finally:
-                        c.event.complete()
-                c.event.future = self._pool.submit(run)
-            for c in ready:
-                if not self.out_of_order:
-                    c.event.wait()
-        # unreachable
+                # every live previously-enqueued command: still-pending,
+                # flushed-but-running, or complete (resolves instantly)
+                wait_for = list(self._issued)
+        return self._enqueue("marker", lambda: None, wait_for)
 
-    def finish(self) -> None:
+    def enqueue_barrier(self, wait_for: Optional[Sequence[Event]] = None
+                        ) -> Event:
+        """clEnqueueBarrierWithWaitList: like a marker, but on an
+        out-of-order queue every *subsequently enqueued* command also
+        waits for it — a synchronization point splitting the DAG into
+        before/after."""
+        ev = self.enqueue_marker(wait_for)
+        ev.name = "queue-barrier"
+        if self.out_of_order:
+            with self._lock:
+                self._ooo_barrier = ev
+        return ev
+
+    # -- DAG execution ------------------------------------------------------------
+    def flush(self) -> None:
+        """clFlush: submit the DAG built so far and return immediately.
+
+        Every command enqueued before this call is *armed*: commands with
+        resolved wait lists go to the worker pool now, the rest are
+        submitted automatically (from the completing thread) as their
+        dependencies finish.  Completion is observed with ``finish()`` or
+        ``Event.wait()``."""
+        with self._lock:
+            armed, self._pending = self._pending, []
+            # successfully completed events need no further tracking;
+            # pruning keeps _issued bounded on long-lived queues.  Failed
+            # events stay until the next finish() reports them.
+            self._issued = [e for e in self._issued if not e.succeeded]
+            self._issued.extend(c.event for c in armed)
+        for cmd in armed:
+            self._arm(cmd)
+
+    def _arm(self, cmd: _Command) -> None:
+        """Register dependency callbacks; submit if already ready."""
+        cmd.remaining = len(cmd.deps)
+        if cmd.remaining == 0:
+            self._submit(cmd)
+            return
+        for dep in cmd.deps:
+            # fires immediately if the dep is already terminal
+            dep.add_callback(lambda ev, c=cmd: self._dep_resolved(c, ev))
+
+    def _dep_resolved(self, cmd: _Command, dep: Event) -> None:
+        with self._lock:
+            if dep.failed and cmd.failed_dep is None:
+                cmd.failed_dep = dep
+            cmd.remaining -= 1
+            ready = cmd.remaining == 0 and not cmd.submitted
+            if ready:
+                cmd.submitted = True
+        if ready:
+            self._submit(cmd)
+
+    def _submit(self, cmd: _Command) -> None:
+        cmd.event._transition(EventStatus.SUBMITTED)
+        self._pool.submit(self._run_command, cmd)
+
+    def _run_command(self, cmd: _Command) -> None:
+        if cmd.failed_dep is not None:
+            cmd.event.fail(DependencyError(
+                f"command {cmd.event.name!r} abandoned: dependency "
+                f"{cmd.failed_dep.name!r} failed"))
+            return
+        cmd.event._transition(EventStatus.RUNNING)
+        try:
+            cmd.fn()
+        except BaseException as e:  # noqa: BLE001 - must reach waiters
+            cmd.event.fail(e)
+        else:
+            cmd.event.complete()
+
+    def finish(self, timeout: Optional[float] = None) -> None:
         """clFinish: flush and wait for completion of *every* issued
         command.  (Waiting only on the last event is wrong for
         out-of-order queues: the last-enqueued command can finish while
-        earlier independent commands are still executing.)"""
+        earlier independent commands are still executing.)
+
+        Raises :class:`CommandError` if any command failed, or
+        ``RuntimeError`` if ``timeout`` (seconds) expires — e.g. a wait
+        list references an event of a queue that was never flushed, or an
+        incomplete :class:`~repro.runtime.events.UserEvent`."""
         self.flush()
         with self._lock:
             issued = list(self._issued)
-        for ev in issued:
-            ev.wait()
+        try:
+            if not wait_for_events(issued, timeout):
+                stuck = [e.name for e in issued if not e.done]
+                raise RuntimeError(
+                    f"CommandQueue.finish timed out after {timeout}s; "
+                    f"incomplete commands: {stuck[:8]}")
+        finally:
+            with self._lock:
+                self._issued = [e for e in self._issued if not e.done]
+
+    def __del__(self):  # pragma: no cover - interpreter shutdown ordering
+        try:
+            self._pool.shutdown(wait=False)
+        except Exception:
+            pass
+
+
+__all__ = ["CommandQueue", "Event", "EventStatus", "UserEvent",
+           "CommandError", "DependencyError", "wait_for_events"]

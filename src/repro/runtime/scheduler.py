@@ -1,0 +1,324 @@
+"""Multi-device co-execution of one NDRange (docs/runtime.md §Scheduler).
+
+pocl schedules a kernel launch onto *one* device; co-execution engines
+(EngineCL, Nozal et al. — PAPERS.md) show that splitting a single NDRange
+across heterogeneous devices is where platform portability becomes
+throughput.  This module fans one launch out over several
+:class:`~repro.runtime.platform.Device`s:
+
+* the NDRange is split along the **linearized work-group axis** into
+  contiguous ``group_range`` chunks (work-groups are the only unit OpenCL
+  lets you split on: no cross-group synchronization exists);
+* **static** mode pre-assigns one contiguous span per device, sized by
+  ``weights`` (compute-power ratios, default equal);
+* **steal** mode enqueues many small chunks into a shared deque and lets
+  each device's drain command pull the next chunk whenever it finishes
+  one — self-scheduling, so a slow device simply takes fewer chunks;
+* every chunk launch goes through the device's own
+  :class:`~repro.runtime.queue.CommandQueue`, so chunk commands carry
+  events with full profiling, and the final merge command *waits on all
+  chunk events across queues* — a cross-queue event DAG;
+* buffer movement is tracked by a
+  :class:`~repro.runtime.bufalloc.ResidencyTracker`: a
+  :class:`SharedBuffer` is copied to a device on first use and then stays
+  resident until some launch writes it, so N chunk launches on one device
+  trigger exactly one migration.
+
+Results are **bitwise identical** to a single-device launch of the same
+target: a ``group_range`` sub-launch executes exactly the same group ids
+with the same group-id decoding, and merging takes each element from the
+chunk that wrote it.  (Merging assumes the OpenCL data-race rule already
+required for independent commands: distinct work-groups write disjoint
+elements.)
+"""
+
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from collections import deque
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from .bufalloc import ResidencyTracker
+from .platform import Buffer, Device, create_buffer
+from .queue import CommandQueue, Event
+
+_buf_ids = itertools.count()
+
+
+class SharedBuffer:
+    """A buffer logically shared by several devices (cl_mem used from
+    multiple queues).
+
+    The canonical copy lives on the host (``self.host``); each device
+    gets a lazily-allocated :class:`~repro.runtime.platform.Buffer` from
+    its own Bufalloc arena, filled on first use and kept valid across
+    launches by the residency tracker.  ``commit`` installs a new
+    canonical value (after a merge) and invalidates every device copy.
+    """
+
+    def __init__(self, host: np.ndarray, name: str,
+                 tracker: ResidencyTracker):
+        self.host = np.asarray(host)
+        self.name = name
+        # residency is keyed by a per-instance nonce, not the user-chosen
+        # name: two SharedBuffers reusing a name on one tracker must not
+        # alias each other's residency state (stale device data)
+        self._key = f"{name}#{next(_buf_ids)}"
+        self.tracker = tracker
+        self._device_bufs: Dict[Device, Buffer] = {}
+        self._lock = threading.Lock()
+
+    def device_array(self, device: Device) -> np.ndarray:
+        """The device-resident copy, migrating host -> device if stale.
+
+        Safe to call from concurrent chunk commands: the copy happens at
+        most once per (buffer, device) between writes."""
+        with self._lock:
+            buf = self._device_bufs.get(device)
+            if buf is None:
+                buf = create_buffer(device, self.host.size,
+                                    str(self.host.dtype))
+                self._device_bufs[device] = buf
+            if self.tracker.acquire(self._key, device):
+                buf.data = self.host.copy()
+            return buf.data
+
+    def commit(self, merged: np.ndarray) -> None:
+        """Install a merged result as the canonical host copy; all device
+        copies become stale (the next read on any device re-migrates)."""
+        with self._lock:
+            self.host = np.asarray(merged)
+            self.tracker.wrote(self._key, "host")
+
+    def release(self) -> None:
+        """Free every device-side chunk and forget residency."""
+        with self._lock:
+            for buf in self._device_bufs.values():
+                buf.release()
+            self._device_bufs.clear()
+            self.tracker.drop(self._key)
+
+
+def split_groups(n_groups: int, shares: Sequence[float]
+                 ) -> List[Tuple[int, int]]:
+    """Split ``[0, n_groups)`` into contiguous spans proportional to
+    ``shares`` (one span per share; empty spans allowed at the tail)."""
+    total = float(sum(shares))
+    assert total > 0, "shares must sum > 0"
+    bounds = [0]
+    acc = 0.0
+    for s in shares[:-1]:
+        acc += s
+        bounds.append(min(n_groups, round(n_groups * acc / total)))
+    bounds.append(n_groups)
+    # enforce monotonicity after rounding
+    for i in range(1, len(bounds)):
+        bounds[i] = max(bounds[i], bounds[i - 1])
+    return [(bounds[i], bounds[i + 1]) for i in range(len(shares))]
+
+
+class CoExecStats:
+    """What one co-executed launch did: chunks and groups per device,
+    events (with profiling), migrations, and wall time."""
+
+    def __init__(self) -> None:
+        self.mode = ""
+        self.n_groups = 0
+        self.chunks_per_device: Dict[str, int] = {}
+        self.groups_per_device: Dict[str, int] = {}
+        self.events: List[Event] = []
+        self.migrations = 0
+        self.residency_hits = 0
+        self.wall_s = 0.0
+
+    def as_dict(self) -> Dict[str, object]:
+        return {"mode": self.mode, "n_groups": self.n_groups,
+                "chunks_per_device": dict(self.chunks_per_device),
+                "groups_per_device": dict(self.groups_per_device),
+                "migrations": self.migrations,
+                "residency_hits": self.residency_hits,
+                "wall_s": self.wall_s}
+
+
+class CoExecutor:
+    """Fans ND-range launches out across multiple devices.
+
+    Parameters
+    ----------
+    devices:
+        The participating devices; each gets a private out-of-order
+        :class:`CommandQueue`.
+    chunks_per_device:
+        Granularity of the ``steal`` mode: the NDRange is cut into
+        ``chunks_per_device * len(devices)`` chunks for self-scheduling.
+    """
+
+    def __init__(self, devices: Sequence[Device],
+                 chunks_per_device: int = 4):
+        assert devices, "CoExecutor needs at least one device"
+        self.devices = list(devices)
+        self.chunks_per_device = chunks_per_device
+        self.tracker = ResidencyTracker()
+        self.queues = {d: CommandQueue(d, out_of_order=True, workers=2)
+                       for d in self.devices}
+        self._kernels: Dict[tuple, object] = {}
+        self.last_stats: Optional[CoExecStats] = None
+
+    # -- buffers ---------------------------------------------------------------
+    def shared_buffer(self, host: np.ndarray, name: str) -> SharedBuffer:
+        """Wrap a host array for residency-tracked multi-device use.
+        Reusing the SharedBuffer across ``run`` calls is what makes
+        repeat launches migration-free."""
+        return SharedBuffer(host, name, self.tracker)
+
+    # -- kernel compilation (per device: enqueue-time specialization) ----------
+    def _kernel_for(self, device: Device, build: Callable,
+                    local_size: Sequence[int]):
+        key = (device, build, tuple(local_size))
+        k = self._kernels.get(key)
+        if k is None:
+            k = device.build_kernel(build, local_size)
+            self._kernels[key] = k
+        return k
+
+    # -- the co-executed launch -------------------------------------------------
+    def run(self, build: Callable, local_size: Sequence[int],
+            global_size: Sequence[int],
+            buffers: Dict[str, Union[np.ndarray, SharedBuffer]],
+            scalars: Optional[Dict[str, object]] = None,
+            mode: str = "static",
+            weights: Optional[Sequence[float]] = None
+            ) -> Dict[str, np.ndarray]:
+        """Launch ``build`` over ``global_size``, co-executed.
+
+        Returns the merged output arrays (keyed like ``buffers``).  Plain
+        ndarrays are wrapped in throwaway :class:`SharedBuffer`s; pass
+        SharedBuffers (see :meth:`shared_buffer`) to keep residency
+        across calls.  ``mode`` is ``"static"`` (one weighted span per
+        device) or ``"steal"`` (shared chunk deque, self-scheduled).
+        """
+        t0 = time.perf_counter()
+        lsz = tuple(local_size) + (1,) * (3 - len(local_size))
+        gsz = tuple(global_size) + (1,) * (3 - len(global_size))
+        n_groups = int(np.prod([g // l for g, l in zip(gsz, lsz)]))
+        shared: Dict[str, SharedBuffer] = {}
+        throwaway: List[SharedBuffer] = []
+        for nm, b in buffers.items():
+            if isinstance(b, SharedBuffer):
+                shared[nm] = b
+            else:
+                sb = SharedBuffer(b, nm, self.tracker)
+                shared[nm] = sb
+                throwaway.append(sb)
+        base = {nm: sb.host for nm, sb in shared.items()}
+
+        kernels = {d: self._kernel_for(d, build, local_size)
+                   for d in self.devices}
+        stats = CoExecStats()
+        stats.mode = mode
+        stats.n_groups = n_groups
+        mig0 = self.tracker.migrations
+        hit0 = self.tracker.hits
+
+        partials: List[Dict[str, np.ndarray]] = []
+        plock = threading.Lock()
+
+        def run_chunk(device: Device, lo: int, hi: int) -> None:
+            if hi <= lo:
+                return
+            arrs = {nm: sb.device_array(device)
+                    for nm, sb in shared.items()}
+            out = kernels[device](arrs, global_size, scalars,
+                                  group_range=(lo, hi))
+            with plock:
+                partials.append(out)
+                name = device.info.name
+                stats.chunks_per_device[name] = \
+                    stats.chunks_per_device.get(name, 0) + 1
+                stats.groups_per_device[name] = \
+                    stats.groups_per_device.get(name, 0) + (hi - lo)
+
+        chunk_events: List[Event] = []
+        if mode == "static":
+            shares = list(weights) if weights is not None \
+                else [1.0] * len(self.devices)
+            assert len(shares) == len(self.devices), \
+                "one weight per device"
+            spans = split_groups(n_groups, shares)
+            for dev, (lo, hi) in zip(self.devices, spans):
+                if hi <= lo:
+                    continue
+                q = self.queues[dev]
+                ev = q.enqueue_native(
+                    lambda d=dev, a=lo, b=hi: run_chunk(d, a, b),
+                    name=f"co-chunk:{dev.info.name}:{lo}-{hi}")
+                chunk_events.append(ev)
+        elif mode == "steal":
+            n_chunks = max(len(self.devices),
+                           self.chunks_per_device * len(self.devices))
+            chunk = -(-n_groups // n_chunks)  # ceil; whole work-groups
+            todo = deque((lo, min(lo + chunk, n_groups))
+                         for lo in range(0, n_groups, max(1, chunk)))
+
+            def drain(device: Device) -> None:
+                while True:
+                    try:
+                        lo, hi = todo.popleft()
+                    except IndexError:
+                        return
+                    run_chunk(device, lo, hi)
+
+            for dev in self.devices:
+                q = self.queues[dev]
+                ev = q.enqueue_native(
+                    lambda d=dev: drain(d),
+                    name=f"co-drain:{dev.info.name}")
+                chunk_events.append(ev)
+        else:
+            raise ValueError(f"unknown co-execution mode {mode!r}")
+
+        # the merge waits on every chunk event — across queues — then
+        # folds each chunk's written elements into the canonical copy
+        merged: Dict[str, np.ndarray] = {}
+
+        def merge() -> None:
+            for nm, sb in shared.items():
+                ref = base[nm]
+                acc = ref.copy()
+                wrote = False
+                for part in partials:
+                    sub = np.asarray(part[nm])
+                    mask = sub != ref
+                    if mask.any():
+                        acc[mask] = sub[mask]
+                        wrote = True
+                merged[nm] = acc
+                if wrote:
+                    sb.commit(acc)
+
+        q0 = self.queues[self.devices[0]]
+        merge_ev = q0.enqueue_native(merge, wait_for=chunk_events,
+                                     name="co-merge")
+        for q in self.queues.values():
+            q.flush()
+        try:
+            merge_ev.wait()
+        finally:
+            for sb in throwaway:  # one-shot wrappers: free device chunks
+                sb.release()
+
+        stats.events = chunk_events + [merge_ev]
+        stats.migrations = self.tracker.migrations - mig0
+        stats.residency_hits = self.tracker.hits - hit0
+        stats.wall_s = time.perf_counter() - t0
+        self.last_stats = stats
+        return merged
+
+    def finish(self) -> None:
+        """Drain every per-device queue (clFinish over the device set)."""
+        for q in self.queues.values():
+            q.finish()

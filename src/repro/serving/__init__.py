@@ -1,1 +1,7 @@
+"""Batched serving: `ServingEngine` dispatches request groups through the
+runtime's event DAG (prefill/decode chains per group, overlapped across
+groups — docs/runtime.md §4)."""
+
 from .engine import ServingEngine, Request
+
+__all__ = ["ServingEngine", "Request"]

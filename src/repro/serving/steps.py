@@ -17,6 +17,8 @@ def _aux(batch: Dict[str, Any]):
 
 
 def make_prefill_step(cfg: ModelConfig, rules: ShardingRules):
+    """Build the jit-able prefill step: consumes a full prompt batch,
+    fills the KV caches, and returns the last-position logits."""
     def prefill_step(params, batch, caches):
         logits, _, caches = forward(params, batch["tokens"], cfg, rules,
                                     aux_inputs=_aux(batch), caches=caches,
@@ -26,6 +28,8 @@ def make_prefill_step(cfg: ModelConfig, rules: ShardingRules):
 
 
 def make_decode_step(cfg: ModelConfig, rules: ShardingRules):
+    """Build the jit-able decode step: one synchronized token for the
+    whole batch, greedily sampled from the step logits."""
     def decode_step(params, batch, caches):
         logits, _, caches = forward(params, batch["tokens"], cfg, rules,
                                     aux_inputs=_aux(batch), caches=caches,

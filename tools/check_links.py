@@ -1,0 +1,67 @@
+"""Markdown link checker for the repo docs (CI docs job).
+
+Scans every tracked ``*.md`` file for inline links/images
+(``[text](target)``) and verifies that each *relative* target resolves
+to an existing file or directory (anchors are stripped; external
+``http(s)``/``mailto`` targets are skipped).  Exits non-zero listing
+every broken link.
+
+  python tools/check_links.py [root]
+"""
+
+from __future__ import annotations
+
+import os
+import re
+import sys
+
+# inline markdown links/images; skips fenced code blocks below
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_SKIP_DIRS = {".git", "__pycache__", "results", ".pytest_cache",
+              "node_modules"}
+
+
+def md_files(root: str):
+    for dirpath, dirnames, filenames in os.walk(root):
+        dirnames[:] = [d for d in dirnames if d not in _SKIP_DIRS]
+        for f in filenames:
+            if f.endswith(".md"):
+                yield os.path.join(dirpath, f)
+
+
+def links_in(path: str):
+    """Yield (lineno, target) for every inline link outside code fences."""
+    in_fence = False
+    with open(path, encoding="utf-8") as f:
+        for i, line in enumerate(f, 1):
+            if line.lstrip().startswith("```"):
+                in_fence = not in_fence
+                continue
+            if in_fence:
+                continue
+            for m in _LINK.finditer(line):
+                yield i, m.group(1)
+
+
+def check(root: str) -> int:
+    broken = []
+    n_links = 0
+    for md in md_files(root):
+        for lineno, target in links_in(md):
+            if target.startswith(("http://", "https://", "mailto:", "#")):
+                continue
+            n_links += 1
+            rel = target.split("#", 1)[0]
+            resolved = os.path.normpath(
+                os.path.join(os.path.dirname(md), rel))
+            if not os.path.exists(resolved):
+                broken.append((os.path.relpath(md, root), lineno, target))
+    for md, lineno, target in broken:
+        print(f"BROKEN  {md}:{lineno}  -> {target}")
+    print(f"checked {n_links} relative links in markdown files under "
+          f"{os.path.abspath(root)}: {len(broken)} broken")
+    return 1 if broken else 0
+
+
+if __name__ == "__main__":
+    sys.exit(check(sys.argv[1] if len(sys.argv) > 1 else "."))
