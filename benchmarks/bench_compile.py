@@ -1,0 +1,187 @@
+"""Cold-compile benchmark: stage-level plan sharing across an autotune
+sweep (docs/caching.md §Stage-level plan caching).
+
+The autotuner's cold path compiles one kernel for every candidate target
+(``loop``, ``vector``, ``pallas``).  Before the pass-manager refactor each
+target re-ran the whole target-independent prefix (normalize → b-loop
+barriers → out-of-SSA → horizontal → tail duplication → region formation →
+uniformity → context planning); now the prefix is computed once as a
+:class:`~repro.core.passes.WorkGroupPlan` and shared, so each additional
+target only pays its thin parallel-mapping layer.
+
+Two arms, measured on identical fresh-built kernels:
+
+  unshared — 3 targets x (build plan + lower): the pre-refactor cost,
+             reproduced by constructing each WGProgram from a raw Function
+  shared   — 1 x build plan + 3 x lower from the prebuilt plan: the cost
+             the autotuner pays today
+
+The acceptance gate is ``unshared/shared >= 1.5x`` on the 3-target sweep.
+A second section reports the end-to-end ``compile_kernel(target="auto")``
+cold dispatch and the plan/stage counters proving region formation ran
+once.
+
+  PYTHONPATH=src python -m benchmarks.bench_compile
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+
+from repro.core import (CompilationCache, KernelBuilder, TuningTable,
+                        compile_kernel, plan_count, set_default_table)
+from repro.core.examples import build_dct
+from repro.core.passes import build_plan
+from repro.core.targets.loop import LoopWGProgram
+from repro.core.targets.vector import WGProgram
+from repro.core.targets.pallas_target import PallasWGProgram
+
+LSZ = 16
+REPEATS = 5
+TARGET_CLASSES = {"loop": LoopWGProgram, "vector": WGProgram,
+                  "pallas": PallasWGProgram}
+
+
+def build_saxpy():
+    b = KernelBuilder("saxpy")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    a = b.arg_scalar("a", "float32")
+    gid = b.global_id(0)
+    y[gid] = a * x[gid] + y[gid]
+    return b.finish()
+
+
+def build_reduce():
+    b = KernelBuilder("wg_reduce")
+    inp = b.arg_buffer("inp", "float32")
+    out = b.arg_buffer("out", "float32")
+    scratch = b.local_array("scratch", "float32", LSZ)
+    lid, gid, grp = b.local_id(0), b.global_id(0), b.group_id(0)
+    scratch[lid] = inp[gid]
+    b.barrier()
+    s = b.var(b.const(LSZ // 2), name="s")
+    with b.while_loop() as loop:
+        loop.cond(s.get() > 0)
+        with b.if_(lid < s.get()):
+            scratch[lid] = scratch[lid] + scratch[lid + s.get()]
+        b.barrier()
+        s.set(s.get() / 2)
+    with b.if_(lid == 0):
+        out[grp] = scratch[0]
+    return b.finish()
+
+
+KERNELS = {"saxpy": build_saxpy, "wg_reduce": build_reduce, "dct": build_dct}
+
+
+def _time_unshared(build) -> float:
+    """Pre-refactor cost: every target builds its own plan from a raw
+    Function (the WGProgram compatibility path runs the full pipeline)."""
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for cls in TARGET_CLASSES.values():
+            cls(build(), (LSZ,))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_shared(build) -> float:
+    """Post-refactor cost: one plan, three thin target lowerings."""
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        plan = build_plan(build())
+        for cls in TARGET_CLASSES.values():
+            cls(plan, (LSZ,))
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def _time_auto_cold(build) -> Dict[str, float]:
+    """End-to-end compile_kernel(target='auto') cold sweep: compile every
+    candidate through a fresh cache; report wall time + stage counters."""
+    cache = CompilationCache()
+    set_default_table(TuningTable())
+    try:
+        p0 = plan_count()
+        t0 = time.perf_counter()
+        k = compile_kernel(build, (LSZ,), target="auto", cache=cache)
+        for tgt in ("loop", "vector", "pallas"):
+            k.kernel_for(tgt)
+        dt = time.perf_counter() - t0
+        return {"auto_cold_ms": dt * 1e3,
+                "plans_built": plan_count() - p0,
+                "plan_hits": cache.stats.plan_hits}
+    finally:
+        set_default_table(None)
+
+
+def run() -> Dict[str, Dict[str, float]]:
+    results: Dict[str, Dict[str, float]] = {}
+    for name, build in KERNELS.items():
+        unshared = _time_unshared(build)
+        shared = _time_shared(build)
+        r = {"unshared_ms": unshared * 1e3,
+             "shared_ms": shared * 1e3,
+             "speedup": unshared / shared}
+        r.update(_time_auto_cold(build))
+        results[name] = r
+    return results
+
+
+def main(trajectory: bool = True, strict_timing: bool = True):
+    """``strict_timing=False`` (the CI mode, ``--ci``) gates only on the
+    deterministic stage counters — one plan per autotune sweep — and
+    reports the wall-clock speedup as an advisory number, so a noisy
+    shared runner cannot flake the build on a millisecond-scale timing
+    ratio.  Local/benchmark runs keep the full >=1.5x timing gate."""
+    res = run()
+    print(f"{'kernel':12s} {'unshared':>10s} {'shared':>9s} {'speedup':>9s} "
+          f"{'auto cold':>10s} {'plans':>6s}")
+    for name, r in res.items():
+        print(f"{name:12s} {r['unshared_ms']:8.2f}ms {r['shared_ms']:7.2f}ms"
+              f" {r['speedup']:8.2f}x {r['auto_cold_ms']:8.2f}ms "
+              f"{r['plans_built']:6d}")
+    worst = min(r["speedup"] for r in res.values())
+    plans_ok = all(r["plans_built"] == 1 for r in res.values())
+    timing_ok = worst >= 1.5
+    ok = plans_ok and (timing_ok or not strict_timing)
+    status = "OK" if ok else "BELOW TARGET"
+    if not timing_ok and not strict_timing and plans_ok:
+        status += " (timing advisory only in --ci mode)"
+    print(f"\nworst-case 3-target cold-compile speedup from plan sharing: "
+          f"{worst:.2f}x (target >=1.5x); one plan per auto sweep: "
+          f"{plans_ok}  {status}")
+    if trajectory:
+        _append_trajectory(res)
+    res["_gate_ok"] = ok
+    return res
+
+
+def _append_trajectory(res) -> None:
+    """Append this run to BENCH_COMPILE.json (one record per run, so the
+    compile-time trajectory is tracked across PRs — see README.md)."""
+    path = os.path.join(os.path.dirname(__file__), "BENCH_COMPILE.json")
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = []
+    hist.append({"timestamp": time.time(), "results": res})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
+    print(f"trajectory -> {path} ({len(hist)} runs)")
+
+
+if __name__ == "__main__":
+    import sys
+    strict = "--ci" not in sys.argv[1:]
+    sys.exit(0 if main(strict_timing=strict).get("_gate_ok") else 1)

@@ -9,6 +9,7 @@
   §Roofline   -> roofline_report      (dry-run derived, if results exist)
   §4.1        -> bench_cache          (compile cache: cold vs hit dispatch)
   §3 runtime  -> bench_events         (event DAG overlap + co-execution)
+  §4 pipeline -> bench_compile        (plan sharing across the target sweep)
 """
 
 from __future__ import annotations
@@ -16,7 +17,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import sys
 import time
 
 
@@ -30,7 +30,7 @@ def main(argv=None):
 
     t0 = time.time()
     print("=" * 72)
-    print("[1/8] Kernel suite across execution targets (paper Fig. 12-14)")
+    print("[1/9] Kernel suite across execution targets (paper Fig. 12-14)")
     print("=" * 72)
     from . import bench_kernel_suite
     res = bench_kernel_suite.main()
@@ -38,14 +38,14 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[2/8] DCT horizontal inner-loop parallelization (paper §6.4)")
+    print("[2/9] DCT horizontal inner-loop parallelization (paper §6.4)")
     print("=" * 72)
     from . import bench_horizontal
     summary["horizontal"] = bench_horizontal.main()
 
     print()
     print("=" * 72)
-    print("[3/8] Vecmathlib vs scalarized libm (paper Tables 3/4)")
+    print("[3/9] Vecmathlib vs scalarized libm (paper Tables 3/4)")
     print("=" * 72)
     from . import bench_vml
     res = bench_vml.main()
@@ -53,35 +53,42 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[4/8] Bufalloc (paper §3)")
+    print("[4/9] Bufalloc (paper §3)")
     print("=" * 72)
     from . import bench_bufalloc
     summary["bufalloc"] = bench_bufalloc.main()
 
     print()
     print("=" * 72)
-    print("[5/8] Context-array uniform merging (paper §4.7)")
+    print("[5/9] Context-array uniform merging (paper §4.7)")
     print("=" * 72)
     from . import bench_context
     summary["context"] = bench_context.main()
 
     print()
     print("=" * 72)
-    print("[6/8] Compilation cache: cold vs cache-hit dispatch (§4.1)")
+    print("[6/9] Compilation cache: cold vs cache-hit dispatch (§4.1)")
     print("=" * 72)
     from . import bench_cache
     summary["cache"] = bench_cache.main()
 
     print()
     print("=" * 72)
-    print("[7/8] Event-DAG runtime: overlap + multi-device co-execution (§3)")
+    print("[7/9] Event-DAG runtime: overlap + multi-device co-execution (§3)")
     print("=" * 72)
     from . import bench_events
     summary["events"] = bench_events.main()
 
     print()
     print("=" * 72)
-    print("[8/8] Roofline report (dry-run derived)")
+    print("[8/9] Pass-manager plan sharing: cold autotune compile (§4)")
+    print("=" * 72)
+    from . import bench_compile
+    summary["compile"] = bench_compile.main()
+
+    print()
+    print("=" * 72)
+    print("[9/9] Roofline report (dry-run derived)")
     print("=" * 72)
     from . import roofline_report
     roofline_report.main()

@@ -5,23 +5,31 @@ Public API:
   compile_kernel   — run the pocl pipeline for a local size + target
                      (memoized in a content-addressed compilation cache;
                      target="auto" routes through the autotuner)
+  PassManager      — the middle-end pass pipeline (docs/compiler.md);
+                     build_plan runs it, producing the WorkGroupPlan all
+                     targets share; plan_count counts pipeline runs
   run_ndrange      — fiber-based reference executor (semantics oracle)
-  CompilationCache — LRU + disk compilation cache (docs/caching.md)
+  CompilationCache — LRU + disk compilation cache, with a stage-level
+                     plan tier (docs/caching.md)
   TuningTable      — persistent per-kernel-shape target winners
 """
 
 from .dsl import KernelBuilder
 from .api import compile_kernel, compile_count, CompiledKernel
-from .cache import (CacheKey, CompilationCache, canonical_ir, default_cache,
-                    ir_hash, reset_default_cache)
+from .cache import (CacheKey, CompilationCache, PlanKey, canonical_ir,
+                    default_cache, ir_hash, reset_default_cache)
+from .passes import (ParallelRegionMD, Pass, PassManager, VerifierError,
+                     WorkGroupPlan, build_plan, plan_count, verify_ir)
 from .autotune import AutotunedKernel, TuningTable, default_table, \
     set_default_table
 from .interp import run_ndrange
 
 __all__ = [
     "KernelBuilder", "compile_kernel", "compile_count", "CompiledKernel",
-    "CacheKey", "CompilationCache", "canonical_ir", "default_cache",
-    "ir_hash", "reset_default_cache",
+    "CacheKey", "CompilationCache", "PlanKey", "canonical_ir",
+    "default_cache", "ir_hash", "reset_default_cache",
+    "ParallelRegionMD", "Pass", "PassManager", "VerifierError",
+    "WorkGroupPlan", "build_plan", "plan_count", "verify_ir",
     "AutotunedKernel", "TuningTable", "default_table", "set_default_table",
     "run_ndrange",
 ]

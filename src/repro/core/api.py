@@ -24,16 +24,15 @@ instance to use a private cache (each runtime ``Device`` owns one).
 
 from __future__ import annotations
 
-import functools
 import threading
 from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from .cache import CacheKey, CompilationCache, default_cache
+from .cache import CacheKey, CompilationCache, PlanKey, default_cache, ir_hash
 from .ir import Function
+from .passes import WorkGroupPlan, build_plan
 from .targets.loop import LoopWGProgram
 from .targets.vector import WGProgram
 
@@ -116,27 +115,55 @@ class CompiledKernel:
     def context_stats(self) -> Dict[str, int]:
         return self.prog.plan.stats(self.prog.L)
 
+    @property
+    def work_group_plan(self) -> WorkGroupPlan:
+        """The shared target-independent plan this kernel was built from."""
+        return self.prog.wgplan
+
+    @property
+    def region_md(self) -> Dict[str, object]:
+        """Per-region :class:`~repro.core.passes.ParallelRegionMD`."""
+        return self.prog.md
+
 
 def _run_pipeline(fn: Function, local_size: Sequence[int], target: str,
                   horizontal: bool, merge_uniform: bool,
-                  use_vml: bool) -> CompiledKernel:
-    """The actual pocl pipeline: region formation + target lowering."""
+                  use_vml: bool,
+                  plan_cache: Optional[CompilationCache] = None,
+                  _ir: Optional[str] = None) -> CompiledKernel:
+    """One compilation = the (cacheable) target-independent prefix + the
+    target-specific parallel mapping.  With a ``plan_cache``, the prefix —
+    the pass-manager pipeline producing the :class:`WorkGroupPlan` — is
+    looked up by :class:`PlanKey` and shared across targets and local
+    sizes of the same kernel; only the thin mapping layer runs per
+    target."""
     global _compiles_done
     with _compiles_lock:
         _compiles_done += 1
+    name = fn.name
+    if plan_cache is not None:
+        pkey = PlanKey.make(_ir if _ir is not None else ir_hash(fn),
+                            horizontal=horizontal,
+                            merge_uniform=merge_uniform)
+        plan = plan_cache.get_or_build_plan(
+            pkey, lambda: build_plan(fn, horizontal=horizontal,
+                                     merge_uniform=merge_uniform))
+    else:
+        plan = build_plan(fn, horizontal=horizontal,
+                          merge_uniform=merge_uniform)
     if target == "vector":
-        prog = WGProgram(fn, local_size, horizontal=horizontal,
+        prog = WGProgram(plan, local_size, horizontal=horizontal,
                          merge_uniform=merge_uniform, use_vml=use_vml)
     elif target == "loop":
-        prog = LoopWGProgram(fn, local_size, horizontal=horizontal,
+        prog = LoopWGProgram(plan, local_size, horizontal=horizontal,
                              merge_uniform=merge_uniform, use_vml=use_vml)
     elif target == "pallas":
         from .targets.pallas_target import PallasWGProgram
-        prog = PallasWGProgram(fn, local_size, horizontal=horizontal,
+        prog = PallasWGProgram(plan, local_size, horizontal=horizontal,
                                merge_uniform=merge_uniform, use_vml=use_vml)
     else:
         raise ValueError(f"unknown target {target!r}")
-    return CompiledKernel(prog, fn.name)
+    return CompiledKernel(prog, name)
 
 
 def compile_kernel(build: Callable[[], Function],
@@ -146,7 +173,8 @@ def compile_kernel(build: Callable[[], Function],
                    merge_uniform: bool = True,
                    use_vml: bool = False,
                    cache: Union[bool, CompilationCache, None] = True,
-                   device_key: Optional[str] = None):
+                   device_key: Optional[str] = None,
+                   plan_cache: Optional[CompilationCache] = None):
     """Compile ``build()`` for ``local_size`` on ``target``.
 
     ``cache=True`` uses the process-default compilation cache; pass a
@@ -158,6 +186,14 @@ def compile_kernel(build: Callable[[], Function],
     name), so heterogeneous devices tune independently.  Compiled code is
     device-independent here, so ``device_key`` never enters the
     compilation-cache key — only the tuning-table key.
+
+    ``plan_cache`` holds the *stage-level* cache for the
+    target-independent pipeline prefix (:class:`WorkGroupPlan`).  It
+    defaults to the kernel cache, so a cold multi-target sweep of one
+    kernel (the autotuner's) runs region formation exactly once; pass it
+    explicitly to share plans across compiles that bypass the kernel
+    cache (the autotuner does).  ``cache=False`` with no explicit
+    ``plan_cache`` recompiles everything, plan included.
     """
     opts = dict(horizontal=horizontal, merge_uniform=merge_uniform,
                 use_vml=use_vml)
@@ -168,6 +204,8 @@ def compile_kernel(build: Callable[[], Function],
         cache_obj = cache
     else:
         cache_obj = None
+    if plan_cache is None:
+        plan_cache = cache_obj
     fn = build()
     if target == "auto":
         from .autotune import (AutotunedKernel, DEFAULT_CANDIDATES,
@@ -175,9 +213,13 @@ def compile_kernel(build: Callable[[], Function],
         return AutotunedKernel(fn, build, local_size, opts,
                                DEFAULT_CANDIDATES, default_table(),
                                cache_obj, compile_kernel,
-                               device_key=device_key or "")
+                               device_key=device_key or "",
+                               plan_cache=plan_cache)
     if cache_obj is None:
-        return _run_pipeline(fn, local_size, target, **opts)
+        return _run_pipeline(fn, local_size, target, plan_cache=plan_cache,
+                             **opts)
     key = CacheKey.make(fn, local_size, target, **opts)
     return cache_obj.get_or_compile(
-        key, lambda: _run_pipeline(fn, local_size, target, **opts))
+        key, lambda: _run_pipeline(fn, local_size, target,
+                                   plan_cache=plan_cache, _ir=key.ir,
+                                   **opts))

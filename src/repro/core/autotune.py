@@ -28,9 +28,9 @@ import os
 import threading
 import time
 import warnings
-from typing import Callable, Dict, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Optional, Sequence, Tuple
 
-from .cache import CacheKey, CompilationCache, ir_hash
+from .cache import CacheKey, ir_hash
 from .ir import Function
 
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("loop", "vector", "pallas")
@@ -161,9 +161,14 @@ class AutotunedKernel:
                  cache: object,
                  compile_fn: Callable[..., object],
                  warmup: int = 1, repeats: int = 3,
-                 device_key: str = ""):
+                 device_key: str = "",
+                 plan_cache: Optional[object] = None):
         self.name = fn.name
         self.device_key = device_key   # tuning decisions are per device
+        # stage-level cache for the target-independent prefix: the sweep
+        # over candidate targets shares one WorkGroupPlan per kernel
+        # (docs/caching.md); defaults to the kernel cache
+        self.plan_cache = plan_cache if plan_cache is not None else cache
         self._ir = ir_hash(fn)
         self.local_size = tuple(int(x) for x in local_size)
         self.options = dict(options)
@@ -194,10 +199,13 @@ class AutotunedKernel:
                 k = self.cache.get_or_compile(
                     key, lambda: self._compile(
                         self._build, self.local_size, target=target,
-                        cache=None, **self.options))
+                        cache=None, plan_cache=self.plan_cache,
+                        **self.options))
             else:
                 k = self._compile(self._build, self.local_size,
-                                  target=target, cache=None, **self.options)
+                                  target=target, cache=None,
+                                  plan_cache=self.plan_cache,
+                                  **self.options)
             self._kernels[target] = k
         return k
 

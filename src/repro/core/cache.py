@@ -34,19 +34,54 @@ import os
 import pickle
 import threading
 from collections import OrderedDict
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from .ir import CondBranch, Function, Jump, Return, Value
 
 # bump when the compiler pipeline changes in ways that invalidate old
 # compiled programs (folded into every cache key, incl. disk entries)
-CACHE_SCHEMA_VERSION = 1
+# v2: pass-manager pipeline — compiled kernels embed a WorkGroupPlan
+CACHE_SCHEMA_VERSION = 2
 
 
 # ---------------------------------------------------------------------------
 # Canonical IR text + content hash
 # ---------------------------------------------------------------------------
+
+def canonical_value_names(fn: Function) -> Dict[int, str]:
+    """SSA value id -> first-reference canonical name (``v0``, ``v1``, ...)
+    in the exact order :func:`canonical_ir` prints references: scalar args
+    first, then per RPO block its phis (incomings, then the result), each
+    instruction's operands then result, and the branch condition.  Shared
+    by ``canonical_ir`` and ``WorkGroupPlan.describe`` so slot names in
+    plan dumps match the printed IR."""
+    names: Dict[int, str] = {}
+
+    def ref(v: object) -> None:
+        if isinstance(v, Value) and v.id not in names:
+            names[v.id] = f"v{len(names)}"
+
+    for a in fn.scalar_args:
+        ref(fn.arg_values[a.name])
+    for n in fn.rpo():
+        blk = fn.blocks[n]
+        for phi in blk.phis:
+            # canonical_ir renders the sorted incoming list before the
+            # "<result> = phi" text, so incomings take names first
+            for v in phi.incomings.values():
+                ref(v)
+            ref(phi.result)
+        for ins in blk.instrs:
+            for o in ins.operands:
+                ref(o)
+            if ins.result is not None:
+                ref(ins.result)
+        term = blk.terminator
+        if isinstance(term, CondBranch):
+            ref(term.cond)
+    return names
+
 
 def canonical_ir(fn: Function) -> str:
     """Render ``fn`` to a canonical text form.
@@ -58,11 +93,11 @@ def canonical_ir(fn: Function) -> str:
     """
     order = fn.rpo()
     bmap = {n: f"b{i}" for i, n in enumerate(order)}
-    vmap: Dict[int, str] = {}
+    vmap: Dict[int, str] = canonical_value_names(fn)
 
     def vref(v: object) -> str:
         if isinstance(v, Value):
-            if v.id not in vmap:
+            if v.id not in vmap:  # unreferenced-elsewhere safety net
                 vmap[v.id] = f"v{len(vmap)}"
             return f"{vmap[v.id]}:{v.dtype}"
         return f"lit({type(v).__name__},{v!r})"
@@ -128,6 +163,29 @@ class CacheKey:
         return hashlib.sha256(raw.encode()).hexdigest()
 
 
+@dataclass(frozen=True)
+class PlanKey:
+    """Identity of the *target-independent prefix* of a compilation: the
+    :class:`repro.core.passes.WorkGroupPlan`.  Deliberately narrower than
+    :class:`CacheKey` — no ``local_size`` (lane counts bind at target
+    construction), no ``target``, and only the options that feed the
+    middle-end (``horizontal``, ``merge_uniform``).  One plan entry is
+    therefore shared by every target and local size of a kernel: the
+    autotuner's 3-target sweep runs region formation once
+    (docs/caching.md §Stage-level plan caching)."""
+
+    ir: str                                   # canonical IR hash
+    options: Tuple[Tuple[str, object], ...]   # sorted middle-end options
+    schema: int = CACHE_SCHEMA_VERSION
+
+    PLAN_OPTIONS = ("horizontal", "merge_uniform")
+
+    @classmethod
+    def make(cls, ir: str, **options) -> "PlanKey":
+        opts = {k: v for k, v in options.items() if k in cls.PLAN_OPTIONS}
+        return cls(ir, tuple(sorted(opts.items())))
+
+
 # ---------------------------------------------------------------------------
 # The cache
 # ---------------------------------------------------------------------------
@@ -141,6 +199,10 @@ class CacheStats:
     disk_hits: int = 0
     disk_writes: int = 0
     tune_decisions: int = 0
+    # stage-level plan tier (target-independent prefix sharing)
+    plan_hits: int = 0
+    plan_misses: int = 0
+    plan_builds: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -160,11 +222,18 @@ class CompilationCache:
     """
 
     def __init__(self, capacity: int = 128,
-                 disk_dir: Optional[str] = None):
+                 disk_dir: Optional[str] = None,
+                 plan_capacity: Optional[int] = None):
         self.capacity = int(capacity)
+        self.plan_capacity = int(plan_capacity if plan_capacity is not None
+                                 else capacity)
         self.disk_dir = disk_dir
         self._entries: "OrderedDict[CacheKey, object]" = OrderedDict()
-        self._inflight: Dict[CacheKey, threading.Event] = {}
+        # stage-level tier: WorkGroupPlan per PlanKey, separate from the
+        # kernel LRU so plan sharing never evicts compiled kernels (and
+        # len(cache) keeps meaning "compiled kernels resident")
+        self._plans: "OrderedDict[PlanKey, object]" = OrderedDict()
+        self._inflight: Dict[object, threading.Event] = {}
         self._lock = threading.Lock()
         self.stats = CacheStats()
 
@@ -226,6 +295,50 @@ class CompilationCache:
                 if store_to_disk:
                     self._disk_store(key, ent)
 
+    # -- stage-level plan tier --------------------------------------------------
+    def get_or_build_plan(self, key: PlanKey,
+                          build_fn: Callable[[], object]):
+        """Memoize the target-independent pipeline prefix (the
+        :class:`~repro.core.passes.WorkGroupPlan`).  Memory-only — plans
+        are embedded in the compiled kernels the disk tier persists —
+        and single-flight, like :meth:`get_or_compile`."""
+        while True:
+            with self._lock:
+                ent = self._plans.get(key)
+                if ent is not None:
+                    self._plans.move_to_end(key)
+                    self.stats.plan_hits += 1
+                    return ent
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                ev.wait()
+                continue
+            try:
+                with self._lock:
+                    self.stats.plan_misses += 1
+                ent = build_fn()
+                with self._lock:
+                    self.stats.plan_builds += 1
+                    self._plans[key] = ent
+                    self._plans.move_to_end(key)
+                    while len(self._plans) > self.plan_capacity:
+                        self._plans.popitem(last=False)
+                return ent
+            finally:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                ev.set()
+
+    def plan_cache_size(self) -> int:
+        with self._lock:
+            return len(self._plans)
+
     # -- mutation --------------------------------------------------------------
     def _insert(self, key: CacheKey, ent: object) -> None:
         with self._lock:
@@ -238,6 +351,7 @@ class CompilationCache:
     def clear(self) -> None:
         with self._lock:
             self._entries.clear()
+            self._plans.clear()
 
     def __len__(self) -> int:
         with self._lock:

@@ -12,12 +12,12 @@ variables"), cutting context space; the saving is reported by
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Set, Tuple
 
 import numpy as np
 
-from .ir import CondBranch, Function, Instr, Value
-from .regions import Region, WGInfo
+from .ir import CondBranch, Function, Value
+from .regions import WGInfo
 from .uniformity import Uniformity
 
 

@@ -12,9 +12,8 @@ LLVM IR, so no pass trusts the builder's nesting.
 from __future__ import annotations
 
 import contextlib
-from typing import Dict, List, Optional, Sequence, Union
+from typing import Dict, List, Optional, Union
 
-import numpy as np
 
 from . import ir
 from .ir import (BufferArg, CondBranch, Function, Instr, Jump, Phi, Return,

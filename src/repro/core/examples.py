@@ -1,0 +1,69 @@
+"""Canonical exemplar kernels for the compiler pipeline.
+
+One definition shared by the dump tool (``tools/dump_pipeline.py`` →
+docs/compiler.md), the golden-IR snapshot tests
+(``tests/test_passes.py`` + ``tests/golden/``), and
+``benchmarks/bench_compile.py`` — so the kernel the docs walk through is
+*provably* the kernel the goldens pin.  Each builder is deterministic:
+calling it twice yields structurally identical CFGs (equal canonical IR).
+"""
+
+from __future__ import annotations
+
+from .dsl import KernelBuilder
+
+
+def build_reduce2():
+    """2-wide tree reduction with an in-loop barrier (the paper's
+    canonical barrier kernel shape): exercises normalize, §4.5 b-loop
+    barriers, out-of-SSA, region formation, and context slots."""
+    b = KernelBuilder("reduce2")
+    inp = b.arg_buffer("inp", "float32")
+    out = b.arg_buffer("out", "float32")
+    scratch = b.local_array("scratch", "float32", 2)
+    lid, gid, grp = b.local_id(0), b.global_id(0), b.group_id(0)
+    scratch[lid] = inp[gid]
+    b.barrier()
+    s = b.var(b.const(1), name="s")
+    with b.while_loop() as loop:
+        loop.cond(s.get() > 0)
+        with b.if_(lid < s.get()):
+            scratch[lid] = scratch[lid] + scratch[lid + s.get()]
+        b.barrier()
+        s.set(s.get() / 2)
+    with b.if_(lid == 0):
+        out[grp] = scratch[0]
+    return b.finish()
+
+
+def build_condbar():
+    """Loop-free conditional barrier (work-group-uniform condition): the
+    §4.3 Algorithm 2 tail-duplication case."""
+    b = KernelBuilder("condbar")
+    x = b.arg_buffer("x", "float32")
+    n = b.arg_scalar("n", "int32")
+    gid = b.global_id(0)
+    zero = b.const(0)
+    with b.if_(n > zero):
+        b.barrier()
+    x[gid] = x[gid] + 1.0
+    return b.finish()
+
+
+def build_dct():
+    """Uniform-trip-count inner loop (the §4.6/Fig. 9 DCT pattern):
+    exercises the horizontal parallelization pass."""
+    b = KernelBuilder("dct")
+    inp = b.arg_buffer("inp", "float32")
+    coef = b.arg_buffer("coef", "float32")
+    out = b.arg_buffer("out", "float32")
+    width = b.arg_scalar("width", "int32")
+    lid = b.local_id(0)
+    acc = b.var(0.0, name="acc")
+    k = b.var(b.const(0), name="k")
+    with b.while_loop() as loop:
+        loop.cond(k.get() < width)
+        acc.set(acc.get() + coef[k.get()] * inp[lid * width + k.get()])
+        k.set(k.get() + 1)
+    out[lid] = acc.get()
+    return b.finish()

@@ -15,7 +15,7 @@ loop over a fully vectorized body (the paper's DCT case study, §6.4).
 
 from __future__ import annotations
 
-from typing import Dict, List, Set
+from typing import Dict, Set
 
 from .ir import CondBranch, Function, Value
 from . import uniformity as ua

@@ -28,12 +28,11 @@ dispatches them dynamically.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Set, Tuple
+from typing import Dict, List, Optional, Set
 
 from . import ir
-from .ir import (BasicBlock, CondBranch, Function, Instr, Jump, Phi, Return,
-                 Value, create_subgraph, ensure_single_exit, replicate_cfg,
-                 split_at_barriers)
+from .ir import (
+    Function, Instr, create_subgraph, ensure_single_exit, replicate_cfg, split_at_barriers)
 
 ENTRY_BARRIER = "__entry_barrier__"
 
@@ -351,15 +350,15 @@ def form_regions(fn: Function) -> WGInfo:
 
 def lower_to_regions(fn: Function,
                      horizontal: bool = True) -> WGInfo:
-    """Run the complete pocl-style work-group transformation pipeline."""
-    from .horizontal import horizontal_candidates  # cycle-free import
+    """Compatibility wrapper: run the full pass-manager pipeline
+    (:mod:`repro.core.passes`) and return the region product only.
 
-    normalize(fn)
-    inject_loop_barriers(fn)
-    out_of_ssa(fn)
-    if horizontal:
-        cands = horizontal_candidates(fn)
-        if cands:
-            inject_loop_barriers(fn, extra_loop_headers=cands)
-    tail_duplicate(fn)
-    return form_regions(fn)
+    Note two differences from the pre-pass-manager version: ``fn`` is
+    mutated slightly further (``fold_constants`` deletes ``const``
+    instructions and inlines their literals), and the full plan —
+    uniformity facts, context slots, structured region plans, metadata —
+    is computed and discarded.  Callers that want the plan (every target
+    does) should use :func:`repro.core.passes.build_plan` instead."""
+    from .passes import build_plan  # cycle-free import
+
+    return build_plan(fn, horizontal=horizontal).wg

@@ -15,10 +15,9 @@ rest of the work-items.
 
 from __future__ import annotations
 
-from typing import Dict, Optional, Sequence
+from typing import Dict
 
 import jax.numpy as jnp
-import numpy as np
 from jax import lax
 
 from .vector import LaneExec, WGProgram

@@ -18,8 +18,7 @@ regions (schedules with conditional barriers / b-loops).
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
+from typing import Dict, List, Optional, Sequence, Set, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,137 +26,10 @@ import numpy as np
 from jax import lax
 
 from .. import ir
-from ..context import ContextPlan, Slot, build_context_plan, fold_constants
-from ..ir import CondBranch, Function, Instr, Jump, Return, Value
-from ..regions import Region, WGInfo, lower_to_regions
-from .. import uniformity as ua
-
-
-# ---------------------------------------------------------------------------
-# Structured execution plan of a region sub-CFG
-# ---------------------------------------------------------------------------
-
-@dataclasses.dataclass
-class BlockNode:
-    name: str
-
-
-@dataclasses.dataclass
-class LoopNode:
-    header: str
-    body_entry: str
-    exit_target: str            # header's out-of-loop successor
-    body_items: List[object]
-    blocks: Set[str]            # all loop blocks incl. header
-
-
-def _sccs(nodes: Set[str], succs: Dict[str, List[str]]) -> List[List[str]]:
-    """Tarjan SCCs (iterative).  Returned in reverse topological order."""
-    index: Dict[str, int] = {}
-    low: Dict[str, int] = {}
-    on_stack: Set[str] = set()
-    stack: List[str] = []
-    out: List[List[str]] = []
-    counter = [0]
-
-    for root in sorted(nodes):
-        if root in index:
-            continue
-        work = [(root, iter(succs.get(root, [])))]
-        index[root] = low[root] = counter[0]
-        counter[0] += 1
-        stack.append(root)
-        on_stack.add(root)
-        while work:
-            v, it = work[-1]
-            advanced = False
-            for w in it:
-                if w not in nodes:
-                    continue
-                if w not in index:
-                    index[w] = low[w] = counter[0]
-                    counter[0] += 1
-                    stack.append(w)
-                    on_stack.add(w)
-                    work.append((w, iter(succs.get(w, []))))
-                    advanced = True
-                    break
-                elif w in on_stack:
-                    low[v] = min(low[v], index[w])
-            if not advanced:
-                work.pop()
-                if work:
-                    pv = work[-1][0]
-                    low[pv] = min(low[pv], low[v])
-                if low[v] == index[v]:
-                    scc = []
-                    while True:
-                        w = stack.pop()
-                        on_stack.discard(w)
-                        scc.append(w)
-                        if w == v:
-                            break
-                    out.append(scc)
-    return out
-
-
-def structure_region(fn: Function, entry: str, blocks: Set[str]) -> List[object]:
-    """Collapse cyclic SCCs of the region sub-CFG to loop supernodes and
-    order the resulting DAG topologically (reachable-from-entry only)."""
-    succs = {b: [s for s in fn.blocks[b].successors() if s in blocks]
-             for b in blocks}
-    preds: Dict[str, List[str]] = {b: [] for b in blocks}
-    for b, ss in succs.items():
-        for s in ss:
-            preds[s].append(b)
-
-    sccs = _sccs(blocks, succs)  # reverse topological order
-    scc_of: Dict[str, int] = {}
-    for i, scc in enumerate(sccs):
-        for b in scc:
-            scc_of[b] = i
-
-    # reachability from the entry's SCC over the SCC DAG
-    reach: Set[int] = set()
-    stack = [scc_of[entry]]
-    while stack:
-        i = stack.pop()
-        if i in reach:
-            continue
-        reach.add(i)
-        for b in sccs[i]:
-            for s in succs[b]:
-                if scc_of[s] != i:
-                    stack.append(scc_of[s])
-
-    items: List[object] = []
-    for i in reversed(range(len(sccs))):  # topological order
-        if i not in reach:
-            continue
-        scc = sccs[i]
-        sset = set(scc)
-        cyclic = len(scc) > 1 or any(b in succs[b] for b in scc)
-        if not cyclic:
-            items.append(BlockNode(scc[0]))
-            continue
-        # loop supernode: unique header = the block entered from outside
-        heads = {b for b in scc
-                 if b == entry or any(p not in sset for p in preds[b])}
-        assert len(heads) == 1, \
-            f"irreducible loop in region (headers {heads})"
-        header = heads.pop()
-        hdr = fn.blocks[header]
-        term = hdr.terminator
-        assert isinstance(term, CondBranch), \
-            f"loop header {header} must end in a conditional branch"
-        inside = [s for s in term.successors() if s in sset]
-        outside = [s for s in term.successors() if s not in sset]
-        assert len(inside) == 1 and len(outside) == 1, \
-            f"loop {header} not in canonical while form"
-        body_items = structure_region(fn, inside[0], sset - {header})
-        items.append(LoopNode(header, inside[0], outside[0], body_items,
-                              sset))
-    return items
+from ..context import ContextPlan
+from ..ir import CondBranch, Function, Instr, Jump, Value
+from ..passes import BlockNode, LoopNode, WorkGroupPlan, build_plan
+from ..regions import Region, WGInfo
 
 
 # ---------------------------------------------------------------------------
@@ -592,9 +464,18 @@ _VML_OPS = {"exp": "exp", "log": "log", "sin": "sin", "cos": "cos",
 
 class WGProgram:
     """A compiled work-group function for a fixed local size (the paper
-    compiles one work-group function per local size at enqueue time, §4.1)."""
+    compiles one work-group function per local size at enqueue time, §4.1).
 
-    def __init__(self, fn: Function, local_size: Sequence[int],
+    This class is purely the target-specific *parallel mapping* half of
+    the pipeline: it consumes a prebuilt, shared
+    :class:`~repro.core.passes.WorkGroupPlan` (regions, schedule,
+    uniformity facts, context slots, parallelism metadata) and binds it to
+    a lane count.  It performs no region formation or analysis of its own —
+    passing a raw :class:`Function` is a compatibility path that builds the
+    plan through the pass manager first."""
+
+    def __init__(self, plan: "WorkGroupPlan | Function",
+                 local_size: Sequence[int],
                  horizontal: bool = True, merge_uniform: bool = True,
                  use_vml: bool = False):
         self.lsz = tuple(local_size) + (1,) * (3 - len(local_size))
@@ -602,17 +483,15 @@ class WGProgram:
         self.use_vml = use_vml
         self.horizontal = horizontal
 
-        self.wg: WGInfo = lower_to_regions(fn, horizontal=horizontal)
-        if horizontal:
-            self.uni = ua.analyze(fn)
-        else:
-            self.uni = _AllVarying()
-        fold_constants(fn)
-        self.plan: ContextPlan = build_context_plan(
-            self.wg, self.uni, merge_uniform=merge_uniform)
-        self.region_plans = {
-            bar: structure_region(fn, r.entry, r.blocks)
-            for bar, r in self.wg.regions.items() if r.entry is not None}
+        if not isinstance(plan, WorkGroupPlan):
+            plan = build_plan(plan, horizontal=horizontal,
+                              merge_uniform=merge_uniform)
+        self.wgplan: WorkGroupPlan = plan
+        self.wg: WGInfo = plan.wg
+        self.uni = plan.uni
+        self.plan: ContextPlan = plan.ctx
+        self.region_plans = plan.region_plans
+        self.md = plan.md
         self.order = self.wg.order
         self.rid_of = {b: i for i, b in enumerate(self.order)}
         self.K = len(self.order)
@@ -744,20 +623,3 @@ class WGProgram:
                 lo, hi, lambda g, bt: one_group(jnp.int32(g), bt),
                 bufs_t)
         return dict(zip(global_names, bufs_t))
-
-
-class _AllVarying:
-    """Degraded uniformity used when the §4.6 analysis is disabled: every
-    value is treated as work-item-variant (the paper's no-pass baseline)."""
-
-    def value_uniform(self, v) -> bool:
-        return False
-
-    def value_id_uniform(self, vid) -> bool:
-        return False
-
-    def vreg_uniform(self, name) -> bool:
-        return False
-
-    def block_uniform(self, name) -> bool:
-        return False

@@ -22,7 +22,7 @@ from __future__ import annotations
 from typing import Dict, List, Set
 
 from . import ir
-from .ir import CondBranch, Function, Instr, Value
+from .ir import CondBranch, Function, Value
 
 UNIFORM_ID_OPS = {"group_id", "local_size", "num_groups", "global_size"}
 VARYING_ID_OPS = {"local_id", "global_id"}
@@ -77,6 +77,24 @@ def control_deps(fn: Function) -> Dict[str, Set[str]]:
                 if b in pdom.get(s, set()) and b not in pdom.get(c, set()):
                     cd[b].add(c)
     return cd
+
+
+class AllVarying:
+    """Degraded uniformity used when the §4.6 analysis is disabled: every
+    value is treated as work-item-variant (the paper's no-pass baseline).
+    Drop-in for :class:`Uniformity` in the context planner and targets."""
+
+    def value_uniform(self, v) -> bool:
+        return False
+
+    def value_id_uniform(self, vid) -> bool:
+        return False
+
+    def vreg_uniform(self, name) -> bool:
+        return False
+
+    def block_uniform(self, name) -> bool:
+        return False
 
 
 class Uniformity:

@@ -14,10 +14,8 @@ traffic explicit and predictable at 1000+ node scale.
 
 from __future__ import annotations
 
-import functools
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
 

@@ -9,9 +9,7 @@ same call site, target-specific implementation.
 
 from __future__ import annotations
 
-from typing import Optional
 
-import jax.numpy as jnp
 
 from . import ref
 from .decode_attention import decode_attention as _dec_pallas

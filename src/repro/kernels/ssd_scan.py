@@ -14,7 +14,7 @@ under the ~16 MB VMEM budget while the (L,L) and (L,P) products fill the MXU.
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

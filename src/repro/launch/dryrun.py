@@ -27,7 +27,7 @@ import traceback
 
 import jax
 import numpy as np
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import NamedSharding
 
 from repro import configs
 from repro.distributed.sharding import (BASELINE_RULES, DECODE_RULES,

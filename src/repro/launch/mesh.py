@@ -8,7 +8,6 @@ see the single real CPU device.
 
 from __future__ import annotations
 
-from typing import Optional, Tuple
 
 import jax
 from jax.sharding import Mesh

@@ -20,7 +20,7 @@ import dataclasses
 import re
 
 import numpy as np
-from typing import Dict, List, Optional, Tuple
+from typing import Dict
 
 from .mesh import HW
 

@@ -15,7 +15,6 @@ import argparse
 import json
 import time
 
-import jax
 
 from repro import configs
 from repro.data import data_iterator

@@ -11,7 +11,6 @@ head.  Peak extra memory: one (B, S, C) chunk.
 from __future__ import annotations
 
 import functools
-from typing import Tuple
 
 import jax
 import jax.numpy as jnp

@@ -15,7 +15,6 @@ from __future__ import annotations
 
 import functools
 import math
-from typing import NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -9,13 +9,11 @@ layer, mirroring pocl's device-specific builtin libraries.
 
 from __future__ import annotations
 
-import functools
 import math
 from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.distributed.sharding import ShardingRules, constrain
 from repro.kernels import ops

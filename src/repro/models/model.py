@@ -8,9 +8,8 @@ O(sqrt-ish) for training.  All sharding comes from the logical-axis rules.
 
 from __future__ import annotations
 
-import functools
 import math
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp

@@ -10,7 +10,7 @@ SGD/Adam convergence unbiased in the long run.  8x less DP traffic for
 
 from __future__ import annotations
 
-from typing import Any, Dict, Tuple
+from typing import Any, Tuple
 
 import jax
 import jax.numpy as jnp

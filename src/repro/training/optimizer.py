@@ -8,7 +8,7 @@ state (ZeRO-style along existing shardings) for free.
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, NamedTuple, Optional
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp

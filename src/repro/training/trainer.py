@@ -14,16 +14,13 @@ injectable failure hook in the loop exercises the restart path in tests.
 from __future__ import annotations
 
 import dataclasses
-import time
-from typing import Any, Callable, Dict, Optional
+from typing import Callable, Dict, Optional
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-from repro.distributed.sharding import (ShardingRules, adapt_rules_for,
-                                        logical_to_sharding)
+from repro.distributed.sharding import ShardingRules
 from repro.models import (ModelConfig, init_params, abstract_params,
                           loss_fn, model_defs)
 from repro.models import params as PP

@@ -245,7 +245,7 @@ def test_autotuner_pin_bypasses_measurement(tmp_path):
 
 
 def test_compile_kernel_target_auto_end_to_end(tmp_path, monkeypatch):
-    from repro.core import autotune, set_default_table
+    from repro.core import set_default_table
     set_default_table(TuningTable(str(tmp_path / "t.json")))
     try:
         k = compile_kernel(build_vecadd, (8,), target="auto",

@@ -4,10 +4,9 @@ collectives, straggler monitor, elastic re-mesh planner."""
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
-from repro.training.compression import (compress, decompress, init_feedback,
-                                        compress_grads, decompress_grads)
+from repro.training.compression import (
+    compress, decompress, compress_grads, decompress_grads)
 from repro.training.straggler import (StragglerMonitor, StragglerConfig,
                                       plan_elastic_mesh)
 from repro.distributed.collectives import hierarchical_psum

@@ -2,7 +2,6 @@
 pure-jnp oracle (interpret=True executes the kernel body on CPU)."""
 
 import numpy as np
-import jax
 import jax.numpy as jnp
 import pytest
 

@@ -1,0 +1,335 @@
+"""Pass-manager pipeline tests (docs/compiler.md).
+
+Covers the middle-end acceptance contract: golden canonical-IR snapshots
+after every CFG-mutating pass, structural verifier positives/negatives
+(malformed CFG -> VerifierError naming the pass), requires/establishes
+enforcement, ParallelRegionMD facts, and stage-level plan sharing — the
+autotuner's 3-target sweep runs region formation exactly once per kernel
+and all targets produce bitwise-identical results from one shared
+WorkGroupPlan.
+
+Regenerate the golden files after intentional pipeline changes:
+
+  REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_passes.py
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import (CompilationCache, PassManager, PlanKey,
+                        VerifierError, canonical_ir, compile_count,
+                        compile_kernel, plan_count, run_ndrange, verify_ir)
+from repro.core.ir import (BasicBlock, CondBranch, Function, Instr, Jump,
+                           Phi, Return, Value)
+from repro.core.examples import build_condbar, build_dct, build_reduce2
+from repro.core.passes import DEFAULT_PASSES, Pass, build_plan
+from repro.core.regions import lower_to_regions, WGInfo
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+
+# --------------------------------------------------------------------------
+# exemplar kernels (deterministic builds -> stable canonical IR)
+# --------------------------------------------------------------------------
+
+GOLDEN_KERNELS = {"reduce2": build_reduce2, "condbar": build_condbar,
+                  "dct": build_dct}
+
+
+def pipeline_trace(build_fn) -> str:
+    """Canonical IR after the input + every CFG-mutating pass, plus the
+    final plan summary — the golden-snapshot surface."""
+    fn = build_fn()
+    lines = ["== input ==", canonical_ir(fn)]
+
+    def on_pass(p, st):
+        if p.mutates_cfg:
+            lines.append(f"== after {p.name} ==")
+            lines.append(canonical_ir(st.fn))
+
+    pm = PassManager(verify=True, on_pass=on_pass)
+    plan = pm.run(fn)
+    lines.append("== plan ==")
+    lines.append(plan.describe())
+    return "\n".join(lines) + "\n"
+
+
+# --------------------------------------------------------------------------
+# golden-IR snapshots
+# --------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(GOLDEN_KERNELS))
+def test_golden_ir_snapshots(name):
+    got = pipeline_trace(GOLDEN_KERNELS[name])
+    path = os.path.join(GOLDEN_DIR, f"{name}.txt")
+    if os.environ.get("REPRO_UPDATE_GOLDEN"):
+        os.makedirs(GOLDEN_DIR, exist_ok=True)
+        with open(path, "w") as f:
+            f.write(got)
+        pytest.skip(f"golden updated: {path}")
+    assert os.path.exists(path), \
+        f"golden file missing; run with REPRO_UPDATE_GOLDEN=1 ({path})"
+    with open(path) as f:
+        want = f.read()
+    assert got == want, (
+        f"canonical IR drifted from golden snapshot {path}; if the "
+        f"pipeline change is intentional, regenerate with "
+        f"REPRO_UPDATE_GOLDEN=1")
+
+
+def test_trace_is_deterministic():
+    assert pipeline_trace(build_reduce2) == pipeline_trace(build_reduce2)
+
+
+# --------------------------------------------------------------------------
+# structural verifier
+# --------------------------------------------------------------------------
+
+def _tiny_fn() -> Function:
+    fn = Function("tiny")
+    blk = BasicBlock("entry")
+    blk.terminator = Return()
+    fn.blocks["entry"] = blk
+    fn.entry = "entry"
+    return fn
+
+
+def test_verifier_accepts_well_formed():
+    verify_ir(_tiny_fn(), ["single-exit"], pass_name="test")
+
+
+def test_verifier_missing_terminator():
+    fn = _tiny_fn()
+    fn.blocks["entry"].terminator = None
+    with pytest.raises(VerifierError, match="no terminator"):
+        verify_ir(fn, pass_name="normalize")
+
+
+def test_verifier_edge_to_missing_block():
+    fn = _tiny_fn()
+    fn.blocks["entry"].terminator = Jump("nowhere")
+    with pytest.raises(VerifierError, match="missing block"):
+        verify_ir(fn, pass_name="normalize")
+
+
+def test_verifier_unreachable_block():
+    fn = _tiny_fn()
+    orphan = BasicBlock("orphan")
+    orphan.terminator = Return()
+    fn.blocks["orphan"] = orphan
+    with pytest.raises(VerifierError, match="unreachable"):
+        verify_ir(fn, pass_name="normalize")
+
+
+def test_verifier_multiple_exits_when_single_required():
+    fn = _tiny_fn()
+    other = BasicBlock("other")
+    other.terminator = Return()
+    fn.blocks["other"] = other
+    fn.blocks["entry"].terminator = CondBranch(Value("bool"), "other",
+                                               "entry2")
+    e2 = BasicBlock("entry2")
+    e2.terminator = Return()
+    fn.blocks["entry2"] = e2
+    with pytest.raises(VerifierError, match="single exit"):
+        verify_ir(fn, ["single-exit"], pass_name="normalize")
+
+
+def test_verifier_barrier_not_isolated():
+    fn = _tiny_fn()
+    fn.blocks["entry"].instrs = [Instr("barrier", [], None),
+                                 Instr("local_id", [], Value("int32"),
+                                       {"dim": 0})]
+    with pytest.raises(VerifierError, match="not isolated"):
+        verify_ir(fn, ["barriers-isolated"], pass_name="normalize")
+
+
+def test_verifier_phi_in_phi_free_ir():
+    fn = _tiny_fn()
+    fn.blocks["entry"].phis = [Phi(Value("int32"), {})]
+    with pytest.raises(VerifierError, match="phi"):
+        verify_ir(fn, ["phi-free"], pass_name="out_of_ssa")
+
+
+def test_verifier_vreg_dtype_conflict():
+    fn = _tiny_fn()
+    fn.blocks["entry"].instrs = [
+        Instr("vreg_read", [], Value("int32"),
+              {"vreg": "r.x", "dtype": "int32"}),
+        Instr("vreg_write", [1.0], None,
+              {"vreg": "r.x", "dtype": "float32"})]
+    with pytest.raises(VerifierError, match="vreg"):
+        verify_ir(fn, ["phi-free"], pass_name="out_of_ssa")
+
+
+def test_verifier_error_names_the_pass():
+    """A malformed CFG produced mid-pipeline is attributed to the pass
+    that emitted it."""
+
+    def corrupt(st):
+        # point a terminator at a block that does not exist
+        first = st.fn.blocks[st.fn.entry]
+        first.terminator = Jump("does_not_exist")
+
+    bad = Pass("corrupt_cfg", corrupt)
+    pm = PassManager(passes=(DEFAULT_PASSES[0], bad), verify=True)
+    with pytest.raises(VerifierError, match="corrupt_cfg") as ei:
+        pm.run(build_condbar())
+    assert ei.value.pass_name == "corrupt_cfg"
+
+
+def test_manager_enforces_requires():
+    needs = Pass("needs_phi_free", lambda st: None,
+                 requires=("phi-free",))
+    pm = PassManager(passes=(needs,), verify=False)
+    with pytest.raises(VerifierError, match="needs_phi_free"):
+        pm.run(build_condbar())
+
+
+def test_misordered_pipeline_fails_with_attribution():
+    """Analysis products are contract properties too: consuming a product
+    before its producer ran raises an attributed VerifierError, not an
+    AttributeError on a missing artifact."""
+    by_name = {p.name: p for p in DEFAULT_PASSES}
+    misordered = [by_name[n] for n in
+                  ("normalize", "inject_loop_barriers", "out_of_ssa",
+                   "tail_duplicate", "structure_regions")]
+    pm = PassManager(passes=misordered, verify=False)
+    with pytest.raises(VerifierError, match="structure_regions"):
+        pm.run(build_condbar())
+
+
+def test_default_pipeline_verifies_clean():
+    """Every pass of the default pipeline upholds the invariants it and
+    its predecessors declare, on all exemplar kernels."""
+    for name, build in GOLDEN_KERNELS.items():
+        PassManager(verify=True).run(build())
+
+
+# --------------------------------------------------------------------------
+# WorkGroupPlan + ParallelRegionMD
+# --------------------------------------------------------------------------
+
+def test_plan_product_is_complete():
+    plan = build_plan(build_reduce2())
+    assert plan.wg.regions and plan.order
+    assert set(plan.md) == set(plan.wg.regions)
+    assert set(plan.region_plans) <= set(plan.wg.regions)
+    assert plan.pass_times and all(t >= 0 for t in plan.pass_times.values())
+    # md also rides on the regions themselves (IR-attached metadata)
+    for bar, r in plan.wg.regions.items():
+        assert r.attrs["md"] is plan.md[bar]
+
+
+def test_parallel_region_md_facts():
+    # every region's WI loop is parallel by construction (§4: the
+    # llvm.mem.parallel_loop_access analogue)
+    plan = build_plan(build_reduce2())
+    assert all(m.wi_parallel for m in plan.md.values())
+    # the b-loop implicit barriers mark their regions lockstep (§4.5)
+    assert any(m.lockstep for m in plan.md.values())
+    # barrier branches are WG-uniform here, so exits are provably uniform
+    assert all(m.uniform_exits for m in plan.md.values())
+
+    # horizontal parallelization (§4.6) manufactures lockstep regions out
+    # of a barrier-free kernel
+    with_h = build_plan(build_dct(), horizontal=True)
+    without_h = build_plan(build_dct(), horizontal=False)
+    assert any(m.lockstep for m in with_h.md.values())
+    assert not any(m.lockstep for m in without_h.md.values())
+    assert len(with_h.wg.regions) > len(without_h.wg.regions)
+
+
+def test_lower_to_regions_compat_wrapper():
+    """The legacy entry point still returns a WGInfo (now produced by the
+    pass manager) and counts as one pipeline run."""
+    p0 = plan_count()
+    wg = lower_to_regions(build_condbar())
+    assert isinstance(wg, WGInfo)
+    assert plan_count() - p0 == 1
+    assert len(wg.regions) >= 2
+
+
+# --------------------------------------------------------------------------
+# stage-level plan sharing
+# --------------------------------------------------------------------------
+
+def _bufs(n=8):
+    # reduce2 is a 2-wide reduction: local size 2, one output per group
+    rng = np.random.default_rng(7)
+    return {"inp": rng.standard_normal(n).astype(np.float32),
+            "out": np.zeros(n // 2, np.float32)}
+
+
+def test_autotune_sweep_builds_plan_once():
+    """Acceptance criterion: a cold target="auto" compile of one kernel
+    runs the target-independent prefix exactly once across the 3-target
+    sweep (stage counter == 1), while each target still lowers once."""
+    from repro.core import TuningTable, set_default_table
+    cache = CompilationCache()
+    set_default_table(TuningTable())
+    try:
+        p0, c0 = plan_count(), compile_count()
+        k = compile_kernel(build_reduce2, (2,), target="auto", cache=cache)
+        bufs = _bufs()
+        out = k(bufs, (8,))
+        assert plan_count() - p0 == 1, \
+            "region formation re-ran during the autotune sweep"
+        assert compile_count() - c0 == 3, "expected one lowering per target"
+        assert cache.stats.plan_builds == 1
+        assert cache.stats.plan_hits == 2
+        ref = run_ndrange(build_reduce2(), (8,), (2,),
+                          {k2: v.copy() for k2, v in _bufs().items()})
+        np.testing.assert_allclose(out["out"], ref["out"], rtol=1e-5)
+    finally:
+        set_default_table(None)
+
+
+def test_plan_shared_across_local_sizes():
+    """PlanKey has no local_size: re-specializing a kernel for another
+    work-group size reuses the plan (only target lowering re-runs)."""
+    cache = CompilationCache()
+    compile_kernel(build_condbar, (8,), cache=cache)
+    compile_kernel(build_condbar, (16,), cache=cache)
+    assert cache.stats.plan_builds == 1 and cache.stats.plan_hits == 1
+    assert cache.stats.compiles == 2
+
+
+def test_plan_key_excludes_target_options():
+    k1 = PlanKey.make("abc", horizontal=True, merge_uniform=True,
+                      use_vml=False)
+    k2 = PlanKey.make("abc", horizontal=True, merge_uniform=True,
+                      use_vml=True)
+    assert k1 == k2, "use_vml is target-level; must not split plans"
+    k3 = PlanKey.make("abc", horizontal=False, merge_uniform=True)
+    assert k1 != k3, "horizontal changes the middle-end product"
+
+
+def test_all_targets_bitwise_identical_from_shared_plan():
+    """All three targets consume one WorkGroupPlan object and must agree
+    bitwise — the plan is the single source of truth for regions,
+    schedule, uniformity and context layout."""
+    cache = CompilationCache()
+    kernels = {t: compile_kernel(build_reduce2, (2,), target=t, cache=cache)
+               for t in ("loop", "vector", "pallas")}
+    plans = {t: k.work_group_plan for t, k in kernels.items()}
+    assert plans["loop"] is plans["vector"] is plans["pallas"], \
+        "targets must share one plan object"
+    assert cache.stats.plan_builds == 1
+
+    outs = {t: k(_bufs(), (8,)) for t, k in kernels.items()}
+    for t in ("vector", "pallas"):
+        for name in outs["loop"]:
+            assert np.array_equal(outs["loop"][name], outs[t][name]), \
+                f"{t} diverged bitwise from loop on {name}"
+
+
+def test_verifier_runs_under_env_flag(monkeypatch):
+    monkeypatch.setenv("REPRO_VERIFY_IR", "1")
+    pm = PassManager()
+    assert pm.verify
+    pm.run(build_reduce2())  # must not raise
+    monkeypatch.setenv("REPRO_VERIFY_IR", "0")
+    assert not PassManager().verify

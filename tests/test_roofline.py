@@ -1,12 +1,10 @@
 """Roofline extraction: HLO collective/convert parsers, flop models,
 ideal-byte accounting, and the rederive path."""
 
-import numpy as np
 import pytest
 
 from repro import configs
 from repro.launch import roofline as RL
-from repro.launch.mesh import HW
 from repro.models.config import TRAIN_4K, PREFILL_32K, DECODE_32K
 
 

@@ -5,7 +5,6 @@ import time
 import numpy as np
 import jax
 import jax.numpy as jnp
-import pytest
 
 from repro import configs
 from repro.data import synth_batch, data_iterator

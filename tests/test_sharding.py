@@ -5,13 +5,11 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 import pytest
-from jax.sharding import Mesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro import configs
-from repro.distributed.sharding import (BASELINE_RULES, DECODE_RULES,
-                                        LONG_DECODE_RULES, ShardingRules,
-                                        adapt_rules_for, divisible,
-                                        prune_to_mesh)
+from repro.distributed.sharding import (
+    BASELINE_RULES, DECODE_RULES, LONG_DECODE_RULES, adapt_rules_for, divisible, prune_to_mesh)
 from repro.models import model_defs, cache_logical_axes, init_caches
 from repro.models.params import param_pspecs, ParamDef
 

@@ -2,7 +2,6 @@
 restart, failure injection, and actual loss descent on the copy task."""
 
 import os
-import shutil
 
 import numpy as np
 import jax
@@ -12,10 +11,8 @@ import pytest
 from repro import configs
 from repro.data import synth_batch, data_iterator
 from repro.distributed.sharding import BASELINE_RULES
-from repro.training import (OptimizerConfig, TrainConfig, Trainer,
-                            adamw_update, init_opt_state, lr_schedule,
-                            global_norm, make_train_step, init_state,
-                            abstract_state, checkpoint)
+from repro.training import (
+    OptimizerConfig, TrainConfig, Trainer, adamw_update, init_opt_state, lr_schedule, make_train_step, init_state, abstract_state, checkpoint)
 
 
 def test_lr_schedule_shape():

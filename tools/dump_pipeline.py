@@ -1,92 +1,77 @@
 """Regenerate the stage-by-stage IR dumps shown in docs/compiler.md.
 
-Runs the pocl pipeline one stage at a time on a small barrier kernel and
-prints the canonical IR after each stage, plus the formed regions and
-schedule.  docs/compiler.md embeds this output; re-run after compiler
-changes:
+Drives the compiler middle-end through the :class:`PassManager`
+(``repro.core.passes``) with its per-pass dump hook — the pass list is
+*enumerated from the manager*, so this tool stays correct when passes are
+added or reordered.  For every CFG-mutating pass the canonical IR after
+the pass is printed; analysis passes print their product (regions +
+schedule, uniformity-informed metadata, context slots).  docs/compiler.md
+embeds this output; re-run after compiler changes:
 
   PYTHONPATH=src python tools/dump_pipeline.py
 """
 
-from repro.core import KernelBuilder, canonical_ir
-from repro.core.regions import (form_regions, inject_loop_barriers,
-                                normalize, out_of_ssa, tail_duplicate)
+from repro.core import canonical_ir
+from repro.core.examples import build_condbar, build_reduce2
+from repro.core.passes import PassManager
 
 
-def build_reduce2():
-    """A 2-wide tree reduction: load to local, barrier, fold, barrier —
-    small enough to read, big enough to exercise every stage."""
-    b = KernelBuilder("reduce2")
-    inp = b.arg_buffer("inp", "float32")
-    out = b.arg_buffer("out", "float32")
-    scratch = b.local_array("scratch", "float32", 2)
-    lid, gid, grp = b.local_id(0), b.global_id(0), b.group_id(0)
-    scratch[lid] = inp[gid]
-    b.barrier()
-    s = b.var(b.const(1), name="s")
-    with b.while_loop() as loop:
-        loop.cond(s.get() > 0)
-        with b.if_(lid < s.get()):
-            scratch[lid] = scratch[lid] + scratch[lid + s.get()]
-        b.barrier()
-        s.set(s.get() / 2)
-    with b.if_(lid == 0):
-        out[grp] = scratch[0]
-    return b.finish()
+def run_and_dump(fn, verbose_cfg: bool = True) -> None:
+    """Run the default pipeline on ``fn``, printing after every pass."""
+    last_ir = [canonical_ir(fn)]
+    print("\n### input (KernelBuilder DSL lowering to SSA CFG)\n")
+    print(last_ir[0])
 
+    def on_pass(p, st) -> None:
+        ref = f" ({p.paper})" if p.paper else ""
+        if p.mutates_cfg:
+            text = canonical_ir(st.fn)
+            if text == last_ir[0]:
+                print(f"\n### after {p.name}{ref}: no change\n")
+                return
+            last_ir[0] = text
+            print(f"\n### after {p.name}{ref}\n")
+            if verbose_cfg:
+                print(text)
+        else:
+            print(f"\n### after {p.name}{ref}\n")
+            if p.name == "form_regions":
+                print(f"schedule (RPO, entry first): {st.wg.order}")
+                print(f"linear chain: {st.wg.is_chain()}")
+                for bar in st.wg.order:
+                    r = st.wg.regions[bar]
+                    print(f"region @{bar}: entry={r.entry} "
+                          f"blocks={sorted(r.blocks) if r.blocks else []}")
+            elif p.name == "context_planning":
+                for s in st.ctx.slots:
+                    print(f"slot {s.name}: {s.dtype} "
+                          f"{'uniform (merged)' if s.uniform else 'per-WI'}")
+                if not st.ctx.slots:
+                    print("(no cross-region values: zero context slots)")
+            elif p.name == "annotate_parallel_md":
+                for bar in st.wg.order:
+                    print(st.md[bar].describe())
+            else:
+                print("(analysis pass)")
 
-def build_condbar():
-    """A loop-free conditional barrier (work-group-uniform condition):
-    the Algorithm 2 tail-duplication case."""
-    b = KernelBuilder("condbar")
-    x = b.arg_buffer("x", "float32")
-    n = b.arg_scalar("n", "int32")
-    gid = b.global_id(0)
-    zero = b.const(0)
-    with b.if_(n > zero):
-        b.barrier()
-    x[gid] = x[gid] + 1.0
-    return b.finish()
-
-
-def stage(title: str, fn) -> None:
-    print(f"\n### after {title}\n")
-    print(canonical_ir(fn))
+    pm = PassManager(verify=True, on_pass=on_pass)
+    print(f"\npipeline passes: {pm.pass_names()}")
+    plan = pm.run(fn)
+    print("\n### per-pass timings (ms)\n")
+    for name, dt in plan.pass_times.items():
+        print(f"  {name:22s} {dt * 1e3:7.3f}")
 
 
 def main() -> None:
-    fn = build_reduce2()
-    stage("KernelBuilder (DSL lowering to SSA CFG)", fn)
-    normalize(fn)
-    stage("normalize (§4.3 Alg. 1: single exit, implicit entry/exit "
-          "barriers, barrier isolation)", fn)
-    inject_loop_barriers(fn)
-    stage("inject_loop_barriers (§4.5 b-loop implicit barriers)", fn)
-    out_of_ssa(fn)
-    stage("out_of_ssa (§4.7 prep: phis -> virtual registers)", fn)
-    tail_duplicate(fn)
-    stage("tail_duplicate (§4.3 Alg. 2)", fn)
-    wg = form_regions(fn)
-    print("\n### form_regions (§4.3 Def. 1)\n")
-    print(f"schedule (RPO, entry first): {wg.order}")
-    print(f"linear chain: {wg.is_chain()}")
-    for bar in wg.order:
-        r = wg.regions[bar]
-        print(f"region @{bar}: entry={r.entry} "
-              f"blocks={sorted(r.blocks) if r.blocks else []}")
+    print("=" * 72)
+    print("tree-reduction kernel (b-loop, §4.5)")
+    print("=" * 72)
+    run_and_dump(build_reduce2())
 
     print("\n" + "=" * 72)
     print("conditional-barrier kernel (tail duplication, Alg. 2)")
     print("=" * 72)
-    fn2 = build_condbar()
-    normalize(fn2)
-    inject_loop_barriers(fn2)
-    out_of_ssa(fn2)
-    stage("normalize + out_of_ssa (condbar)", fn2)
-    ndup = tail_duplicate(fn2)
-    stage(f"tail_duplicate (condbar, {ndup} duplication(s))", fn2)
-    wg2 = form_regions(fn2)
-    print(f"\ncondbar schedule: {wg2.order}  chain={wg2.is_chain()}")
+    run_and_dump(build_condbar())
 
 
 if __name__ == "__main__":
