@@ -1,17 +1,21 @@
 """OpenCL-shaped runtime: host layer over the device layer (paper §3).
 
-Layering (docs/runtime.md):
+Layering (docs/runtime.md, docs/memory.md):
 
   events.py     — Event / UserEvent: status ladder + profiling counters
   queue.py      — CommandQueue: the event-DAG scheduler per device
   scheduler.py  — CoExecutor: one NDRange split across several devices
   platform.py   — Platform / Device / Buffer (clGetPlatformIDs et al.)
-  bufalloc.py   — the pocl buffer allocator + cross-device residency
+  bufalloc.py   — the pocl buffer allocator + span-granular residency
+  memory.py     — sub-buffers, zero-copy map/unmap, size-class pooling
 """
 
 from .bufalloc import Bufalloc, OutOfMemory, ResidencyTracker
 from .events import (CommandError, DependencyError, Event, EventStatus,
                      UserEvent, wait_for_events)
+from .memory import (MAP_READ, MAP_READ_WRITE, MAP_WRITE,
+                     MAP_WRITE_INVALIDATE, BufferPool, MapError,
+                     MappedRegion, SubBuffer, create_sub_buffer)
 from .platform import (Buffer, Device, DeviceInfo, Platform, create_buffer,
                        default_platform)
 from .queue import CommandQueue
@@ -25,4 +29,7 @@ __all__ = [
     "default_platform",
     "CommandQueue",
     "CoExecutor", "CoExecStats", "SharedBuffer", "split_groups",
+    "MapError", "MappedRegion", "SubBuffer", "create_sub_buffer",
+    "BufferPool", "MAP_READ", "MAP_WRITE", "MAP_READ_WRITE",
+    "MAP_WRITE_INVALIDATE",
 ]

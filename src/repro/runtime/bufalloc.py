@@ -22,18 +22,21 @@ The serving engine uses a Bufalloc arena for its paged KV cache
 
 :class:`ResidencyTracker` extends the same host-side book-keeping across
 *devices*: it records which devices currently hold a valid copy of each
-shared buffer, so the multi-device co-execution scheduler
+shared buffer — and, at **byte-span granularity**, which parts of each
+copy are stale — so the multi-device co-execution scheduler
 (:mod:`repro.runtime.scheduler`) migrates a buffer to a device **once** —
-not once per sub-range launch — and invalidates stale copies when a launch
-writes it (the implicit cl_mem migration of OpenCL §5.3: "moved to the
-device on first use, cached until another device writes").
+not once per sub-range launch — re-migrates only the spans another device
+wrote, and invalidates exactly the span a write through any aliased
+sub-buffer view or mapped region touched (the implicit cl_mem migration
+of OpenCL §5.3, "moved to the device on first use, cached until another
+device writes", refined to sub-buffer granularity; docs/memory.md).
 """
 
 from __future__ import annotations
 
 import threading
 from dataclasses import dataclass
-from typing import Dict, Hashable, Iterator, List, Optional, Set
+from typing import Dict, Hashable, Iterator, List, Optional, Tuple
 
 
 class OutOfMemory(Exception):
@@ -172,33 +175,110 @@ class Bufalloc:
     def check_invariants(self) -> None:
         prev_end = 0
         prev = None
+        last = None
         for c in self.chunks():
             assert c.start == prev_end, "chunks must be contiguous"
             assert c.size > 0
             assert c.prev is prev
             prev_end = c.start + c.size
             prev = c
+            last = c
         assert prev_end == self.region_size
+        # the sentinel is always the last chunk of the region (it starts
+        # as the whole-region free chunk and every alloc/free path that
+        # splits or merges the tail re-points it there)
+        assert last is self._sentinel, "sentinel must be the last chunk"
         # no two adjacent free chunks (coalescing invariant)
         for c in self.chunks():
             if c.free and c.next is not None:
                 assert not c.next.free, "adjacent free chunks not coalesced"
 
 
+# ---------------------------------------------------------------------------
+# Byte-span interval arithmetic for span-granular residency
+# ---------------------------------------------------------------------------
+
+#: open upper bound for "stale to the end of the buffer" — clipped to the
+#: real buffer size whenever a caller provides one (acquire_spans)
+SPAN_END = 1 << 62
+
+Span = Tuple[int, int]
+
+
+def span_union(spans: List[Span], lo: int, hi: int) -> List[Span]:
+    """Insert ``[lo, hi)`` into a sorted disjoint span list, merging."""
+    if hi <= lo:
+        return list(spans)
+    out: List[Span] = []
+    placed = False
+    for s, e in spans:
+        if e < lo or (placed and s > hi):
+            out.append((s, e))
+        elif s > hi:
+            if not placed:
+                out.append((lo, hi))
+                placed = True
+            out.append((s, e))
+        else:  # overlaps or touches [lo, hi): absorb
+            lo, hi = min(lo, s), max(hi, e)
+    if not placed:
+        out.append((lo, hi))
+    out.sort()
+    return out
+
+
+def span_subtract(spans: List[Span], lo: int, hi: int) -> List[Span]:
+    """Remove ``[lo, hi)`` from a sorted disjoint span list."""
+    if hi <= lo:
+        return list(spans)
+    out: List[Span] = []
+    for s, e in spans:
+        if e <= lo or s >= hi:
+            out.append((s, e))
+            continue
+        if s < lo:
+            out.append((s, lo))
+        if e > hi:
+            out.append((hi, e))
+    return out
+
+
+def span_clip(spans: List[Span], size: int) -> List[Span]:
+    """Clip a span list to ``[0, size)`` (drops empty leftovers)."""
+    return [(s, min(e, size)) for s, e in spans if s < size]
+
+
+def span_total(spans: List[Span]) -> int:
+    return sum(e - s for s, e in spans)
+
+
 class ResidencyTracker:
-    """Which devices hold a valid copy of each shared buffer.
+    """Which devices hold a valid copy of each shared buffer — and, since
+    the hierarchical-memory subsystem (docs/memory.md), *which byte spans*
+    of each copy are stale.
 
     Keys are opaque hashables (the scheduler uses buffer identities);
     devices likewise.  The contract mirrors OpenCL's implicit cl_mem
-    migration:
+    migration, refined to sub-buffer granularity:
 
-    * :meth:`acquire` — a device is about to *read* the buffer.  Returns
-      True when the device has no valid copy (the caller must copy the
-      canonical data over; counted as a **migration**), False on a
-      residency hit (no copy needed — this is what makes a buffer touched
-      on two devices copy once, not once per launch).
-    * :meth:`wrote` — a launch *wrote* the buffer on (or back to) a
-      device/host; every other copy becomes stale.
+    * :meth:`acquire` — a device is about to *read* the whole buffer.
+      Returns True when a copy is due (no copy at all, or any stale
+      span), False on a residency hit.  Binary compatibility shim over
+      :meth:`acquire_spans`.
+    * :meth:`acquire_spans` — the span-granular read: returns exactly the
+      byte spans the caller must copy to make the device copy current
+      (``[]`` = hit, ``[(0, size)]`` = full migration, anything else =
+      **partial migration** — e.g. re-reading after another device wrote
+      a disjoint sub-range).
+    * :meth:`wrote` — a launch *wrote* the whole buffer on a device/host;
+      every other copy becomes fully stale.
+    * :meth:`wrote_span` — a write through an aliased view (sub-buffer,
+      mapped region, ``group_range`` sub-launch): the writing device's
+      copy becomes valid over ``[lo, hi)`` and every *other* copy becomes
+      stale over exactly that span — not the whole buffer.
+    * :meth:`validate` — mark a device's copy fully current without
+      invalidating anyone (used for the canonical host copy after a
+      merge already accounted for per-device writes).
     * :meth:`drop` — forget a buffer entirely (released).
 
     Thread-safe: sub-range launches acquire concurrently from the
@@ -206,37 +286,122 @@ class ResidencyTracker:
     """
 
     def __init__(self) -> None:
-        self._valid: Dict[Hashable, Set[Hashable]] = {}
+        # per key: device -> sorted disjoint list of *stale* byte spans
+        # (device present = holds a copy; empty list = fully valid)
+        self._copies: Dict[Hashable, Dict[Hashable, List[Span]]] = {}
         self._lock = threading.Lock()
-        self.migrations = 0       # copies that actually happened
-        self.hits = 0             # reads served by an existing valid copy
+        self.migrations = 0         # copy operations that happened
+        self.partial_migrations = 0  # ...of which only stale spans moved
+        self.hits = 0               # reads served by a valid copy
+        self.bytes_migrated = 0     # bytes actually copied (span API only)
 
+    # -- reads ----------------------------------------------------------------
     def acquire(self, key: Hashable, device: Hashable) -> bool:
-        """Record a read of ``key`` on ``device``; True if a copy is due."""
+        """Record a whole-buffer read of ``key`` on ``device``; True if a
+        copy is due (the caller copies the full buffer)."""
         with self._lock:
-            holders = self._valid.setdefault(key, set())
-            if device in holders:
+            copies = self._copies.setdefault(key, {})
+            stale = copies.get(device)
+            if stale is not None and not stale:
                 self.hits += 1
                 return False
-            holders.add(device)
+            copies[device] = []
             self.migrations += 1
             return True
 
-    def wrote(self, key: Hashable, device: Hashable) -> None:
-        """Record a write on ``device``: it becomes the sole valid copy."""
-        with self._lock:
-            self._valid[key] = {device}
+    def acquire_spans(self, key: Hashable, device: Hashable,
+                      size: int) -> List[Span]:
+        """Span-granular read of a ``size``-byte buffer on ``device``.
 
-    def resident(self, key: Hashable, device: Hashable) -> bool:
+        Returns the byte spans the caller must copy from the canonical
+        data; the device copy is considered fully valid afterwards."""
         with self._lock:
-            return device in self._valid.get(key, ())
+            copies = self._copies.setdefault(key, {})
+            stale = copies.get(device)
+            if stale is None:
+                copies[device] = []
+                self.migrations += 1
+                self.bytes_migrated += size
+                return [(0, size)]
+            due = span_clip(stale, size)
+            copies[device] = []
+            if not due:
+                self.hits += 1
+                return []
+            self.migrations += 1
+            if span_total(due) < size:
+                self.partial_migrations += 1
+            self.bytes_migrated += span_total(due)
+            return due
+
+    # -- writes ---------------------------------------------------------------
+    def wrote(self, key: Hashable, device: Hashable) -> None:
+        """Record a whole-buffer write on ``device``: it becomes the sole
+        valid copy."""
+        with self._lock:
+            self._copies[key] = {device: []}
+
+    def wrote_span(self, key: Hashable, device: Hashable,
+                   lo: int, hi: int) -> None:
+        """Record a write of bytes ``[lo, hi)`` on ``device``.
+
+        The writing copy becomes valid over the span; every other copy
+        becomes stale over the span *only* — the write-invalidation
+        granularity sub-buffers and ``group_range`` sub-launches need."""
+        if hi <= lo:
+            return
+        with self._lock:
+            copies = self._copies.setdefault(key, {})
+            for dev in list(copies):
+                if dev == device:
+                    copies[dev] = span_subtract(copies[dev], lo, hi)
+                else:
+                    copies[dev] = span_union(copies[dev], lo, hi)
+            if device not in copies:
+                # writer had no copy: valid exactly over what it wrote
+                copies[device] = [(s, e) for s, e in
+                                  ((0, lo), (hi, SPAN_END)) if e > s]
+
+    def validate(self, key: Hashable, device: Hashable) -> None:
+        """Mark ``device``'s copy fully current without staling others."""
+        with self._lock:
+            self._copies.setdefault(key, {})[device] = []
+
+    # -- introspection ---------------------------------------------------------
+    def resident(self, key: Hashable, device: Hashable,
+                 size: Optional[int] = None) -> bool:
+        """True when ``device`` holds a fully valid copy of ``key``.
+
+        Pass ``size`` to ignore bookkeeping staleness beyond the real
+        buffer end (a writer that never held a full copy is marked stale
+        to ``SPAN_END`` because the tracker does not know buffer sizes)."""
+        with self._lock:
+            stale = self._copies.get(key, {}).get(device)
+            if stale is None:
+                return False
+            if size is not None:
+                stale = span_clip(stale, size)
+            return not stale
+
+    def stale_spans(self, key: Hashable, device: Hashable,
+                    size: Optional[int] = None) -> Optional[List[Span]]:
+        """The device copy's stale spans (``None`` = no copy at all)."""
+        with self._lock:
+            stale = self._copies.get(key, {}).get(device)
+            if stale is None:
+                return None
+            return span_clip(stale, size) if size is not None \
+                else list(stale)
 
     def drop(self, key: Hashable) -> None:
         with self._lock:
-            self._valid.pop(key, None)
+            self._copies.pop(key, None)
 
     def stats(self) -> Dict[str, int]:
         """Migration/hit counters plus the number of tracked buffers."""
         with self._lock:
-            return {"migrations": self.migrations, "hits": self.hits,
-                    "tracked": len(self._valid)}
+            return {"migrations": self.migrations,
+                    "partial_migrations": self.partial_migrations,
+                    "hits": self.hits,
+                    "bytes_migrated": self.bytes_migrated,
+                    "tracked": len(self._copies)}

@@ -68,12 +68,22 @@ class Event:
         happens; monotonically non-decreasing in transition order.
     error:
         The exception that terminated the command, or ``None``.
+    kind:
+        The command class this event belongs to — the
+        ``CL_EVENT_COMMAND_TYPE`` analogue: ``"kernel"`` (NDRange
+        launches), ``"transfer"`` (buffer reads/writes/migrations),
+        ``"map"`` (map/unmap), ``"marker"``, ``"native"``, ``"user"``,
+        or the generic ``"command"``.  The scheduler and the memory
+        benchmark use it to attribute profile windows to migration vs
+        compute (docs/memory.md §Migration).
     """
 
-    def __init__(self, name: str, queue: Optional[object] = None):
+    def __init__(self, name: str, queue: Optional[object] = None,
+                 kind: str = "command"):
         self.id = next(_event_ids)
         self.name = name
         self.queue = queue
+        self.kind = kind
         self.error: Optional[BaseException] = None
         self.queued_ns: Optional[int] = time.monotonic_ns()
         self.submit_ns: Optional[int] = None
@@ -222,7 +232,7 @@ class UserEvent(Event):
     """
 
     def __init__(self, name: str = "user"):
-        super().__init__(name, queue=None)
+        super().__init__(name, queue=None, kind="user")
         self._status = EventStatus.SUBMITTED
         self.submit_ns = time.monotonic_ns()
 

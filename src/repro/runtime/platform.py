@@ -42,6 +42,9 @@ class DeviceInfo:
     local_mem_size: int
     max_work_group_size: int
     compute_units: int
+    # CL_DEVICE_MEM_BASE_ADDR_ALIGN, in *bytes* (OpenCL reports bits):
+    # sub-buffer origins must be multiples of this (docs/memory.md)
+    mem_base_addr_align: int = 4
 
 
 class Device:
@@ -90,15 +93,75 @@ class Device:
 
 class Buffer:
     """A device buffer (cl_mem analogue) backed by a Bufalloc chunk plus a
-    host-side array mirror (the actual payload on this simulated device)."""
+    host-side array mirror (the actual payload on this simulated device).
+
+    The hierarchical-memory subsystem (:mod:`repro.runtime.memory`,
+    docs/memory.md) extends every buffer with
+
+    * **view bookkeeping** — :attr:`origin`/:attr:`root` let sub-buffer
+      views and the root share one identity for residency and mapping;
+    * **residency binding** — :meth:`bind_residency` attaches a
+      :class:`~repro.runtime.bufalloc.ResidencyTracker`, after which any
+      write through the buffer *or any aliased view of it* invalidates
+      the overlapping span of every other device's copy;
+    * **map bookkeeping** — active :class:`~repro.runtime.memory.
+      MappedRegion`\\ s are registered on the root so overlapping write
+      maps (and kernel launches over write-mapped buffers) are rejected.
+    """
 
     def __init__(self, device: Device, size_bytes: int, dtype: str,
                  n_elems: int):
         self.device = device
         self.chunk: Chunk = device.allocator.alloc(size_bytes)
         self.dtype = dtype
+        self.itemsize = np.dtype(dtype).itemsize
         self.n_elems = n_elems
+        self.nbytes = n_elems * self.itemsize
+        self.origin = 0                       # byte offset within root
         self.data = np.zeros(n_elems, dtype)
+        # residency binding (None until bind_residency)
+        self._tracker = None
+        self._res_key = None
+        self._res_dev = None
+        # zero-copy map bookkeeping (root buffers only)
+        self._maps: List[object] = []         # active MappedRegions
+        self._map_lock = threading.Lock()
+        # optional read-back hook run by READ maps before publishing the
+        # view (e.g. pull the canonical copy of a shared buffer);
+        # MAP_WRITE_INVALIDATE skips it — that is the skipped read-back
+        self.on_map_sync: Optional[Callable[[int, int], None]] = None
+
+    @property
+    def root(self) -> "Buffer":
+        """The underlying root allocation (self for non-view buffers)."""
+        return self
+
+    # -- residency ------------------------------------------------------------
+    def bind_residency(self, tracker, key, device_key) -> None:
+        """Attach a ResidencyTracker: from now on every write through
+        this buffer or any of its views calls ``tracker.wrote_span`` for
+        exactly the written byte span, invalidating other device copies
+        at sub-buffer granularity."""
+        self._tracker = tracker
+        self._res_key = key
+        self._res_dev = device_key
+
+    def mark_written_span(self, lo: int, hi: int) -> None:
+        """Record that bytes ``[lo, hi)`` (buffer-relative) were written
+        on this buffer's device."""
+        if self._tracker is not None:
+            self._tracker.wrote_span(self._res_key, self._res_dev,
+                                     self.origin + lo, self.origin + hi)
+
+    def mark_written(self) -> None:
+        self.mark_written_span(0, self.nbytes)
+
+    # -- map bookkeeping (queried by CommandQueue._launch) ----------------------
+    @property
+    def map_count(self) -> int:
+        """Number of active mapped regions over the *root* allocation."""
+        with self.root._map_lock:
+            return len(self.root._maps)
 
     def release(self) -> None:
         if self.chunk is not None:

@@ -27,6 +27,15 @@ function is specialized at enqueue time (paper §4.1) through the device's
 compilation cache — the first enqueue compiles, every later enqueue of the
 same kernel/local-size is a hash lookup.  ``self.stats`` counts launches
 and enqueue-time compiles for the dispatch-overhead story.
+
+``enqueue_map_buffer``/``enqueue_unmap_buffer`` put zero-copy host access
+on the same DAG (docs/memory.md): the map event's completion publishes an
+ndarray view into the buffer payload, the unmap publishes write spans to
+the residency tracker, and launches (or device-side writes) over an
+allocation with *any* active map are rejected — the write-back would
+race with or silently detach the zero-copy host view.  Kernel launches
+accept sub-buffer views anywhere a buffer is accepted, with in-place
+write-back into the parent's span.
 """
 
 from __future__ import annotations
@@ -40,6 +49,8 @@ import numpy as np
 from ..core.api import CompiledKernel
 from .events import (CommandError, DependencyError, Event, EventStatus,
                      UserEvent, wait_for_events)
+from .memory import (MAP_READ_WRITE, MAP_WRITE_INVALIDATE, MapError,
+                     MappedRegion, _flat_view)
 from .platform import Buffer, Device
 
 
@@ -114,13 +125,14 @@ class CommandQueue:
 
     # -- enqueue APIs -------------------------------------------------------------
     def _enqueue(self, name: str, fn: Callable[[], None],
-                 wait_for: Optional[Sequence[Event]]) -> Event:
+                 wait_for: Optional[Sequence[Event]],
+                 kind: str = "command") -> Event:
         """Core enqueue: record a command node and return its event.
 
         The full ``wait_for`` list is always preserved on the command (an
         in-order queue *adds* the previous command, it never replaces the
         explicit list)."""
-        ev = Event(name, queue=self)
+        ev = Event(name, queue=self, kind=kind)
         deps = list(wait_for or [])
         with self._lock:
             if not self.out_of_order and self._last_event is not None:
@@ -141,25 +153,129 @@ class CommandQueue:
 
     def enqueue_native(self, fn: Callable[[], None],
                        wait_for: Optional[Sequence[Event]] = None,
-                       name: str = "native") -> Event:
+                       name: str = "native", kind: str = "native") -> Event:
         """clEnqueueNativeKernel analogue: run a host function as a DAG
         node.  The serving engine and the multi-device scheduler build
         their pipelines out of these."""
-        return self._enqueue(name, fn, wait_for)
+        return self._enqueue(name, fn, wait_for, kind=kind)
+
+    @staticmethod
+    def _check_not_mapped(buf, what: str) -> None:
+        """Reject a device-side write over any active mapped region of
+        the buffer's root allocation: replacing the payload would
+        silently detach the zero-copy views (the host/device race OpenCL
+        leaves undefined is an error here, matching the launch guard)."""
+        root = buf.root
+        lo, hi = buf.origin, buf.origin + buf.nbytes
+        with root._map_lock:
+            for m in root._maps:
+                if m.overlaps(lo, hi):
+                    raise MapError(
+                        f"{what} overlaps active map {m!r}; unmap before "
+                        f"writing the buffer from the device side")
 
     def enqueue_write_buffer(self, buf: Buffer, host: np.ndarray,
                              wait_for=None) -> Event:
-        """clEnqueueWriteBuffer: copy ``host`` into the device buffer."""
+        """clEnqueueWriteBuffer: copy ``host`` into the device buffer
+        (for a sub-buffer, in place into the parent's span) and publish
+        the write to the residency tracker."""
         def run():
+            self._check_not_mapped(buf, "write_buffer")
             buf.data = np.array(host, dtype=buf.dtype, copy=True)
-        return self._enqueue("write", run, wait_for)
+            buf.mark_written()
+        return self._enqueue("write", run, wait_for, kind="transfer")
 
     def enqueue_read_buffer(self, buf: Buffer, out: np.ndarray,
                             wait_for=None) -> Event:
         """clEnqueueReadBuffer: copy the device buffer into ``out``."""
         def run():
             out[...] = buf.data
-        return self._enqueue("read", run, wait_for)
+        return self._enqueue("read", run, wait_for, kind="transfer")
+
+    # -- zero-copy host access (clEnqueueMapBuffer, OpenCL §5.4.2) --------------
+    def enqueue_map_buffer(self, buf, flags: str = MAP_READ_WRITE,
+                           offset: int = 0, nbytes: Optional[int] = None,
+                           wait_for: Optional[Sequence[Event]] = None
+                           ) -> MappedRegion:
+        """clEnqueueMapBuffer: map ``[offset, offset + nbytes)`` of the
+        buffer (or sub-buffer) for host access as a DAG command.
+
+        Returns a :class:`~repro.runtime.memory.MappedRegion` whose
+        ``event`` completes when the mapping is established; completion
+        *publishes* ``region.array``, a zero-copy ndarray view into the
+        buffer payload (``region.get()`` waits and returns it).  Flags:
+        ``"r"``, ``"w"``, ``"rw"``, or ``"wi"``
+        (CL_MAP_WRITE_INVALIDATE_REGION) — a write-invalidate map skips
+        the read-back sync hook because its contents are undefined until
+        the host writes them.
+
+        Map rules (checked when the command runs, so violations
+        propagate as failed events): any number of overlapping *read*
+        maps may coexist; a *write* map must not overlap any other
+        active map of the same root allocation."""
+        region = MappedRegion(buf, offset,
+                              buf.nbytes - offset if nbytes is None
+                              else nbytes, flags)
+
+        def run():
+            root = buf.root
+            lo, hi = region.abs_span
+            with root._map_lock:
+                for m in root._maps:
+                    if m.overlaps(lo, hi) and (m.writable
+                                               or region.writable):
+                        raise MapError(
+                            f"map {region.flags!r} [{lo}, {hi}) overlaps "
+                            f"active map {m!r} of the same allocation")
+                root._maps.append(region)
+                region._active = True
+            try:
+                if region.flags != MAP_WRITE_INVALIDATE and \
+                        root.on_map_sync is not None:
+                    # read-back: make the payload current before
+                    # publishing (skipped for WRITE_INVALIDATE)
+                    root.on_map_sync(lo, hi)
+                first = offset // buf.itemsize
+                region.array = _flat_view(buf.data)[
+                    first:first + region.nbytes // buf.itemsize]
+            except BaseException:
+                # roll the registration back: a failed map must not
+                # leave a zombie region blocking the span forever
+                with root._map_lock:
+                    if region in root._maps:
+                        root._maps.remove(region)
+                    region._active = False
+                raise
+
+        region.event = self._enqueue(
+            f"map:{flags}:{region.abs_span[0]}-{region.abs_span[1]}",
+            run, wait_for, kind="map")
+        return region
+
+    def enqueue_unmap_buffer(self, region: MappedRegion,
+                             wait_for: Optional[Sequence[Event]] = None
+                             ) -> Event:
+        """clEnqueueUnmapMemObject: retire a mapped region as a DAG
+        command.  For write-flagged maps, completion publishes the span
+        to the residency tracker (other device copies become stale over
+        exactly the mapped span); the zero-copy view is invalidated."""
+        def run():
+            root = region.buf.root
+            with root._map_lock:
+                if not region._active:
+                    raise MapError(f"unmap of inactive region {region!r}")
+                root._maps.remove(region)
+                region._active = False
+            if region.writable:
+                region.buf.mark_written_span(region.offset,
+                                             region.offset + region.nbytes)
+            region.array = None
+
+        ev = self._enqueue(
+            f"unmap:{region.abs_span[0]}-{region.abs_span[1]}",
+            run, wait_for, kind="map")
+        region.unmap_event = ev
+        return ev
 
     def enqueue_ndrange_kernel(self, kernel: CompiledKernel,
                                global_size: Sequence[int],
@@ -176,7 +292,8 @@ class CommandQueue:
         (:mod:`repro.runtime.scheduler`)."""
         def run():
             self._launch(kernel, buffers, global_size, scalars, group_range)
-        return self._enqueue(f"ndrange:{kernel.name}", run, wait_for)
+        return self._enqueue(f"ndrange:{kernel.name}", run, wait_for,
+                             kind="kernel")
 
     def enqueue_kernel(self, build, local_size: Sequence[int],
                        global_size: Sequence[int],
@@ -190,21 +307,52 @@ class CommandQueue:
         def run():
             kernel = self.device.build_kernel(build, local_size, **opts)
             self._launch(kernel, buffers, global_size, scalars, None)
-        return self._enqueue("ndrange:<enqueue-compiled>", run, wait_for)
+        return self._enqueue("ndrange:<enqueue-compiled>", run, wait_for,
+                             kind="kernel")
 
     def _launch(self, kernel, buffers: Dict[str, Buffer], global_size,
                 scalars, group_range) -> None:
-        """Run a compiled kernel over device buffers and write back."""
+        """Run a compiled kernel over device buffers and write back.
+
+        Buffers may be root :class:`Buffer`\\ s or
+        :class:`~repro.runtime.memory.SubBuffer` views; a view's
+        write-back lands in place in the parent's span.  Launching over a
+        buffer whose root allocation has *any* active mapped region is
+        rejected: the kernel's write-back would race with (or silently
+        detach) the zero-copy host view — undefined in OpenCL, an error
+        here."""
         with self._lock:
             self._launches += 1
+        for name, b in buffers.items():
+            self._check_not_mapped(b, f"kernel argument {name!r}")
         arrs = {k: b.data for k, b in buffers.items()}
+        # aliasing: when two arguments share one root allocation
+        # (overlapping sub-buffers), writing every result back would
+        # clobber one view's fresh writes with the other view's stale
+        # snapshot — real kernels only store what they wrote.  Snapshot
+        # the aliased arguments so unchanged views can skip write-back
+        # (independent arguments keep the cheap unconditional path).
+        roots: Dict[int, int] = {}
+        for b in buffers.values():
+            roots[id(b.root)] = roots.get(id(b.root), 0) + 1
+        shared_root = {k for k, b in buffers.items()
+                       if roots[id(b.root)] > 1}
+        snaps = {k: np.array(arrs[k], copy=True) for k in shared_root}
         if group_range is None:
             out = kernel(arrs, global_size, scalars)
         else:
             out = kernel(arrs, global_size, scalars,
                          group_range=group_range)
         for k, b in buffers.items():
+            if k in shared_root and \
+                    np.array_equal(np.asarray(out[k]), snaps[k]):
+                continue            # observably unwritten aliased view
             b.data = out[k]
+            # conservative write publication: without kernel-side access
+            # metadata every written-back buffer counts as written
+            # (OpenCL makes the same assumption for cl_mem without
+            # read-only flags)
+            b.mark_written()
 
     def enqueue_marker(self, wait_for: Optional[Sequence[Event]] = None
                        ) -> Event:
@@ -217,7 +365,8 @@ class CommandQueue:
                 # every live previously-enqueued command: still-pending,
                 # flushed-but-running, or complete (resolves instantly)
                 wait_for = list(self._issued)
-        return self._enqueue("marker", lambda: None, wait_for)
+        return self._enqueue("marker", lambda: None, wait_for,
+                             kind="marker")
 
     def enqueue_barrier(self, wait_for: Optional[Sequence[Event]] = None
                         ) -> Event:
@@ -321,4 +470,5 @@ class CommandQueue:
 
 
 __all__ = ["CommandQueue", "Event", "EventStatus", "UserEvent",
-           "CommandError", "DependencyError", "wait_for_events"]
+           "CommandError", "DependencyError", "MapError", "MappedRegion",
+           "wait_for_events"]

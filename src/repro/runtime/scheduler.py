@@ -22,7 +22,18 @@ throughput.  This module fans one launch out over several
   :class:`~repro.runtime.bufalloc.ResidencyTracker`: a
   :class:`SharedBuffer` is copied to a device on first use and then stays
   resident until some launch writes it, so N chunk launches on one device
-  trigger exactly one migration.
+  trigger exactly one migration;
+* migration is **event-ordered** (docs/memory.md): each pending copy is
+  enqueued as an explicit ``transfer`` command on the destination
+  device's queue, and chunk commands carry dependency edges on their
+  device's transfer events — so a migration to device B overlaps with
+  compute already running on device A instead of blocking the enqueue
+  path, and transfer cost shows up in the event profile;
+* write-invalidation is **span-granular**: the merge records which byte
+  spans each device's ``group_range`` chunks actually wrote
+  (:meth:`~repro.runtime.bufalloc.ResidencyTracker.wrote_span`), so a
+  device's copy goes stale only over the spans *other* devices wrote —
+  the next launch re-migrates those spans, not the whole buffer.
 
 Results are **bitwise identical** to a single-device launch of the same
 target: a ``group_range`` sub-launch executes exactly the same group ids
@@ -42,11 +53,47 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .bufalloc import ResidencyTracker
+from .bufalloc import ResidencyTracker, Span
 from .platform import Buffer, Device, create_buffer
 from .queue import CommandQueue, Event
 
 _buf_ids = itertools.count()
+
+
+def _changed_mask(sub: np.ndarray, ref: np.ndarray) -> np.ndarray:
+    """Elements of ``sub`` that differ from ``ref``, treating NaN->NaN
+    as *unchanged*: with plain ``!=`` every NaN element of the canonical
+    buffer would read as "written by every chunk" (NaN != NaN), letting
+    a non-writing chunk's stale NaNs clobber another device's real
+    writes in the merge."""
+    mask = sub != ref
+    if np.issubdtype(sub.dtype, np.floating) or \
+            np.issubdtype(sub.dtype, np.complexfloating):
+        mask &= ~(np.isnan(sub) & np.isnan(ref))
+    return mask
+
+
+def _mask_to_byte_spans(mask: np.ndarray, itemsize: int,
+                        max_runs: int = 64) -> Optional[List[Span]]:
+    """Contiguous runs of a flattened element mask, as *exact* byte
+    spans, or ``None`` when the write pattern is so scattered that span
+    bookkeeping would cost more than it saves.
+
+    ``None`` (not a covering envelope) on overflow is deliberate:
+    ``commit_spans`` credits the writer as *valid* over its spans, and
+    an over-approximation in that direction could wipe another device's
+    overlapping invalidation — the caller must fall back to a
+    whole-buffer commit instead."""
+    idx = np.flatnonzero(mask.reshape(-1))
+    if idx.size == 0:
+        return []
+    breaks = np.flatnonzero(np.diff(idx) > 1)
+    starts = np.concatenate(([idx[0]], idx[breaks + 1]))
+    ends = np.concatenate((idx[breaks], [idx[-1]])) + 1
+    if len(starts) > max_runs:
+        return None
+    return [(int(s) * itemsize, int(e) * itemsize)
+            for s, e in zip(starts, ends)]
 
 
 class SharedBuffer:
@@ -56,8 +103,13 @@ class SharedBuffer:
     The canonical copy lives on the host (``self.host``); each device
     gets a lazily-allocated :class:`~repro.runtime.platform.Buffer` from
     its own Bufalloc arena, filled on first use and kept valid across
-    launches by the residency tracker.  ``commit`` installs a new
-    canonical value (after a merge) and invalidates every device copy.
+    launches by the residency tracker.  Migration is span-granular:
+    :meth:`migrate_to` copies only the byte spans the tracker reports
+    stale, so a device whose copy is stale only where *another* device
+    wrote re-migrates that span instead of the whole buffer.  ``commit``
+    installs a new canonical value (after a merge) and invalidates every
+    device copy; :meth:`commit_spans` is the granular variant that
+    credits each device with the spans it wrote itself.
     """
 
     def __init__(self, host: np.ndarray, name: str,
@@ -72,20 +124,71 @@ class SharedBuffer:
         self._device_bufs: Dict[Device, Buffer] = {}
         self._lock = threading.Lock()
 
-    def device_array(self, device: Device) -> np.ndarray:
-        """The device-resident copy, migrating host -> device if stale.
+    @property
+    def nbytes(self) -> int:
+        return int(self.host.nbytes)
 
-        Safe to call from concurrent chunk commands: the copy happens at
-        most once per (buffer, device) between writes."""
+    @property
+    def key(self) -> str:
+        """The residency-tracker key of this buffer instance."""
+        return self._key
+
+    def migrate_to(self, device: Device) -> int:
+        """Make the device copy current; returns bytes actually copied.
+
+        Copies exactly the spans the tracker reports stale — the body of
+        an event-ordered ``transfer`` command, but also safe to call
+        inline (it is idempotent between writes).  Safe under
+        concurrency: the copy happens at most once per (buffer, device)
+        between writes."""
         with self._lock:
             buf = self._device_bufs.get(device)
             if buf is None:
                 buf = create_buffer(device, self.host.size,
                                     str(self.host.dtype))
                 self._device_bufs[device] = buf
-            if self.tracker.acquire(self._key, device):
+            spans = self.tracker.acquire_spans(self._key, device,
+                                               self.nbytes)
+            if not spans:
+                return 0
+            if spans == [(0, self.nbytes)]:
                 buf.data = self.host.copy()
-            return buf.data
+                return self.nbytes
+            itemsize = self.host.dtype.itemsize
+            src = self.host.reshape(-1)
+            dst = buf.data.reshape(-1)
+            moved = 0
+            for lo, hi in spans:
+                dst[lo // itemsize:hi // itemsize] = \
+                    src[lo // itemsize:hi // itemsize]
+                moved += hi - lo
+            return moved
+
+    def device_array(self, device: Device) -> np.ndarray:
+        """The device-resident copy, migrating host -> device if stale."""
+        self.migrate_to(device)
+        with self._lock:
+            return self._device_bufs[device].data
+
+    def clean_on(self, device: Device) -> bool:
+        """True when the device copy exists and has no stale spans (a
+        transfer command for it would be a no-op)."""
+        with self._lock:
+            if device not in self._device_bufs:
+                return False
+        return self.tracker.resident(self._key, device)
+
+    def store_local(self, device: Device, arr: np.ndarray) -> None:
+        """Install a chunk launch's result as the device-local payload
+        (the device's own writes land in its copy, so only spans written
+        by *other* devices ever need re-migration)."""
+        a = np.asarray(arr)
+        if not a.flags.writeable:       # e.g. a jax Array export
+            a = a.copy()
+        with self._lock:
+            buf = self._device_bufs.get(device)
+            if buf is not None:
+                buf.data = a
 
     def commit(self, merged: np.ndarray) -> None:
         """Install a merged result as the canonical host copy; all device
@@ -93,6 +196,24 @@ class SharedBuffer:
         with self._lock:
             self.host = np.asarray(merged)
             self.tracker.wrote(self._key, "host")
+
+    def commit_spans(self, merged: np.ndarray,
+                     written: Dict[Device, List[Span]]) -> None:
+        """Granular commit: install the merged canonical copy, crediting
+        each device with the byte spans its own chunks wrote.
+
+        Every device copy goes stale exactly over the spans *other*
+        devices wrote (`wrote_span` pairwise), and the host — which holds
+        the full merge — is validated everywhere.  This is the
+        write-invalidation granularity fix for ``group_range``
+        sub-launches: a whole-buffer invalidate here would force every
+        device to re-copy the full buffer on the next launch."""
+        with self._lock:
+            self.host = np.asarray(merged)
+            for device, spans in written.items():
+                for lo, hi in spans:
+                    self.tracker.wrote_span(self._key, device, lo, hi)
+            self.tracker.validate(self._key, "host")
 
     def release(self) -> None:
         """Free every device-side chunk and forget residency."""
@@ -123,7 +244,8 @@ def split_groups(n_groups: int, shares: Sequence[float]
 
 class CoExecStats:
     """What one co-executed launch did: chunks and groups per device,
-    events (with profiling), migrations, and wall time."""
+    events (with profiling), migrations — including the event-ordered
+    transfer commands — and wall time."""
 
     def __init__(self) -> None:
         self.mode = ""
@@ -131,15 +253,44 @@ class CoExecStats:
         self.chunks_per_device: Dict[str, int] = {}
         self.groups_per_device: Dict[str, int] = {}
         self.events: List[Event] = []
+        self.transfer_events: List[Event] = []
         self.migrations = 0
+        self.partial_migrations = 0
+        self.bytes_migrated = 0
         self.residency_hits = 0
         self.wall_s = 0.0
+
+    def migration_overlap_s(self) -> float:
+        """Seconds of transfer time that ran concurrently with some
+        kernel chunk (event-profile window intersection) — the time
+        event-ordered migration hid behind compute.  Kernel windows are
+        unioned first so concurrent chunks on several devices cannot
+        count one transfer interval twice; the result is bounded by the
+        summed transfer durations."""
+        kernels = sorted((e.start_ns, e.end_ns) for e in self.events
+                         if e.kind == "kernel" and e.start_ns and e.end_ns)
+        merged: List[Tuple[int, int]] = []
+        for ks, ke in kernels:
+            if merged and ks <= merged[-1][1]:
+                merged[-1] = (merged[-1][0], max(merged[-1][1], ke))
+            else:
+                merged.append((ks, ke))
+        total = 0
+        for t in self.transfer_events:
+            if not (t.start_ns and t.end_ns):
+                continue
+            for ks, ke in merged:
+                total += max(0, min(t.end_ns, ke) - max(t.start_ns, ks))
+        return total / 1e9
 
     def as_dict(self) -> Dict[str, object]:
         return {"mode": self.mode, "n_groups": self.n_groups,
                 "chunks_per_device": dict(self.chunks_per_device),
                 "groups_per_device": dict(self.groups_per_device),
                 "migrations": self.migrations,
+                "partial_migrations": self.partial_migrations,
+                "bytes_migrated": self.bytes_migrated,
+                "transfer_commands": len(self.transfer_events),
                 "residency_hits": self.residency_hits,
                 "wall_s": self.wall_s}
 
@@ -222,42 +373,79 @@ class CoExecutor:
         stats.mode = mode
         stats.n_groups = n_groups
         mig0 = self.tracker.migrations
+        pmig0 = self.tracker.partial_migrations
+        byte0 = self.tracker.bytes_migrated
         hit0 = self.tracker.hits
 
-        partials: List[Dict[str, np.ndarray]] = []
+        partials: List[Tuple[Device, Dict[str, np.ndarray]]] = []
         plock = threading.Lock()
 
         def run_chunk(device: Device, lo: int, hi: int) -> None:
             if hi <= lo:
                 return
+            # the transfer commands below already moved stale spans;
+            # device_array re-checks residency, so these are hits (and a
+            # safety net if a transfer was skipped as clean)
             arrs = {nm: sb.device_array(device)
                     for nm, sb in shared.items()}
             out = kernels[device](arrs, global_size, scalars,
                                   group_range=(lo, hi))
+            for nm, sb in shared.items():
+                sb.store_local(device, out[nm])
             with plock:
-                partials.append(out)
+                partials.append((device, out))
                 name = device.info.name
                 stats.chunks_per_device[name] = \
                     stats.chunks_per_device.get(name, 0) + 1
                 stats.groups_per_device[name] = \
                     stats.groups_per_device.get(name, 0) + (hi - lo)
 
-        chunk_events: List[Event] = []
+        # -- plan the split -----------------------------------------------------
         if mode == "static":
             shares = list(weights) if weights is not None \
                 else [1.0] * len(self.devices)
             assert len(shares) == len(self.devices), \
                 "one weight per device"
             spans = split_groups(n_groups, shares)
-            for dev, (lo, hi) in zip(self.devices, spans):
-                if hi <= lo:
+            plan = [(dev, (lo, hi)) for dev, (lo, hi)
+                    in zip(self.devices, spans) if hi > lo]
+            active = [dev for dev, _ in plan]
+        elif mode == "steal":
+            plan = None
+            active = list(self.devices)
+        else:
+            raise ValueError(f"unknown co-execution mode {mode!r}")
+
+        # -- event-ordered migration -------------------------------------------
+        # each stale (buffer, device) pair becomes an explicit transfer
+        # command on the destination queue; chunk commands depend on
+        # their device's transfers, so migration to one device overlaps
+        # with compute (and transfers) on the others instead of blocking
+        # the enqueue path
+        transfer_events: Dict[Device, List[Event]] = {d: [] for d in active}
+        for dev in active:
+            q = self.queues[dev]
+            for nm, sb in shared.items():
+                if sb.clean_on(dev):
                     continue
+                ev = q.enqueue_native(
+                    lambda s=sb, d=dev: s.migrate_to(d),
+                    name=f"migrate:{nm}->{dev.info.name}",
+                    kind="transfer")
+                transfer_events[dev].append(ev)
+
+        # -- enqueue chunk commands --------------------------------------------
+        chunk_events: List[Event] = []
+        if mode == "static":
+            for dev, (lo, hi) in plan:
                 q = self.queues[dev]
                 ev = q.enqueue_native(
                     lambda d=dev, a=lo, b=hi: run_chunk(d, a, b),
-                    name=f"co-chunk:{dev.info.name}:{lo}-{hi}")
+                    wait_for=transfer_events[dev],
+                    name=f"co-chunk:{dev.info.name}:{lo}-{hi}",
+                    kind="kernel")
                 chunk_events.append(ev)
-        elif mode == "steal":
+        else:  # steal
             n_chunks = max(len(self.devices),
                            self.chunks_per_device * len(self.devices))
             chunk = -(-n_groups // n_chunks)  # ceil; whole work-groups
@@ -276,10 +464,10 @@ class CoExecutor:
                 q = self.queues[dev]
                 ev = q.enqueue_native(
                     lambda d=dev: drain(d),
-                    name=f"co-drain:{dev.info.name}")
+                    wait_for=transfer_events[dev],
+                    name=f"co-drain:{dev.info.name}",
+                    kind="kernel")
                 chunk_events.append(ev)
-        else:
-            raise ValueError(f"unknown co-execution mode {mode!r}")
 
         # the merge waits on every chunk event — across queues — then
         # folds each chunk's written elements into the canonical copy
@@ -289,16 +477,30 @@ class CoExecutor:
             for nm, sb in shared.items():
                 ref = base[nm]
                 acc = ref.copy()
-                wrote = False
-                for part in partials:
+                itemsize = acc.dtype.itemsize
+                written: Dict[Device, List] = {}
+                exact = True
+                for device, part in partials:
                     sub = np.asarray(part[nm])
-                    mask = sub != ref
+                    mask = _changed_mask(sub, ref)
                     if mask.any():
                         acc[mask] = sub[mask]
-                        wrote = True
+                        spans = _mask_to_byte_spans(mask, itemsize)
+                        if spans is None:
+                            exact = False
+                        else:
+                            written.setdefault(device, []).extend(spans)
                 merged[nm] = acc
-                if wrote:
-                    sb.commit(acc)
+                if written or not exact:
+                    if exact:
+                        # span-granular invalidation: each device stays
+                        # valid over what it wrote itself and goes stale
+                        # only over the spans other devices wrote
+                        sb.commit_spans(acc, written)
+                    else:
+                        # a write pattern too scattered for exact spans:
+                        # whole-buffer invalidate (always safe)
+                        sb.commit(acc)
 
         q0 = self.queues[self.devices[0]]
         merge_ev = q0.enqueue_native(merge, wait_for=chunk_events,
@@ -312,7 +514,11 @@ class CoExecutor:
                 sb.release()
 
         stats.events = chunk_events + [merge_ev]
+        stats.transfer_events = [e for evs in transfer_events.values()
+                                 for e in evs]
         stats.migrations = self.tracker.migrations - mig0
+        stats.partial_migrations = self.tracker.partial_migrations - pmig0
+        stats.bytes_migrated = self.tracker.bytes_migrated - byte0
         stats.residency_hits = self.tracker.hits - hit0
         stats.wall_s = time.perf_counter() - t0
         self.last_stats = stats

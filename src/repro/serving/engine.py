@@ -20,6 +20,12 @@ tracks the shapes it has dispatched so ``compile_stats`` proves that
 repeated serving steps trigger zero recompilation — prefill compiles once
 per prompt-length shape, decode compiles once per batch shape, and every
 subsequent step is a cache hit.
+
+**KV-block pooling** (docs/memory.md): each group's cache block is
+accounted on the dispatch device's Bufalloc arena through a size-class
+:class:`~repro.runtime.memory.BufferPool`, so per-request KV allocations
+in steady state are O(1) free-list pops instead of first-fit walks;
+``kv_stats`` exposes hit/miss counters.
 """
 
 from __future__ import annotations
@@ -33,8 +39,12 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import jax.tree_util as jtu
+
 from repro.distributed.sharding import ShardingRules
 from repro.models import ModelConfig, forward, init_caches
+from repro.runtime.bufalloc import OutOfMemory
+from repro.runtime.memory import BufferPool
 from repro.runtime.queue import CommandQueue
 
 
@@ -107,6 +117,29 @@ class ServingEngine:
         self._queue = CommandQueue(device, out_of_order=True,
                                    workers=max(1, dag_workers))
         self._last_dag: Dict[str, Any] = {}
+        # per-group KV-cache accounting goes through a size-class pool
+        # over the device arena (docs/memory.md): each group's cache
+        # block is identically sized, so after the first group every
+        # alloc is an O(1) free-list pop instead of a first-fit walk
+        self._kv_bytes = self._cache_bytes()
+        self._kv_pool = BufferPool(device.allocator, min_class=4096)
+        self._kv_alloc_failures = 0
+
+    def _cache_bytes(self) -> int:
+        """Byte footprint of one group's KV/state caches, derived from
+        the abstract cache pytree (family-independent)."""
+        abstract = init_caches(self.cfg, self.B, self.S, abstract=True)
+        return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
+                       for leaf in jtu.tree_leaves(abstract)))
+
+    @property
+    def kv_stats(self) -> Dict[str, int]:
+        """KV-block pool counters: steady-state serving shows one miss
+        per concurrently-live group and hits for every later group."""
+        out = dict(self._kv_pool.stats())
+        out["kv_bytes_per_group"] = self._kv_bytes
+        out["alloc_failures"] = self._kv_alloc_failures
+        return out
 
     @property
     def compile_stats(self) -> Dict[str, int]:
@@ -166,10 +199,24 @@ class ServingEngine:
         toks = np.zeros((self.B, plen), np.int32)
         for j, r in enumerate(group):
             toks[j, :len(r.prompt)] = r.prompt   # left-aligned
-        caches = init_caches(self.cfg, self.B, self.S)
-        last_logits, caches = self._run_prefill(jnp.asarray(toks), caches)
+        try:
+            kv_chunk = self._kv_pool.alloc(self._kv_bytes)
+        except OutOfMemory:
+            # arena accounting is full: serve anyway, untracked
+            kv_chunk = None
+            self._kv_alloc_failures += 1
+        try:
+            caches = init_caches(self.cfg, self.B, self.S)
+            last_logits, caches = self._run_prefill(jnp.asarray(toks),
+                                                    caches)
+        except BaseException:
+            # a failed prefill never reaches the group state, so the
+            # generate() reclaim could not see this chunk — free it here
+            if kv_chunk is not None:
+                self._kv_pool.free(kv_chunk)
+            raise
         tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        return {"caches": caches, "tok": tok,
+        return {"caches": caches, "tok": tok, "kv_chunk": kv_chunk,
                 "outs": [[] for _ in group]}
 
     def _step_group(self, st: Dict[str, Any]) -> None:
@@ -181,12 +228,16 @@ class ServingEngine:
                                                      st["caches"])
         st["tok"] = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
 
-    @staticmethod
-    def _finish_group(group: List[Request], st: Dict[str, Any]) -> None:
+    def _finish_group(self, group: List[Request],
+                      st: Dict[str, Any]) -> None:
         for j, r in enumerate(group):
             if r.max_new_tokens:
                 r.out_tokens = st["outs"][j][:r.max_new_tokens]
                 r.done = True
+        if st.get("kv_chunk") is not None:
+            # the group's KV block returns to its size-class free list;
+            # the next group's alloc is a pool hit, not a first-fit walk
+            self._kv_pool.free(st.pop("kv_chunk"))
 
     # -- dispatch ---------------------------------------------------------------
     def generate(self, requests: List[Request], greedy: bool = True
@@ -196,8 +247,10 @@ class ServingEngine:
         groups = self._make_groups(requests)
         q = self._queue
         t0 = time.perf_counter()
+        states: List[Dict[str, Any]] = []
         for gi, group in enumerate(groups):
             st: Dict[str, Any] = {}
+            states.append(st)
 
             def prefill_cmd(group=group, st=st):
                 st.update(self._start_group(group))
@@ -215,7 +268,15 @@ class ServingEngine:
             q.enqueue_native(finish_cmd, wait_for=[ev],
                              name=f"finish:g{gi}")
         events = q.events()
-        q.finish()
+        try:
+            q.finish()
+        finally:
+            # a failed group pipeline skips its finish command; reclaim
+            # any KV block it already allocated so the arena accounting
+            # does not leak across failed generate() calls
+            for st in states:
+                if st.get("kv_chunk") is not None:
+                    self._kv_pool.free(st.pop("kv_chunk"))
         wall = time.perf_counter() - t0
         busy = sum((e.end_ns - e.start_ns) for e in events
                    if e.start_ns and e.end_ns) / 1e9

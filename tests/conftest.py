@@ -1,0 +1,39 @@
+"""Shared pytest configuration: hypothesis settings profiles.
+
+Two profiles are registered when hypothesis is installed:
+
+* ``ci``  — more examples, longer stateful runs, and ``derandomize=True``
+  (a fixed example-generation seed) so CI failures reproduce exactly;
+  selected in .github/workflows/ci.yml via ``HYPOTHESIS_PROFILE=ci``.
+* ``dev`` — few examples for fast local iteration; the default, set by
+  the ``hypothesis_profile`` ini key in pytest.ini.
+
+The ``HYPOTHESIS_PROFILE`` environment variable overrides the ini key.
+Tests that pin their own ``@settings(...)`` values inherit unset fields
+(e.g. ``derandomize``) from the loaded profile.
+"""
+
+import os
+
+
+def pytest_addoption(parser):
+    parser.addini("hypothesis_profile",
+                  "hypothesis settings profile to load (ci | dev)",
+                  default="dev")
+
+
+def pytest_configure(config):
+    try:
+        from hypothesis import HealthCheck, settings
+    except ImportError:        # property tests importorskip themselves
+        return
+    common = dict(deadline=None,
+                  suppress_health_check=[HealthCheck.too_slow])
+    settings.register_profile(
+        "ci", max_examples=200, stateful_step_count=80,
+        derandomize=True, print_blob=True, **common)
+    settings.register_profile(
+        "dev", max_examples=20, stateful_step_count=30, **common)
+    profile = os.environ.get("HYPOTHESIS_PROFILE") \
+        or config.getini("hypothesis_profile")
+    settings.load_profile(profile)

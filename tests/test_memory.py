@@ -1,0 +1,504 @@
+"""Hierarchical memory subsystem (docs/memory.md): sub-buffer rules,
+zero-copy map/unmap through the DAG, buffer pooling, span-granular
+residency, and the differential conformance of kernels that read/write
+through views — across targets, the fiber oracle, and device splits."""
+
+import numpy as np
+import pytest
+
+from repro.core import KernelBuilder, run_ndrange
+from repro.runtime import (Bufalloc, BufferPool, CoExecutor, CommandQueue,
+                           CommandError, MapError, OutOfMemory, Platform,
+                           ResidencyTracker, create_buffer,
+                           create_sub_buffer)
+
+N = 64
+LSZ = 8
+
+
+@pytest.fixture(scope="module")
+def plat():
+    return Platform()
+
+
+def build_axpy():
+    """x = x * 2 + 1 — exact in f32 for small-integer inputs, so results
+    are bitwise comparable across every target."""
+    b = KernelBuilder("axpy")
+    x = b.arg_buffer("x", "float32")
+    g = b.global_id(0)
+    x[g] = x[g] * 2.0 + 1.0
+    return b.finish()
+
+
+def build_scale2():
+    """y = x * 2 + 1 (two buffers, co-execution friendly)."""
+    b = KernelBuilder("scale2")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    y[g] = x[g] * 2.0 + 1.0
+    return b.finish()
+
+
+# ---------------------------------------------------------------------------
+# SubBuffer rules (clCreateSubBuffer)
+# ---------------------------------------------------------------------------
+
+class TestSubBuffer:
+    def test_view_aliases_parent(self, plat):
+        dev = plat.get_devices("basic")[0]
+        buf = create_buffer(dev, 16, "float32")
+        buf.data = np.arange(16, dtype=np.float32)
+        sub = create_sub_buffer(buf, 4 * 4, 8 * 4)     # elements [4, 12)
+        assert np.array_equal(sub.data, np.arange(4, 12, dtype=np.float32))
+        sub.data = np.full(8, 9.0, np.float32)
+        assert buf.data[3] == 3.0 and buf.data[4] == 9.0
+        assert buf.data[11] == 9.0 and buf.data[12] == 12.0
+        # replacing the parent array must not leave the view dangling
+        buf.data = np.zeros(16, np.float32)
+        assert sub.data[0] == 0.0
+        buf.release()
+
+    def test_alignment_and_bounds_rules(self, plat):
+        dev = plat.get_devices("basic")[0]
+        buf = create_buffer(dev, 16, "float32")
+        old = dev.info.mem_base_addr_align
+        try:
+            dev.info.mem_base_addr_align = 32
+            with pytest.raises(MapError, match="mem_base_addr_align"):
+                create_sub_buffer(buf, 4, 32)          # misaligned origin
+            create_sub_buffer(buf, 32, 32)             # aligned: fine
+        finally:
+            dev.info.mem_base_addr_align = old
+        with pytest.raises(MapError, match="outside parent"):
+            create_sub_buffer(buf, 0, 65)
+        with pytest.raises(MapError, match="outside parent"):
+            create_sub_buffer(buf, 64, 4)
+        with pytest.raises(MapError, match="elements"):
+            create_sub_buffer(buf, 4, 6)               # not whole elements
+        sub = create_sub_buffer(buf, 0, 32)
+        with pytest.raises(MapError, match="sub-buffer from a sub"):
+            create_sub_buffer(sub, 0, 16)
+        buf.release()
+
+    def test_write_through_view_invalidates_span_only(self, plat):
+        """A write through any aliased view must stale exactly the
+        overlapping span of the parent's other device copies."""
+        dev = plat.get_devices("basic")[0]
+        buf = create_buffer(dev, 16, "float32")
+        tr = ResidencyTracker()
+        buf.bind_residency(tr, "P", "this-dev")
+        tr.acquire_spans("P", "other-dev", buf.nbytes)  # other holds a copy
+        sub = create_sub_buffer(buf, 4 * 4, 8 * 4)
+        sub.mark_written()
+        assert tr.stale_spans("P", "other-dev") == [(16, 48)]
+        # the writer had no prior copy: valid exactly over what it wrote
+        assert tr.stale_spans("P", "this-dev", buf.nbytes) == \
+            [(0, 16), (48, 64)]
+        # and the whole-buffer write through the parent stales the rest
+        buf.mark_written()
+        assert tr.stale_spans("P", "other-dev") == [(0, 64)]
+        buf.release()
+
+
+# ---------------------------------------------------------------------------
+# Zero-copy map/unmap as DAG commands (clEnqueueMapBuffer)
+# ---------------------------------------------------------------------------
+
+class TestMapUnmap:
+    def test_map_publishes_zero_copy_view(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, N, "float32")
+        q.enqueue_write_buffer(buf, np.arange(N, dtype=np.float32))
+        region = q.enqueue_map_buffer(buf, "rw")
+        arr = region.get()
+        assert region.event.kind == "map" and region.active
+        assert np.shares_memory(arr, buf.data), "map must be zero-copy"
+        arr[0] = 123.0
+        q.enqueue_unmap_buffer(region)
+        q.finish()
+        assert buf.data[0] == 123.0 and region.array is None
+        assert not region.active
+        buf.release()
+
+    def test_map_sub_range_and_sub_buffer(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, 16, "float32")
+        sub = create_sub_buffer(buf, 4 * 4, 8 * 4)
+        region = q.enqueue_map_buffer(sub, "w", offset=4, nbytes=8)
+        arr = region.get()
+        assert region.abs_span == (20, 28)     # composed through the view
+        arr[:] = [7.0, 8.0]
+        q.enqueue_unmap_buffer(region)
+        q.finish()
+        assert buf.data[5] == 7.0 and buf.data[6] == 8.0
+        buf.release()
+
+    def test_overlapping_write_maps_rejected_read_maps_ok(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev, out_of_order=True)
+        buf = create_buffer(dev, N, "float32")
+        r1 = q.enqueue_map_buffer(buf, "r", offset=0, nbytes=32)
+        r2 = q.enqueue_map_buffer(buf, "r", offset=16, nbytes=32)
+        assert r1.get() is not None and r2.get() is not None
+        # the conflicting write map goes on its own queue so its failed
+        # event does not poison this queue's finish()
+        qbad = CommandQueue(dev, out_of_order=True)
+        bad = qbad.enqueue_map_buffer(buf, "w", offset=24, nbytes=8)
+        qbad.flush()
+        with pytest.raises(CommandError):
+            bad.event.wait()
+        # disjoint write map is fine
+        ok = q.enqueue_map_buffer(buf, "w", offset=128, nbytes=8)
+        assert ok.get() is not None
+        for r in (r1, r2, ok):
+            q.enqueue_unmap_buffer(r)
+        q.finish()
+        buf.release()
+
+    def test_launch_over_write_mapped_buffer_fails(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev, out_of_order=True)
+        buf = create_buffer(dev, N, "float32")
+        k = dev.build_kernel(build_axpy, (LSZ,))
+        region = q.enqueue_map_buffer(buf, "w")
+        region.get()
+        qbad = CommandQueue(dev, out_of_order=True)
+        ev = qbad.enqueue_ndrange_kernel(k, (N,), {"x": buf})
+        qbad.flush()
+        with pytest.raises(CommandError, match="active map"):
+            ev.wait()
+        q.enqueue_unmap_buffer(region)
+        q.finish()
+        ev2 = q.enqueue_ndrange_kernel(k, (N,), {"x": buf})
+        q.flush()
+        ev2.wait()                             # unmapped: launches again
+        buf.release()
+
+    def test_double_unmap_fails(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev, out_of_order=True)
+        buf = create_buffer(dev, N, "float32")
+        region = q.enqueue_map_buffer(buf, "r")
+        region.get()
+        first = q.enqueue_unmap_buffer(region)
+        q.flush()
+        first.wait()
+        bad = q.enqueue_unmap_buffer(region)
+        q.flush()
+        with pytest.raises(CommandError, match="inactive"):
+            bad.wait()
+        buf.release()
+
+    def test_write_invalidate_skips_read_back(self, plat):
+        """MAP_WRITE_INVALIDATE must not run the read-back sync hook;
+        read maps must."""
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, N, "float32")
+        synced = []
+        buf.on_map_sync = lambda lo, hi: synced.append((lo, hi))
+        r = q.enqueue_map_buffer(buf, "r", offset=0, nbytes=32)
+        r.get()
+        q.enqueue_unmap_buffer(r)
+        q.finish()
+        assert synced == [(0, 32)]
+        wi = q.enqueue_map_buffer(buf, "wi")
+        wi.get()
+        q.enqueue_unmap_buffer(wi)
+        q.finish()
+        assert synced == [(0, 32)], "write-invalidate must skip read-back"
+        buf.release()
+
+    def test_failed_map_rolls_back_registration(self, plat):
+        """A map whose read-back hook raises must not leave a zombie
+        active region wedging the buffer."""
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev, out_of_order=True)
+        buf = create_buffer(dev, N, "float32")
+
+        def boom(lo, hi):
+            raise RuntimeError("sync failed")
+        buf.on_map_sync = boom
+        qbad = CommandQueue(dev, out_of_order=True)
+        bad = qbad.enqueue_map_buffer(buf, "r")
+        qbad.flush()
+        with pytest.raises(CommandError, match="sync failed"):
+            bad.event.wait()
+        assert not bad.active and buf.map_count == 0
+        buf.on_map_sync = None
+        ok = q.enqueue_map_buffer(buf, "rw")   # span is not wedged
+        assert ok.get() is not None
+        q.enqueue_unmap_buffer(ok)
+        q.finish()
+        buf.release()
+
+    def test_unmap_publishes_residency_invalidation(self, plat):
+        dev = plat.get_devices("basic")[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, 16, "float32")
+        tr = ResidencyTracker()
+        buf.bind_residency(tr, "M", "this-dev")
+        tr.acquire_spans("M", "other-dev", buf.nbytes)
+        region = q.enqueue_map_buffer(buf, "w", offset=8, nbytes=16)
+        arr = region.get()
+        arr[:] = 5.0
+        assert tr.stale_spans("M", "other-dev") == [], \
+            "invalidation publishes at unmap, not while mapped"
+        q.enqueue_unmap_buffer(region)
+        q.finish()
+        assert tr.stale_spans("M", "other-dev") == [(8, 24)]
+        buf.release()
+
+
+# ---------------------------------------------------------------------------
+# BufferPool (size-class pooling over the arena)
+# ---------------------------------------------------------------------------
+
+class TestBufferPool:
+    def test_class_rounding_and_reuse(self):
+        pool = BufferPool(Bufalloc(1 << 20, alignment=64), min_class=256)
+        assert pool.class_of(1) == 256
+        assert pool.class_of(257) == 512
+        assert pool.class_of(512) == 512
+        c1 = pool.alloc(300)
+        assert c1.size == 512
+        pool.free(c1)
+        c2 = pool.alloc(400)                   # same class: free-list pop
+        assert c2 is c1
+        s = pool.stats()
+        assert s["hits"] == 1 and s["misses"] == 1
+
+    def test_foreign_chunk_rejected(self):
+        arena = Bufalloc(1 << 16)
+        pool = BufferPool(arena)
+        foreign = arena.alloc(100)
+        with pytest.raises(ValueError):
+            pool.free(foreign)
+
+    def test_double_free_rejected(self):
+        pool = BufferPool(Bufalloc(1 << 16, alignment=64), min_class=256)
+        c = pool.alloc(256)
+        pool.free(c)
+        with pytest.raises(ValueError, match="double free"):
+            pool.free(c)
+        assert pool.alloc(256) is c            # still singly parked
+
+    def test_trim_returns_bytes_to_arena(self):
+        arena = Bufalloc(1 << 16, alignment=64)
+        pool = BufferPool(arena, min_class=256)
+        chunks = [pool.alloc(256) for _ in range(4)]
+        for c in chunks:
+            pool.free(c)
+        held = arena.allocated_bytes()
+        assert held >= 4 * 256 and pool.pooled_bytes() == held
+        freed = pool.trim()
+        assert freed == held and arena.allocated_bytes() == 0
+        arena.check_invariants()
+
+    def test_oom_trims_and_retries(self):
+        arena = Bufalloc(1024, alignment=64)
+        pool = BufferPool(arena, min_class=256)
+        a = pool.alloc(256)
+        b = pool.alloc(256)
+        pool.free(b)                           # 256 parked on the free list
+        pool.free(a)
+        big = pool.alloc(1024)                 # only fits if the pool trims
+        assert big.size == 1024
+        pool.free(big)
+
+    def test_bounded_free_list_overflows_to_arena(self):
+        arena = Bufalloc(1 << 16, alignment=64)
+        pool = BufferPool(arena, min_class=256, max_free_per_class=2)
+        chunks = [pool.alloc(256) for _ in range(4)]
+        for c in chunks:
+            pool.free(c)
+        assert pool.pooled_bytes() == 2 * 256  # the rest went back
+        arena.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# Differential conformance: views and maps across targets + oracle + splits
+# ---------------------------------------------------------------------------
+
+TARGET_DRIVERS = ["basic", "vector", "pallas"]
+
+
+def _oracle_subbuffer_result() -> np.ndarray:
+    """Fiber-oracle emulation of: carve halves of a 2N parent, run axpy
+    on each half, paste back."""
+    parent = np.arange(2 * N, dtype=np.float32)
+    lo = run_ndrange(build_axpy(), (N,), (LSZ,),
+                     {"x": parent[:N].copy()})["x"]
+    hi = run_ndrange(build_axpy(), (N,), (LSZ,),
+                     {"x": parent[N:].copy()})["x"]
+    return np.concatenate([lo, hi])
+
+
+def test_subbuffer_kernels_bitwise_identical_across_targets(plat):
+    """Kernels writing through two sub-buffer halves of one parent give
+    bitwise-identical parents on loop/vector/pallas and the oracle."""
+    expect = _oracle_subbuffer_result()
+    for driver in TARGET_DRIVERS:
+        dev = plat.get_devices(driver)[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, 2 * N, "float32")
+        q.enqueue_write_buffer(buf, np.arange(2 * N, dtype=np.float32))
+        k = dev.build_kernel(build_axpy, (LSZ,))
+        lo = create_sub_buffer(buf, 0, N * 4)
+        hi = create_sub_buffer(buf, N * 4, N * 4)
+        q.enqueue_ndrange_kernel(k, (N,), {"x": lo})
+        q.enqueue_ndrange_kernel(k, (N,), {"x": hi})
+        q.finish()
+        assert buf.data.tobytes() == expect.tobytes(), \
+            f"driver {driver} diverged through sub-buffer views"
+        buf.release()
+
+
+def test_mapped_region_kernels_bitwise_identical_across_targets(plat):
+    """Init through a WRITE_INVALIDATE map, launch, read through a READ
+    map: all targets bitwise-match the oracle."""
+    init = (np.arange(N, dtype=np.float32) - N // 2)
+    expect = run_ndrange(build_axpy(), (N,), (LSZ,), {"x": init.copy()})["x"]
+    for driver in TARGET_DRIVERS:
+        dev = plat.get_devices(driver)[0]
+        q = CommandQueue(dev)
+        buf = create_buffer(dev, N, "float32")
+        w = q.enqueue_map_buffer(buf, "wi")
+        w.get()[...] = init
+        q.enqueue_unmap_buffer(w)
+        k = dev.build_kernel(build_axpy, (LSZ,))
+        q.enqueue_ndrange_kernel(k, (N,), {"x": buf})
+        r = q.enqueue_map_buffer(buf, "r")
+        out = r.get().copy()
+        q.enqueue_unmap_buffer(r)
+        q.finish()
+        assert out.tobytes() == expect.tobytes(), \
+            f"driver {driver} diverged through mapped regions"
+        buf.release()
+
+
+def test_view_initialized_data_identical_on_1_vs_2_device_split(plat):
+    """Data staged through sub-buffer + map writes, then co-executed:
+    the 2-device split must be bitwise-identical to the 1-device run."""
+    dev = plat.get_devices("basic")[0]
+    q = CommandQueue(dev)
+    staging = create_buffer(dev, 2 * LSZ * LSZ, "float32")
+    left = create_sub_buffer(staging, 0, LSZ * LSZ * 4)
+    m = q.enqueue_map_buffer(left, "wi")
+    m.get()[...] = np.arange(LSZ * LSZ, dtype=np.float32)
+    q.enqueue_unmap_buffer(m)
+    right = create_sub_buffer(staging, LSZ * LSZ * 4, LSZ * LSZ * 4)
+    m = q.enqueue_map_buffer(right, "wi")
+    m.get()[...] = np.arange(LSZ * LSZ, dtype=np.float32)[::-1]
+    q.enqueue_unmap_buffer(m)
+    q.finish()
+    host = staging.data.copy()
+    staging.release()
+
+    outs = []
+    for ndev in (1, 2):
+        co = CoExecutor(plat.co_devices(ndev), chunks_per_device=3)
+        merged = co.run(build_scale2, (LSZ,), (2 * LSZ * LSZ,),
+                        {"x": host, "y": np.zeros(2 * LSZ * LSZ,
+                                                  np.float32)},
+                        mode="steal")
+        outs.append(np.asarray(merged["y"]))
+        co.finish()
+    assert outs[0].tobytes() == outs[1].tobytes()
+    assert outs[0].tobytes() == (host * 2 + 1).astype(np.float32).tobytes()
+
+
+# ---------------------------------------------------------------------------
+# Regression: group_range write-invalidation granularity (satellite fix)
+# ---------------------------------------------------------------------------
+
+def test_group_range_invalidation_is_span_granular(plat):
+    """Two devices write disjoint halves of y.  Each device's copy must
+    go stale only over the *other* device's half — re-running migrates
+    exactly one half per device, not the whole buffer (the pre-fix
+    behaviour was a whole-buffer invalidate)."""
+    n = 512
+    co = CoExecutor(plat.co_devices(2))
+    x = co.shared_buffer(np.arange(n, dtype=np.float32), "x")
+    y = co.shared_buffer(np.zeros(n, np.float32), "y")
+    co.run(build_scale2, (64,), (n,), {"x": x, "y": y}, mode="static")
+    d0, d1 = co.devices
+    half = n // 2 * 4                          # bytes
+    # every y element became nonzero, so written spans are exact halves
+    assert co.tracker.stale_spans(y.key, d0, y.nbytes) == [(half, n * 4)]
+    assert co.tracker.stale_spans(y.key, d1, y.nbytes) == [(0, half)]
+    # x was never written: both copies stay fully valid
+    assert co.tracker.resident(x.key, d0)
+    assert co.tracker.resident(x.key, d1)
+
+    merged = co.run(build_scale2, (64,), (n,), {"x": x, "y": y},
+                    mode="static")
+    st = co.last_stats
+    assert st.partial_migrations == 2, "each device re-migrates partially"
+    assert st.bytes_migrated == n * 4, \
+        "one half of y per device — a whole-buffer invalidate would " \
+        "move twice that"
+    assert st.migrations == 2 and st.residency_hits >= 2
+    expect = (np.arange(n, dtype=np.float32) * 2 + 1)
+    assert np.asarray(merged["y"]).tobytes() == expect.tobytes()
+    # transfer commands are event-ordered, typed, and profiled
+    assert all(e.kind == "transfer" for e in st.transfer_events)
+    assert all(e.succeeded for e in st.transfer_events)
+    co.finish()
+
+
+def test_merge_survives_nan_initialized_buffers(plat):
+    """NaN canonical elements must not read as 'written by every chunk'
+    (NaN != NaN): a non-writing chunk's stale NaNs would clobber the
+    other device's real writes in the merge."""
+    n = 256
+    co = CoExecutor(plat.co_devices(2))
+    x = np.arange(n, dtype=np.float32)
+    y = np.full(n, np.nan, np.float32)          # poisoned init
+    merged = co.run(build_scale2, (64,), (n,), {"x": x, "y": y},
+                    mode="static")
+    expect = (x * 2 + 1).astype(np.float32)
+    assert np.asarray(merged["y"]).tobytes() == expect.tobytes(), \
+        "NaN-initialized buffer lost written elements in the merge"
+    co.finish()
+
+
+def test_scattered_write_merge_falls_back_to_whole_invalidate():
+    """_mask_to_byte_spans must return None (whole-buffer commit) for
+    patterns beyond the run cap — an envelope would let commit_spans
+    validate a writer over spans another device wrote."""
+    from repro.runtime.scheduler import _mask_to_byte_spans
+    mask = np.zeros(1024, bool)
+    mask[::2] = True                            # 512 runs: way past the cap
+    assert _mask_to_byte_spans(mask, 4) is None
+    dense = np.zeros(1024, bool)
+    dense[100:300] = True
+    assert _mask_to_byte_spans(dense, 4) == [(400, 1200)]
+    assert _mask_to_byte_spans(np.zeros(8, bool), 4) == []
+
+
+def test_migration_transfers_are_dag_ordered(plat):
+    """Chunk kernel commands must depend on their device's transfer
+    commands: every transfer END timestamp precedes its device's chunk
+    START timestamp."""
+    n = 256
+    co = CoExecutor(plat.co_devices(2))
+    x = co.shared_buffer(np.arange(n, dtype=np.float32), "x")
+    y = co.shared_buffer(np.zeros(n, np.float32), "y")
+    co.run(build_scale2, (64,), (n,), {"x": x, "y": y}, mode="static")
+    st = co.last_stats
+    assert len(st.transfer_events) == 4        # 2 buffers x 2 devices
+    by_queue = {}
+    for ev in st.transfer_events:
+        by_queue.setdefault(id(ev.queue), []).append(ev)
+    for ev in st.events:
+        if ev.kind != "kernel":
+            continue
+        for t in by_queue.get(id(ev.queue), []):
+            assert t.end_ns <= ev.start_ns, \
+                "kernel chunk started before its transfer finished"
+    co.finish()

@@ -1,0 +1,468 @@
+"""Stateful property-test harness for the hierarchical memory subsystem.
+
+A hypothesis :class:`RuleBasedStateMachine` drives random interleavings
+of the full op vocabulary — arena alloc/free, pooled alloc/free/trim,
+sub-view creation, writes through aliased views, map/unmap publication,
+whole-buffer writes, and span-granular migration — against the *real*
+:class:`~repro.runtime.bufalloc.Bufalloc`,
+:class:`~repro.runtime.memory.BufferPool` and
+:class:`~repro.runtime.bufalloc.ResidencyTracker`, checking after every
+step the structural invariants the paper's allocator design promises
+(§3) and the residency contract the migration subsystem depends on
+(docs/memory.md):
+
+* chunks are contiguous, non-overlapping, in-region, aligned;
+* the **sentinel is the last chunk**;
+* no two adjacent free chunks survive (free-neighbour coalescing);
+* pool chunks are real arena chunks of exactly one size class;
+* **residency is never stale**: after ``acquire_spans`` + copying the
+  returned spans, a device copy is byte-identical to the canonical
+  contents, no matter which aliased views wrote what where.
+
+The byte-level mirror model (plain numpy arrays per device) is the
+oracle: the tracker only has to *report* enough staleness; the harness
+fails the moment a reported-clean byte diverges.
+
+The op/oracle logic lives in :class:`ModelDriver`, which needs no
+hypothesis — a seeded random-walk test drives it on every install, and
+the hypothesis state machine (run under the ``ci``/``dev`` profiles
+registered in tests/conftest.py) adds minimized counterexamples and
+bundle-based lifetime coverage where hypothesis is available.
+"""
+
+import random
+
+import numpy as np
+import pytest
+
+from repro.runtime.bufalloc import (Bufalloc, OutOfMemory, ResidencyTracker,
+                                    span_subtract, span_total, span_union)
+from repro.runtime.memory import BufferPool
+
+try:
+    from hypothesis import given, strategies as st
+    from hypothesis.stateful import (Bundle, RuleBasedStateMachine,
+                                     consumes, initialize, invariant,
+                                     multiple, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:               # plain tests below still run
+    HAVE_HYPOTHESIS = False
+
+ARENA_BYTES = 1 << 16
+ALIGN = 32
+TBUF_BYTES = 256                  # logical tracked-buffer size
+DEVICES = ["d0", "d1", "d2", "host"]
+
+
+class ModelDriver:
+    """The machine body: real subsystems + byte-level oracle model.
+
+    Every op method performs the real operation, updates the mirror
+    model, and asserts the op-local contract; :meth:`check_invariants`
+    asserts the global structural invariants.  Drivable by hypothesis
+    rules or by a plain seeded random walk.
+    """
+
+    def __init__(self, greedy: bool):
+        self.arena = Bufalloc(ARENA_BYTES, alignment=ALIGN, greedy=greedy)
+        self.pool = BufferPool(self.arena, min_class=64,
+                               max_free_per_class=3)
+        self.tracker = ResidencyTracker()
+        self.nbuf = 0
+        self.stamp = 0
+        # model: key -> {"canon": uint8[TBUF], "copies": {dev: uint8[TBUF]}}
+        self.model = {}
+        # mapped-but-not-unmapped writes: their spans are undefined for
+        # everyone until unmap publishes them (OpenCL §5.4.3), so the
+        # writer's copy is exempt from the staleness oracle there
+        self.pending = []
+
+    # -- helpers ---------------------------------------------------------------
+    def _next_stamp(self) -> int:
+        self.stamp = (self.stamp + 1) % 251 + 1   # never 0 (the init value)
+        return self.stamp
+
+    def _copy_of(self, m, dev) -> np.ndarray:
+        if dev not in m["copies"]:
+            m["copies"][dev] = np.zeros(TBUF_BYTES, np.uint8)
+        return m["copies"][dev]
+
+    # -- arena ops -------------------------------------------------------------
+    def arena_alloc(self, size):
+        try:
+            c = self.arena.alloc(size)
+        except OutOfMemory:
+            return None
+        assert c.start % ALIGN == 0, "alignment violated"
+        assert c.size >= size
+        assert c.start + c.size <= ARENA_BYTES, "chunk out of region"
+        assert not c.free
+        return c
+
+    def arena_free(self, chunk):
+        self.arena.free(chunk)
+
+    # -- pool ops --------------------------------------------------------------
+    def pool_alloc(self, size):
+        try:
+            c = self.pool.alloc(size)
+        except OutOfMemory:
+            return None
+        assert c.size == self.pool.class_of(size) >= size
+        assert not c.free, "pool handed out a chunk the arena thinks is free"
+        return c
+
+    def pool_free(self, chunk):
+        self.pool.free(chunk)
+
+    def pool_trim(self):
+        before = self.arena.allocated_bytes()
+        freed = self.pool.trim()
+        assert self.arena.allocated_bytes() == before - freed
+
+    # -- residency ops ----------------------------------------------------------
+    def create_tracked_buffer(self):
+        key = f"b{self.nbuf}"
+        self.nbuf += 1
+        self.model[key] = {"canon": np.zeros(TBUF_BYTES, np.uint8),
+                           "copies": {}}
+        return key
+
+    def write_through_view(self, key, lo, hi, dev):
+        """An aliased-view write on one device: canonical contents move
+        forward, the writer's copy follows, and the tracker is told the
+        exact span."""
+        m = self.model.get(key)
+        if m is None:
+            return
+        val = self._next_stamp()
+        m["canon"][lo:hi] = val
+        self._copy_of(m, dev)[lo:hi] = val
+        self.tracker.wrote_span(key, dev, lo, hi)
+
+    def map_view(self, key, lo, hi, dev):
+        """Mapped-region lifecycle, part 1: the write lands in the
+        writer's copy immediately (zero-copy view) but is *published* to
+        the tracker only at unmap — exactly MappedRegion's contract."""
+        m = self.model.get(key)
+        if m is None:
+            return None
+        val = self._next_stamp()
+        self._copy_of(m, dev)[lo:hi] = val
+        mapped = (key, lo, hi, dev, val)
+        self.pending.append(mapped)
+        return mapped
+
+    def unmap_view(self, mapped):
+        if mapped in self.pending:
+            self.pending.remove(mapped)
+        key, lo, hi, dev, val = mapped
+        m = self.model.get(key)
+        if m is None:
+            return
+        m["canon"][lo:hi] = val             # unmap publishes the write
+        self._copy_of(m, dev)[lo:hi] = val  # (map may have been re-written)
+        self.tracker.wrote_span(key, dev, lo, hi)
+
+    def write_whole(self, key, dev):
+        m = self.model.get(key)
+        if m is None:
+            return
+        val = self._next_stamp()
+        m["canon"][:] = val
+        m["copies"] = {dev: np.full(TBUF_BYTES, val, np.uint8)}
+        self.tracker.wrote(key, dev)
+
+    def migrate(self, key, dev):
+        """THE core property: acquire_spans + copying exactly the
+        returned spans must leave the device copy byte-identical to the
+        canonical contents — residency is never stale, through any
+        interleaving of aliased writes."""
+        m = self.model.get(key)
+        if m is None:
+            return
+        spans = self.tracker.acquire_spans(key, dev, TBUF_BYTES)
+        prev = 0
+        for lo, hi in spans:                # sorted, disjoint, in-range
+            assert 0 <= lo < hi <= TBUF_BYTES
+            assert lo >= prev, "spans must be sorted and disjoint"
+            prev = hi
+        copy = self._copy_of(m, dev)
+        for lo, hi in spans:
+            copy[lo:hi] = m["canon"][lo:hi]
+        # bytes under this device's *pending* maps are undefined until
+        # unmap publishes them; everything else must match canonical
+        defined = np.ones(TBUF_BYTES, bool)
+        for pkey, lo, hi, pdev, _ in self.pending:
+            if pkey == key and pdev == dev:
+                defined[lo:hi] = False
+        assert np.array_equal(copy[defined], m["canon"][defined]), \
+            f"device {dev} copy of {key} stale after migration: " \
+            f"tracker under-reported staleness"
+
+    def drop_tracked_buffer(self, key):
+        self.tracker.drop(key)
+        self.model.pop(key, None)
+        self.pending = [p for p in self.pending if p[0] != key]
+
+    # -- global invariants -------------------------------------------------------
+    def check_invariants(self):
+        # contiguity, sizes, prev/next links, sentinel-last, coalescing
+        self.arena.check_invariants()
+        a = self.arena
+        assert a.allocated_bytes() + a.free_bytes() == ARENA_BYTES
+        assert a.allocated_bytes() == sum(
+            c.size for c in a.chunks() if not c.free)
+        arena_chunks = {id(c) for c in a.chunks() if not c.free}
+        for lst in self.pool._free.values():
+            for c in lst:
+                assert id(c) in arena_chunks, \
+                    "pool free list holds a chunk the arena freed"
+
+
+# ---------------------------------------------------------------------------
+# Plain seeded random walk (runs even without hypothesis installed)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_memory_model_random_walk(seed):
+    rng = random.Random(seed)
+    drv = ModelDriver(greedy=bool(seed % 2))
+    chunks, pooled, tbufs, views, maps = [], [], [], [], []
+    ops = ["arena_alloc", "arena_free", "pool_alloc", "pool_free",
+           "pool_trim", "new_tbuf", "new_view", "write_view", "map",
+           "unmap", "write_whole", "migrate", "drop"]
+    for step in range(600):
+        op = rng.choice(ops)
+        if op == "arena_alloc":
+            c = drv.arena_alloc(rng.randint(1, 2000))
+            if c is not None:
+                chunks.append(c)
+        elif op == "arena_free" and chunks:
+            drv.arena_free(chunks.pop(rng.randrange(len(chunks))))
+        elif op == "pool_alloc":
+            c = drv.pool_alloc(rng.randint(1, 1500))
+            if c is not None:
+                pooled.append(c)
+        elif op == "pool_free" and pooled:
+            drv.pool_free(pooled.pop(rng.randrange(len(pooled))))
+        elif op == "pool_trim":
+            drv.pool_trim()
+        elif op == "new_tbuf" and len(tbufs) < 6:
+            tbufs.append(drv.create_tracked_buffer())
+        elif op == "new_view" and tbufs:
+            lo = rng.randrange(TBUF_BYTES)
+            hi = min(TBUF_BYTES, lo + rng.randint(1, TBUF_BYTES))
+            views.append((rng.choice(tbufs), lo, hi))
+        elif op == "write_view" and views:
+            key, lo, hi = rng.choice(views)
+            drv.write_through_view(key, lo, hi, rng.choice(DEVICES))
+        elif op == "map" and views:
+            key, lo, hi = rng.choice(views)
+            mp = drv.map_view(key, lo, hi, rng.choice(DEVICES))
+            if mp is not None:
+                maps.append(mp)
+        elif op == "unmap" and maps:
+            drv.unmap_view(maps.pop(rng.randrange(len(maps))))
+        elif op == "write_whole" and tbufs:
+            drv.write_whole(rng.choice(tbufs), rng.choice(DEVICES))
+        elif op == "migrate" and tbufs:
+            drv.migrate(rng.choice(tbufs), rng.choice(DEVICES))
+        elif op == "drop" and tbufs:
+            key = tbufs.pop(rng.randrange(len(tbufs)))
+            views = [v for v in views if v[0] != key]
+            maps = [mp for mp in maps if mp[0] != key]
+            drv.drop_tracked_buffer(key)
+        drv.check_invariants()
+    # drain: every tracked copy converges to canonical
+    for key in tbufs:
+        for dev in DEVICES:
+            drv.migrate(key, dev)
+    for c in chunks:
+        drv.arena_free(c)
+    for c in pooled:
+        drv.pool_free(c)
+    drv.pool_trim()
+    drv.check_invariants()
+    assert drv.arena.allocated_bytes() == 0
+    assert drv.arena.largest_free() == ARENA_BYTES
+
+
+# ---------------------------------------------------------------------------
+# Span-algebra properties (plain checks + seeded driver)
+# ---------------------------------------------------------------------------
+
+def _bytes_of(spans):
+    out = set()
+    for lo, hi in spans:
+        out.update(range(lo, hi))
+    return out
+
+
+def check_span_union(spans):
+    acc = []
+    for lo, hi in spans:
+        acc = span_union(acc, lo, hi)
+        for (a, b), (c, d) in zip(acc, acc[1:]):
+            assert b < c, "overlapping/touching spans must merge"
+    assert _bytes_of(acc) == _bytes_of(spans)
+    assert span_total(acc) == len(_bytes_of(spans))
+    return acc
+
+
+def check_span_subtract(spans, cut):
+    acc = check_span_union(spans)
+    out = span_subtract(acc, *cut)
+    assert _bytes_of(out) == _bytes_of(acc) - _bytes_of([cut])
+
+
+def check_tracker_vs_bytewise_model(ops, size=128):
+    """Random wrote_span/acquire_spans interleavings vs a brute-force
+    per-byte validity model: the spans acquire_spans returns must cover
+    *exactly* the stale bytes (under-reporting loses writes,
+    over-reporting re-copies clean data)."""
+    tr = ResidencyTracker()
+    valid = {}                      # dev -> bool[size] (present = has copy)
+    for op, dev, (lo, hi) in ops:
+        if op == "w":
+            tr.wrote_span("k", dev, lo, hi)
+            for d, v in valid.items():
+                if d != dev:
+                    v[lo:hi] = False
+            if dev not in valid:
+                valid[dev] = np.zeros(size, bool)
+            valid[dev][lo:hi] = True
+        else:
+            spans = tr.acquire_spans("k", dev, size)
+            got = _bytes_of(spans)
+            model_stale = set(np.flatnonzero(
+                ~valid[dev]).tolist()) if dev in valid else set(range(size))
+            assert got == model_stale, \
+                f"acquire_spans reported {sorted(got)[:8]}..., model " \
+                f"says {sorted(model_stale)[:8]}..."
+            if dev not in valid:
+                valid[dev] = np.zeros(size, bool)
+            valid[dev][:] = True     # fully migrated
+
+
+def _rand_span(rng, size=128):
+    lo = rng.randrange(size)
+    return (lo, min(size, lo + rng.randint(1, size // 2)))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_span_algebra_random(seed):
+    rng = random.Random(seed)
+    spans = [_rand_span(rng) for _ in range(rng.randint(0, 12))]
+    check_span_union(spans)
+    check_span_subtract(spans, _rand_span(rng))
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_tracker_matches_bytewise_model_random(seed):
+    rng = random.Random(100 + seed)
+    ops = [(rng.choice("wr"), rng.choice(DEVICES), _rand_span(rng))
+           for _ in range(rng.randint(1, 24))]
+    check_tracker_vs_bytewise_model(ops)
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis layer: the RuleBasedStateMachine + minimized span properties
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    class MemoryMachine(RuleBasedStateMachine):
+        """Bundle-based lifetimes over :class:`ModelDriver`: hypothesis
+        explores alloc/free/sub-buffer/map/write/migrate interleavings
+        (with shrinking) that the seeded walk samples only sparsely."""
+
+        chunks = Bundle("chunks")      # direct arena allocations
+        pooled = Bundle("pooled")      # pool allocations
+        tbufs = Bundle("tbufs")        # residency-tracked logical buffers
+        views = Bundle("views")        # aliased sub-views of tracked buffers
+        maps = Bundle("maps")          # pending (mapped, unpublished) writes
+
+        @initialize(greedy=st.booleans())
+        def init(self, greedy):
+            self.drv = ModelDriver(greedy=greedy)
+
+        @rule(target=chunks, size=st.integers(1, 2000))
+        def arena_alloc(self, size):
+            c = self.drv.arena_alloc(size)
+            return c if c is not None else multiple()
+
+        @rule(chunk=consumes(chunks))
+        def arena_free(self, chunk):
+            self.drv.arena_free(chunk)
+
+        @rule(target=pooled, size=st.integers(1, 1500))
+        def pool_alloc(self, size):
+            c = self.drv.pool_alloc(size)
+            return c if c is not None else multiple()
+
+        @rule(chunk=consumes(pooled))
+        def pool_free(self, chunk):
+            self.drv.pool_free(chunk)
+
+        @rule()
+        def pool_trim(self):
+            self.drv.pool_trim()
+
+        @rule(target=tbufs)
+        def create_tracked_buffer(self):
+            return self.drv.create_tracked_buffer()
+
+        @rule(target=views, key=tbufs,
+              bounds=st.tuples(st.integers(0, TBUF_BYTES - 1),
+                               st.integers(1, TBUF_BYTES)))
+        def create_view(self, key, bounds):
+            lo, length = bounds
+            return (key, lo, min(TBUF_BYTES, lo + length))
+
+        @rule(view=views, dev=st.sampled_from(DEVICES))
+        def write_through_view(self, view, dev):
+            self.drv.write_through_view(*view, dev)
+
+        @rule(target=maps, view=views, dev=st.sampled_from(DEVICES))
+        def map_view(self, view, dev):
+            mp = self.drv.map_view(*view, dev)
+            return mp if mp is not None else multiple()
+
+        @rule(mapped=consumes(maps))
+        def unmap_view(self, mapped):
+            self.drv.unmap_view(mapped)
+
+        @rule(key=tbufs, dev=st.sampled_from(DEVICES))
+        def write_whole(self, key, dev):
+            self.drv.write_whole(key, dev)
+
+        @rule(key=tbufs, dev=st.sampled_from(DEVICES))
+        def migrate(self, key, dev):
+            self.drv.migrate(key, dev)
+
+        @rule(key=consumes(tbufs))
+        def drop_tracked_buffer(self, key):
+            self.drv.drop_tracked_buffer(key)
+
+        @invariant()
+        def structurally_sound(self):
+            self.drv.check_invariants()
+
+    TestMemoryMachine = MemoryMachine.TestCase
+
+    span_st = st.tuples(st.integers(0, 127), st.integers(1, 64)).map(
+        lambda t: (t[0], min(128, t[0] + t[1])))
+
+    @given(st.lists(span_st, max_size=12))
+    def test_span_union_matches_set_semantics(spans):
+        check_span_union(spans)
+
+    @given(st.lists(span_st, max_size=8), span_st)
+    def test_span_subtract_matches_set_semantics(spans, cut):
+        check_span_subtract(spans, cut)
+
+    @given(st.lists(st.tuples(st.sampled_from(["w", "r"]),
+                              st.sampled_from(DEVICES), span_st),
+                    min_size=1, max_size=24))
+    def test_tracker_staleness_matches_bytewise_model(ops):
+        check_tracker_vs_bytewise_model(ops)
