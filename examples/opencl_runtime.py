@@ -1,7 +1,8 @@
-"""The pocl host-runtime path (paper §2/§3): platform query, buffer
-allocation through Bufalloc, command queues with event dependencies, an
-out-of-order queue exploiting command-level parallelism, event profiling,
-and one NDRange co-executed across two devices (docs/runtime.md).
+"""The pocl host-runtime path (paper §2/§3) through the first-class
+object model (docs/host_api.md): context creation, program build, typed
+buffer allocation, kernel argument binding, an out-of-order event queue,
+event profiling, and one NDRange co-executed across two devices with the
+*same* Kernel object as the single-device launch.
 
   PYTHONPATH=src python examples/opencl_runtime.py
 """
@@ -9,9 +10,7 @@ and one NDRange co-executed across two devices (docs/runtime.md).
 import numpy as np
 
 from repro.core import KernelBuilder
-from repro.runtime import CoExecutor
-from repro.runtime.platform import Platform, create_buffer
-from repro.runtime.queue import CommandQueue
+from repro.runtime import Context
 
 
 def build_scale():
@@ -33,30 +32,35 @@ def build_offset():
 
 
 def main():
-    plat = Platform()
-    print("platform devices:")
-    for d in plat.get_devices():
+    ctx = Context()                                    # clCreateContext
+    print("context devices:")
+    for d in ctx.devices:
         print(f"  {d.info.name}: driver={d.info.driver} "
               f"global_mem={d.query('global_mem_size') >> 20}MiB "
               f"max_wg={d.query('max_work_group_size')}")
 
-    dev = plat.get_devices()[0]
-    scale = dev.build_kernel(build_scale, (64,))
-    offset = dev.build_kernel(build_offset, (64,))
+    # one program holding both kernels (clBuildProgram builds them
+    # together; specialization per local size stays lazy, paper §4.1)
+    prog = ctx.create_program(build_scale, build_offset).build()
+    scale = prog.create_kernel("scale")
+    offset = prog.create_kernel("offset")
 
     n = 256
     host = np.arange(n, dtype=np.float32)
     out = np.zeros(n, np.float32)
-    buf = create_buffer(dev, n, "float32")
+    buf = ctx.create_buffer(n, "float32")              # clCreateBuffer
+
+    # clSetKernelArg: bind the device buffer + scalars once; the same
+    # kernel objects are enqueued below and (for scale) co-executed
+    scale.set_args(x=buf, s=2.0)
+    offset.set_args(x=buf, o=1.0)
 
     # event-ordered pipeline on an out-of-order queue:
     # write -> scale -> offset -> read
-    q = CommandQueue(dev, out_of_order=True)
+    q = ctx.create_queue(out_of_order=True)
     e_w = q.enqueue_write_buffer(buf, host)
-    e_s = q.enqueue_ndrange_kernel(scale, (n,), {"x": buf}, {"s": 2.0},
-                                   wait_for=[e_w])
-    e_o = q.enqueue_ndrange_kernel(offset, (n,), {"x": buf}, {"o": 1.0},
-                                   wait_for=[e_s])
+    e_s = q.enqueue_nd_range(scale, (n,), (64,), wait_for=[e_w])
+    e_o = q.enqueue_nd_range(offset, (n,), (64,), wait_for=[e_s])
     e_r = q.enqueue_read_buffer(buf, out, wait_for=[e_o])
     q.finish()
 
@@ -75,13 +79,14 @@ def main():
               f"end={(p['end_ns'] - t0) / 1e3:8.1f}")
     buf.release()
 
-    # multi-device co-execution: one NDRange split across two devices,
-    # bitwise identical to the single-device result
-    single = scale({"x": host.copy()}, (n,), {"s": 2.0})
-    co = CoExecutor(plat.co_devices(2))
-    merged = co.run(build_scale, (64,), (n,), {"x": host.copy()},
-                    {"s": 2.0}, mode="static")
-    assert merged["x"].tobytes() == np.asarray(single["x"]).tobytes()
+    # multi-device co-execution: the SAME Kernel object (cloned so the
+    # host-array binding never races the queue path), split across two
+    # devices — bitwise identical to the single-device result
+    k_host = scale.clone().set_arg("x", host.copy())
+    single = ctx.launch(k_host, (n,), (64,))
+    co = ctx.create_co_executor(ctx.platform.co_devices(2))
+    merged = co.launch(k_host.clone(), (n,), (64,), mode="static")
+    assert merged["x"].tobytes() == single["x"].tobytes()
     st = co.last_stats
     print(f"co-execution OK: groups per device {st.groups_per_device}, "
           f"{st.migrations} buffer migrations")

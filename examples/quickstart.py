@@ -1,7 +1,8 @@
 """Quickstart: the pocl kernel compiler in 60 seconds.
 
 Authors the paper's Fig. 1 vector dot-product kernel in the SPMD DSL
-(the OpenCL C analogue), compiles it with the pocl pipeline for two
+(the OpenCL C analogue), builds it through the first-class host object
+model — Context -> Program -> Kernel (docs/host_api.md) — for two
 parallel mappings, and validates against the fiber-semantics oracle.
 
   PYTHONPATH=src python examples/quickstart.py
@@ -9,7 +10,8 @@ parallel mappings, and validates against the fiber-semantics oracle.
 
 import numpy as np
 
-from repro.core import KernelBuilder, compile_kernel, run_ndrange
+from repro.core import KernelBuilder, run_ndrange
+from repro.runtime import Context
 
 
 def build_dot_product():
@@ -33,23 +35,31 @@ def build_dot_product():
 def main():
     n = 256
     rng = np.random.default_rng(0)
-    bufs = {"a": rng.standard_normal(n * 4).astype(np.float32),
-            "b": rng.standard_normal(n * 4).astype(np.float32),
-            "c": np.zeros(n, np.float32)}
+    a = rng.standard_normal(n * 4).astype(np.float32)
+    b = rng.standard_normal(n * 4).astype(np.float32)
 
     # 1. semantics oracle: fiber execution (Clover/Twin-Peaks style)
     ref = run_ndrange(build_dot_product(), (n,), (64,),
-                      {k: v.copy() for k, v in bufs.items()})
+                      {"a": a.copy(), "b": b.copy(),
+                       "c": np.zeros(n, np.float32)})
 
-    # 2. pocl pipeline: parallel-region formation + per-target mapping
+    # 2. the host object model (docs/host_api.md): one Program, one
+    #    Kernel with clSetKernelArg-style bound arguments; the pocl
+    #    pipeline specializes lazily per (device, local_size, target)
+    ctx = Context()
+    prog = ctx.create_program(build_dot_product).build()
+    print(f"program kernels={prog.kernel_names()}")
+    kernel = prog.create_kernel("dot_product")
+    kernel.set_args(a=a, b=b, c=np.zeros(n, np.float32))
+
     for target in ("loop", "vector"):
-        k = compile_kernel(build_dot_product, (64,), target=target)
-        out = k({k2: v.copy() for k2, v in bufs.items()}, (n,))
+        out = ctx.launch(kernel, (n,), (64,), target=target)
         np.testing.assert_allclose(out["c"], ref["c"], rtol=1e-5, atol=2e-6)
-        print(f"target={target:7s} regions={k.num_regions} "
-              f"context={k.context_stats} OK")
+        binary = kernel.bind(ctx.devices[0], (64,), target=target)
+        print(f"target={target:7s} regions={binary.num_regions} "
+              f"context={binary.context_stats} OK")
 
-    expect = (bufs["a"].reshape(-1, 4) * bufs["b"].reshape(-1, 4)).sum(1)
+    expect = (a.reshape(-1, 4) * b.reshape(-1, 4)).sum(1)
     np.testing.assert_allclose(ref["c"], expect, rtol=1e-5, atol=2e-6)
     print("dot product matches numpy; all targets agree with the oracle")
 

@@ -1,6 +1,12 @@
 """Batched serving example: prefill + synchronized batched decode with a
 KV cache, request grouping, greedy sampling.
 
+The engine's runtime resources come from the first-class host Context
+(docs/host_api.md): the driver builds a ``Context``, the engine creates
+its dispatch queue through it, and per-group KV blocks are accounted on
+the context's per-device BufferPool — the same object model that backs
+kernel launches and multi-device co-execution.
+
   PYTHONPATH=src python examples/serve_lm.py
 """
 

@@ -11,6 +11,10 @@ deliverables) is the full SmolLM-135M config; on a TPU slice:
 
 (the same flags work on CPU — expect ~15 s/step at batch 2, seq 64).
 
+Training drives jax directly (no repro runtime objects on the hot
+path); the serving-side counterpart (examples/serve_lm.py) shows the
+first-class Context / Program / Kernel host API (docs/host_api.md).
+
   PYTHONPATH=src python examples/train_lm.py
 """
 

@@ -2,9 +2,12 @@
 
 Public API:
   KernelBuilder    — author SPMD kernels (OpenCL C analogue)
-  compile_kernel   — run the pocl pipeline for a local size + target
-                     (memoized in a content-addressed compilation cache;
-                     target="auto" routes through the autotuner)
+  Program / Kernel — first-class host objects over the compiler
+                     (docs/host_api.md): build once, set_arg, enqueue
+                     anywhere; created through a runtime Context
+  compile_kernel   — deprecated direct entry point (run the pocl
+                     pipeline for a local size + target); kept as a shim
+                     over the same cache/pipeline machinery
   PassManager      — the middle-end pass pipeline (docs/compiler.md);
                      build_plan runs it, producing the WorkGroupPlan all
                      targets share; plan_count counts pipeline runs
@@ -12,22 +15,30 @@ Public API:
   CompilationCache — LRU + disk compilation cache, with a stage-level
                      plan tier (docs/caching.md)
   TuningTable      — persistent per-kernel-shape target winners
+  ReproError       — typed error hierarchy with OpenCL-style status
+                     codes (InvalidArgError, BuildError, MapError, ...)
 """
 
 from .dsl import KernelBuilder
 from .api import compile_kernel, compile_count, CompiledKernel
 from .cache import (CacheKey, CompilationCache, PlanKey, canonical_ir,
                     default_cache, ir_hash, reset_default_cache)
+from .errors import (BuildError, InvalidArgError, InvalidBufferError,
+                     MapError, ReproError, status_name)
 from .passes import (ParallelRegionMD, Pass, PassManager, VerifierError,
                      WorkGroupPlan, build_plan, plan_count, verify_ir)
+from .program import Kernel, Program
 from .autotune import AutotunedKernel, TuningTable, default_table, \
     set_default_table
 from .interp import run_ndrange
 
 __all__ = [
     "KernelBuilder", "compile_kernel", "compile_count", "CompiledKernel",
+    "Program", "Kernel",
     "CacheKey", "CompilationCache", "PlanKey", "canonical_ir",
     "default_cache", "ir_hash", "reset_default_cache",
+    "ReproError", "InvalidArgError", "InvalidBufferError", "BuildError",
+    "MapError", "status_name",
     "ParallelRegionMD", "Pass", "PassManager", "VerifierError",
     "WorkGroupPlan", "build_plan", "plan_count", "verify_ir",
     "AutotunedKernel", "TuningTable", "default_table", "set_default_table",

@@ -1,8 +1,12 @@
-"""Public kernel-compiler API.
+"""Kernel-compiler entry point (the layer under the host object model).
 
-``compile_kernel(build, local_size, target=...)`` runs the full pocl-style
-pipeline at *enqueue* time (the paper specializes the work-group function per
-local size, §4.1) and returns a callable compiled kernel.
+``_compile_kernel(build, local_size, target=...)`` runs the full
+pocl-style pipeline at *enqueue* time (the paper specializes the
+work-group function per local size, §4.1) and returns a callable
+compiled kernel.  Host code reaches it through
+:class:`~repro.core.program.Program` /
+:class:`~repro.runtime.context.Context` (docs/host_api.md); the public
+``compile_kernel`` wrapper survives as a deprecated shim.
 
 Targets:
   ``vector``  — work-items on lanes, if-converted divergence (SIMD mapping)
@@ -25,12 +29,14 @@ instance to use a private cache (each runtime ``Device`` owns one).
 from __future__ import annotations
 
 import threading
+import warnings
 from typing import Callable, Dict, Optional, Sequence, Union
 
 import jax
 import numpy as np
 
 from .cache import CacheKey, CompilationCache, PlanKey, default_cache, ir_hash
+from .errors import InvalidArgError
 from .ir import Function
 from .passes import WorkGroupPlan, build_plan
 from .targets.loop import LoopWGProgram
@@ -162,19 +168,19 @@ def _run_pipeline(fn: Function, local_size: Sequence[int], target: str,
         prog = PallasWGProgram(plan, local_size, horizontal=horizontal,
                                merge_uniform=merge_uniform, use_vml=use_vml)
     else:
-        raise ValueError(f"unknown target {target!r}")
+        raise InvalidArgError(f"unknown target {target!r}")
     return CompiledKernel(prog, name)
 
 
-def compile_kernel(build: Callable[[], Function],
-                   local_size: Sequence[int],
-                   target: str = "vector",
-                   horizontal: bool = True,
-                   merge_uniform: bool = True,
-                   use_vml: bool = False,
-                   cache: Union[bool, CompilationCache, None] = True,
-                   device_key: Optional[str] = None,
-                   plan_cache: Optional[CompilationCache] = None):
+def _compile_kernel(build: Callable[[], Function],
+                    local_size: Sequence[int],
+                    target: str = "vector",
+                    horizontal: bool = True,
+                    merge_uniform: bool = True,
+                    use_vml: bool = False,
+                    cache: Union[bool, CompilationCache, None] = True,
+                    device_key: Optional[str] = None,
+                    plan_cache: Optional[CompilationCache] = None):
     """Compile ``build()`` for ``local_size`` on ``target``.
 
     ``cache=True`` uses the process-default compilation cache; pass a
@@ -212,7 +218,7 @@ def compile_kernel(build: Callable[[], Function],
                                default_table)
         return AutotunedKernel(fn, build, local_size, opts,
                                DEFAULT_CANDIDATES, default_table(),
-                               cache_obj, compile_kernel,
+                               cache_obj, _compile_kernel,
                                device_key=device_key or "",
                                plan_cache=plan_cache)
     if cache_obj is None:
@@ -223,3 +229,29 @@ def compile_kernel(build: Callable[[], Function],
         key, lambda: _run_pipeline(fn, local_size, target,
                                    plan_cache=plan_cache, _ir=key.ir,
                                    **opts))
+
+
+def compile_kernel(build: Callable[[], Function],
+                   local_size: Sequence[int],
+                   target: str = "vector",
+                   **opts):
+    """Deprecated host entry point — compile ``build()`` directly.
+
+    Superseded by the first-class host object model (docs/host_api.md)::
+
+        ctx = Context()
+        prog = ctx.create_program(build)
+        kernel = prog.create_kernel(name)
+
+    which routes the identical compilation (same cache keys, same
+    compile counts) through :class:`~repro.core.program.Program`'s lazy
+    per-(device, local_size, target) specialization and adds typed
+    argument validation.  This shim stays for existing call sites and
+    benchmarks of the compiler layer; new code should build kernels
+    through a :class:`~repro.runtime.context.Context`.
+    """
+    warnings.warn(
+        "compile_kernel() is deprecated as a host entry point; build a "
+        "Context and use ctx.create_program(build).create_kernel(name) "
+        "(docs/host_api.md)", DeprecationWarning, stacklevel=2)
+    return _compile_kernel(build, local_size, target=target, **opts)

@@ -31,6 +31,7 @@ import warnings
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
 from .cache import CacheKey, ir_hash
+from .errors import BuildError
 from .ir import Function
 
 DEFAULT_CANDIDATES: Tuple[str, ...] = ("loop", "vector", "pallas")
@@ -271,9 +272,13 @@ class AutotunedKernel:
                     f"autotuner: candidate {target!r} failed for "
                     f"{self.name!r}: {failures[target]}", RuntimeWarning)
         if not timings:
-            raise RuntimeError(
+            # every candidate failed: a build failure of the kernel, not
+            # a tuning decision (typed, CL_BUILD_PROGRAM_FAILURE)
+            raise BuildError(
                 f"autotuner: no candidate target compiled {self.name!r} "
-                f"(tried {self.candidates}): {failures}")
+                f"(tried {self.candidates}): {failures}",
+                build_log="\n".join(f"{t}: {msg}"
+                                    for t, msg in failures.items()))
         winner = min(timings, key=timings.get)
         self.table.record(key, winner, timings, failures)
         if self.cache is not None:

@@ -37,6 +37,7 @@ from collections import OrderedDict
 from dataclasses import dataclass
 from typing import Callable, Dict, Optional, Sequence, Tuple
 
+from .errors import InvalidArgError
 from .ir import CondBranch, Function, Jump, Return, Value
 
 # bump when the compiler pipeline changes in ways that invalidate old
@@ -224,6 +225,13 @@ class CompilationCache:
     def __init__(self, capacity: int = 128,
                  disk_dir: Optional[str] = None,
                  plan_capacity: Optional[int] = None):
+        if int(capacity) <= 0 or (plan_capacity is not None
+                                  and int(plan_capacity) <= 0):
+            # a zero-capacity LRU would evict every insert immediately —
+            # callers who want no caching pass cache=False instead
+            raise InvalidArgError(
+                f"CompilationCache capacity must be positive, got "
+                f"capacity={capacity!r} plan_capacity={plan_capacity!r}")
         self.capacity = int(capacity)
         self.plan_capacity = int(plan_capacity if plan_capacity is not None
                                  else capacity)

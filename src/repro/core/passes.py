@@ -43,6 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
+from .errors import BuildError, register_error
 from .ir import CondBranch, Function, Jump, Return
 from .regions import (WGInfo, form_regions, inject_loop_barriers, normalize,
                       out_of_ssa, tail_duplicate)
@@ -62,13 +63,24 @@ def plan_count() -> int:
         return _plans_built
 
 
-class VerifierError(AssertionError):
+@register_error
+class VerifierError(BuildError, AssertionError):
     """Structural IR invariant violation, attributed to the pass whose
-    output failed verification (``.pass_name``)."""
+    output failed verification (``.pass_name``).
+
+    Part of the typed :class:`~repro.core.errors.ReproError` hierarchy as
+    a :class:`~repro.core.errors.BuildError`: a pass breaking the IR is a
+    program-build failure, and :meth:`repro.core.program.Program.build`
+    folds the report into the build log.  (``AssertionError`` is kept as
+    a base for pre-hierarchy call sites.)"""
+
+    code = -45
+    code_name = "CL_INVALID_PROGRAM_EXECUTABLE"
 
     def __init__(self, pass_name: str, message: str):
         self.pass_name = pass_name
-        super().__init__(f"[after pass {pass_name!r}] {message}")
+        text = f"[after pass {pass_name!r}] {message}"
+        super().__init__(text, build_log=text)
 
 
 # ---------------------------------------------------------------------------

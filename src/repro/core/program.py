@@ -1,0 +1,441 @@
+"""First-class Program / Kernel host objects (docs/host_api.md, paper §3).
+
+OpenCL's host object model separates *what* is compiled from *where* and
+*how* it runs: a ``cl_program`` holds source for one or more kernels, is
+built per device, and hands out ``cl_kernel`` objects whose arguments are
+bound with ``clSetKernelArg`` before any number of enqueues.  This module
+rebuilds that tier over the existing compiler:
+
+* :class:`Program` — created from one or more IR builders
+  (``Context.create_program``).  The middle-end (the pass-manager
+  pipeline producing the shared
+  :class:`~repro.core.passes.WorkGroupPlan`) runs through the owning
+  context's *shared* plan tier, so every device specializing the same
+  program reuses one region-formation run.  Per-(device, local_size,
+  target) work-group functions are specialized **lazily at enqueue
+  time** (the paper compiles one work-group function per local size,
+  §4.1) through each device's compilation cache — ``Program.build()``
+  only runs the target-independent pipeline plus the structural IR
+  verifier, accumulating a ``build_log()`` the way
+  ``clGetProgramBuildInfo`` does.
+* :class:`Kernel` — one named kernel of a program with OpenCL
+  ``set_arg`` semantics: positional or named argument binding, validated
+  against the IR signature (buffer vs. scalar, dtype, LOCAL args are
+  auto-materialized and not settable), and a cheap :meth:`Kernel.clone`
+  so concurrent enqueues on out-of-order queues never share mutable
+  argument state.
+
+One ``Kernel`` object flows unchanged through single-device enqueue
+(``CommandQueue.enqueue_nd_range``), multi-device co-execution
+(``CoExecutor.launch``), and direct host launch (``Context.launch``);
+the compiled artifact underneath is identical in all three (same cache
+keys, bitwise-identical results — tests/test_host_api.py).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from . import ir
+from .api import _compile_kernel
+from .cache import CompilationCache, PlanKey, default_cache, ir_hash
+from .errors import BuildError, InvalidArgError
+from .ir import Function
+from .passes import VerifierError, build_plan
+
+
+def _classify(value) -> str:
+    """Host-API argument class of ``value``: ``"host"`` (ndarray),
+    ``"shared"`` (SharedBuffer), ``"device"`` (Buffer/SubBuffer view),
+    or ``"scalar"``.  Duck-typed so the core layer never imports the
+    runtime layer."""
+    if isinstance(value, np.ndarray) and value.ndim > 0:
+        return "host"
+    if hasattr(value, "tracker") and hasattr(value, "host"):
+        return "shared"
+    if hasattr(value, "root") and hasattr(value, "data"):
+        return "device"
+    return "scalar"
+
+
+def _buffer_dtype(value, kind: str):
+    """The raw dtype spec of a buffer-class argument (normalized by the
+    caller via ``np.dtype`` — buffers may carry any dtype spelling)."""
+    if kind == "shared":
+        return value.host.dtype
+    return value.dtype             # ndarray / device Buffer / SubBuffer
+
+
+class Program:
+    """A set of kernels compiled together (``cl_program`` analogue).
+
+    Parameters
+    ----------
+    builders:
+        Zero-argument callables, each returning a fresh
+        :class:`~repro.core.ir.Function` (the same contract
+        ``compile_kernel`` had — the pipeline mutates the CFG, so every
+        specialization rebuilds from source).  Kernel names come from
+        the built functions.
+    context:
+        The owning :class:`~repro.runtime.context.Context` (may be
+        ``None`` for context-free compiler-level use).  Provides the
+        shared compilation/plan cache tier.
+    options:
+        Build options applied to every kernel: ``horizontal``,
+        ``merge_uniform``, ``use_vml`` — the ``clBuildProgram`` options
+        string analogue.
+    """
+
+    def __init__(self, builders: Sequence[Callable[[], Function]],
+                 context=None, horizontal: bool = True,
+                 merge_uniform: bool = True, use_vml: bool = False):
+        if not builders:
+            raise InvalidArgError("Program needs at least one IR builder")
+        self.context = context
+        self.options: Dict[str, object] = dict(
+            horizontal=horizontal, merge_uniform=merge_uniform,
+            use_vml=use_vml)
+        self._builders: Dict[str, Callable[[], Function]] = {}
+        self._fns: Dict[str, Function] = {}       # signature reference
+        self._ir: Dict[str, str] = {}             # canonical IR hashes
+        for build in builders:
+            fn = build()
+            if fn.name in self._builders:
+                raise InvalidArgError(
+                    f"duplicate kernel name {fn.name!r} in program")
+            self._builders[fn.name] = build
+            self._fns[fn.name] = fn
+            self._ir[fn.name] = ir_hash(fn)
+        self._log: List[str] = []
+        self._built = False
+        self._binaries: Dict[tuple, object] = {}
+        self._lock = threading.Lock()
+
+    # -- introspection ---------------------------------------------------------
+    def kernel_names(self) -> List[str]:
+        """clGetProgramInfo(CL_PROGRAM_KERNEL_NAMES)."""
+        return list(self._builders)
+
+    def function(self, name: str) -> Function:
+        """The *unmutated* signature IR of kernel ``name`` (argument
+        validation reads this; specializations rebuild their own)."""
+        try:
+            return self._fns[name]
+        except KeyError:
+            raise InvalidArgError(
+                f"no kernel {name!r} in program; have "
+                f"{self.kernel_names()}") from None
+
+    def build_log(self) -> str:
+        """clGetProgramBuildInfo(CL_PROGRAM_BUILD_LOG): accumulated
+        middle-end diagnostics, including the structural-verifier report
+        of a failed :meth:`build`."""
+        return "\n".join(self._log)
+
+    # -- build (middle-end + verifier; specialization stays lazy) -------------
+    def _plan_cache(self) -> CompilationCache:
+        if self.context is not None:
+            return self.context.cache
+        return default_cache()
+
+    def plan_key(self, name: str) -> PlanKey:
+        return PlanKey.make(self._ir[name],
+                            horizontal=self.options["horizontal"],
+                            merge_uniform=self.options["merge_uniform"])
+
+    def build(self, verify: bool = True) -> "Program":
+        """clBuildProgram: run the target-independent middle-end for
+        every kernel through the shared plan tier, with the structural
+        IR verifier between passes (``verify=True``).
+
+        Per-(device, local_size, target) specialization is deliberately
+        *not* done here — it happens at enqueue time (paper §4.1) and is
+        memoized per device; this call only proves the kernels survive
+        the pass pipeline and warms the plan tier every later
+        specialization hits.  The verification pipeline always runs
+        (the plan tier may already hold an *unverified* plan from a
+        lazy specialization — a cache hit must not skip the proof);
+        the verified plan then seeds the tier if it was empty.  On a
+        verifier failure the offending pass's report lands in
+        :meth:`build_log` and a
+        :class:`~repro.core.errors.BuildError` is raised
+        (CL_BUILD_PROGRAM_FAILURE semantics)."""
+        cache = self._plan_cache()
+        for name, build in self._builders.items():
+            try:
+                plan = build_plan(
+                    build(), horizontal=self.options["horizontal"],
+                    merge_uniform=self.options["merge_uniform"],
+                    verify=verify)
+                cache.get_or_build_plan(self.plan_key(name),
+                                        lambda p=plan: p)
+            except VerifierError as e:
+                self._log.append(f"kernel {name!r}: {e}")
+                raise BuildError(
+                    f"program build failed for kernel {name!r} "
+                    f"(see build_log())",
+                    build_log=self.build_log()) from e
+            self._log.append(f"kernel {name!r}: middle-end ok "
+                             f"(plan {self.plan_key(name).ir[:12]}...)")
+        self._built = True
+        return self
+
+    # -- lazy specialization ----------------------------------------------------
+    def binary_for(self, name: str, local_size: Sequence[int],
+                   device=None, target: Optional[str] = None):
+        """The launchable work-group function of kernel ``name`` for
+        ``(device, local_size, target)`` — a
+        :class:`~repro.core.api.CompiledKernel` (or
+        :class:`~repro.core.autotune.AutotunedKernel` for ``"auto"``).
+
+        With a ``device``, compilation is memoized in that device's
+        compilation cache and the target defaults to the device driver's
+        mapping; the *plan* tier is always the program's shared cache,
+        so N devices specializing one kernel run region formation once.
+        """
+        if name not in self._builders:
+            raise InvalidArgError(
+                f"no kernel {name!r} in program; have "
+                f"{self.kernel_names()}")
+        lsz = tuple(int(x) for x in local_size)
+        dev_key = device.info.name if device is not None else ""
+        key = (name, dev_key, lsz, target)
+        with self._lock:
+            binary = self._binaries.get(key)
+        if binary is not None:
+            return binary
+        build = self._builders[name]
+        if device is not None:
+            opts = dict(self.options)
+            if target is not None:
+                opts["target"] = target
+            binary = device.compile(build, lsz,
+                                    plan_cache=self._plan_cache(), **opts)
+        else:
+            binary = _compile_kernel(
+                build, lsz, target=target or "vector",
+                cache=self.context.cache if self.context is not None
+                else True,
+                plan_cache=self._plan_cache(), **self.options)
+        with self._lock:
+            self._binaries.setdefault(key, binary)
+            return self._binaries[key]
+
+    # -- kernels -----------------------------------------------------------------
+    def create_kernel(self, name: Optional[str] = None) -> "Kernel":
+        """clCreateKernel: a fresh argument-binding object for kernel
+        ``name`` (defaults to the program's only kernel)."""
+        if name is None:
+            names = self.kernel_names()
+            if len(names) != 1:
+                raise InvalidArgError(
+                    f"program has {len(names)} kernels {names}; "
+                    f"create_kernel needs an explicit name")
+            name = names[0]
+        return Kernel(self, name)
+
+    def create_kernels(self) -> Dict[str, "Kernel"]:
+        """clCreateKernelsInProgram: one Kernel per kernel name."""
+        return {n: Kernel(self, n) for n in self.kernel_names()}
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        return (f"<Program kernels={self.kernel_names()} "
+                f"built={self._built}>")
+
+
+class Kernel:
+    """One kernel of a :class:`Program` with bound arguments
+    (``cl_kernel`` analogue).
+
+    Arguments are set positionally or by name (:meth:`set_arg`,
+    :meth:`set_args`) and validated against the IR signature
+    immediately — wrong dtype, buffer-vs-scalar confusion, or unknown
+    names raise :class:`~repro.core.errors.InvalidArgError` at
+    ``set_arg`` time, not deep inside a launch.  The positional order is
+    the declaration order: global/constant buffer arguments first, then
+    scalars (LOCAL-space arrays are materialized by the work-group
+    function itself, pocl §4.7, and cannot be set).
+
+    A Kernel is intentionally *mutable* argument state over an immutable
+    compiled artifact — for concurrent enqueues with different
+    arguments, :meth:`clone` the kernel per enqueue (cheap: the program,
+    IR, and every compiled binary are shared)."""
+
+    def __init__(self, program: Program, name: str):
+        self.program = program
+        self.name = name
+        self._fn = program.function(name)
+        self._buffer_args = [a for a in self._fn.buffer_args
+                             if a.space != ir.LOCAL]
+        self._scalar_args = list(self._fn.scalar_args)
+        self._order = ([a.name for a in self._buffer_args]
+                       + [a.name for a in self._scalar_args])
+        self._by_name = {a.name: a for a in self._buffer_args}
+        self._by_name.update({a.name: a for a in self._scalar_args})
+        self._args: Dict[str, object] = {}
+
+    # -- signature introspection -------------------------------------------------
+    @property
+    def num_args(self) -> int:
+        """clGetKernelInfo(CL_KERNEL_NUM_ARGS) over the settable args."""
+        return len(self._order)
+
+    def arg_info(self) -> List[Tuple[str, str, str]]:
+        """``(name, kind, dtype)`` per settable argument, positional
+        order (clGetKernelArgInfo)."""
+        out = [(a.name, "buffer", a.dtype) for a in self._buffer_args]
+        out += [(a.name, "scalar", a.dtype) for a in self._scalar_args]
+        return out
+
+    # -- argument binding ---------------------------------------------------------
+    def set_arg(self, key, value) -> "Kernel":
+        """clSetKernelArg: bind one argument by position (int) or name
+        (str).  Returns ``self`` for chaining."""
+        if isinstance(key, (int, np.integer)):
+            idx = int(key)
+            if not 0 <= idx < len(self._order):
+                raise InvalidArgError(
+                    f"kernel {self.name!r} has {len(self._order)} "
+                    f"settable args, index {idx} out of range "
+                    f"({self.arg_info()})")
+            name = self._order[idx]
+        elif isinstance(key, str):
+            name = key
+            if name not in self._by_name:
+                local = [a.name for a in self._fn.buffer_args
+                         if a.space == ir.LOCAL]
+                hint = (f"; {name!r} is a LOCAL array, materialized by "
+                        f"the work-group function (pocl §4.7), not "
+                        f"settable" if name in local else
+                        f"; settable args: {self._order}")
+                raise InvalidArgError(
+                    f"kernel {self.name!r} has no argument "
+                    f"{name!r}{hint}")
+        else:
+            raise InvalidArgError(
+                f"set_arg key must be an int index or str name, got "
+                f"{type(key).__name__}")
+        arg = self._by_name[name]
+        self._validate(arg, name, value)
+        self._args[name] = value
+        return self
+
+    def _validate(self, arg, name: str, value) -> None:
+        kind = _classify(value)
+        is_buffer = any(a.name == name for a in self._buffer_args)
+        if is_buffer:
+            if kind == "scalar":
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} is a "
+                    f"{arg.dtype} buffer; got scalar {value!r} "
+                    f"(CL_INVALID_ARG_VALUE)")
+            got = _buffer_dtype(value, kind)
+            # compare normalized dtypes, not spellings: a buffer created
+            # with np.float32 or "f4" is the same dtype as "float32"
+            if np.dtype(got) != np.dtype(arg.dtype):
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} expects "
+                    f"dtype {arg.dtype}, got {np.dtype(got).name} "
+                    f"(CL_INVALID_ARG_VALUE)")
+        else:
+            if kind != "scalar":
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} is a "
+                    f"{arg.dtype} scalar; got a {kind} buffer "
+                    f"(CL_INVALID_ARG_VALUE)")
+            if isinstance(value, bool) or not isinstance(
+                    value, (int, float, complex, np.number)):
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} expects a "
+                    f"{arg.dtype} scalar, got "
+                    f"{type(value).__name__} ({value!r})")
+            kind_code = np.dtype(arg.dtype).kind
+            if kind_code != "c" and isinstance(
+                    value, (complex, np.complexfloating)):
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} expects a "
+                    f"{arg.dtype} scalar, got complex {value!r}")
+            if kind_code in "iu" and isinstance(
+                    value, (float, np.floating)) and \
+                    not float(value).is_integer():
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {name!r} expects an "
+                    f"{arg.dtype} scalar; {value!r} has a fractional "
+                    f"part (CL_INVALID_ARG_VALUE)")
+
+    def set_args(self, *positional, **named) -> "Kernel":
+        """Bind several arguments at once: positionally (declaration
+        order) and/or by keyword."""
+        for i, v in enumerate(positional):
+            self.set_arg(i, v)
+        for k, v in named.items():
+            self.set_arg(k, v)
+        return self
+
+    def clone(self) -> "Kernel":
+        """clCloneKernel: an independent argument binding sharing the
+        program and every compiled binary — O(#args), no compilation.
+        Clone per enqueue when launching concurrently with different
+        arguments (out-of-order queues, co-execution chunks)."""
+        k = Kernel.__new__(Kernel)
+        k.program = self.program
+        k.name = self.name
+        k._fn = self._fn
+        k._buffer_args = self._buffer_args
+        k._scalar_args = self._scalar_args
+        k._order = self._order
+        k._by_name = self._by_name
+        k._args = dict(self._args)
+        return k
+
+    # -- launch-side access -------------------------------------------------------
+    def missing_args(self) -> List[str]:
+        return [n for n in self._order if n not in self._args]
+
+    def launch_args(self, accept: Sequence[str] = ("host", "shared",
+                                                   "device")
+                    ) -> Tuple[Dict[str, object], Dict[str, object]]:
+        """The bound ``(buffers, scalars)`` dicts for a launch.
+
+        Raises :class:`~repro.core.errors.InvalidArgError`
+        (CL_INVALID_KERNEL_ARGS) when arguments are unset, or when a
+        buffer argument's class is outside ``accept`` — e.g. a
+        device-bound Buffer handed to a co-executed launch, which needs
+        host arrays or SharedBuffers."""
+        missing = self.missing_args()
+        if missing:
+            raise InvalidArgError(
+                f"kernel {self.name!r} launched with unset arguments "
+                f"{missing} (CL_INVALID_KERNEL_ARGS)")
+        buffers: Dict[str, object] = {}
+        scalars: Dict[str, object] = {}
+        for a in self._buffer_args:
+            v = self._args[a.name]
+            kind = _classify(v)
+            if kind not in accept:
+                raise InvalidArgError(
+                    f"kernel {self.name!r} argument {a.name!r} is a "
+                    f"{kind} buffer; this launch path accepts "
+                    f"{tuple(accept)}")
+            buffers[a.name] = v
+        for a in self._scalar_args:
+            scalars[a.name] = self._args[a.name]
+        return buffers, scalars
+
+    def bind(self, device, local_size: Sequence[int],
+             target: Optional[str] = None):
+        """The compiled work-group function for ``(device, local_size)``
+        — delegates to :meth:`Program.binary_for` (lazy, cached)."""
+        return self.program.binary_for(self.name, local_size,
+                                       device=device, target=target)
+
+    def __repr__(self) -> str:  # pragma: no cover - debugging aid
+        bound = {n: _classify(v) for n, v in self._args.items()}
+        return f"<Kernel {self.name!r} args={bound}>"
+
+
+__all__ = ["Program", "Kernel"]

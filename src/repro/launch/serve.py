@@ -15,6 +15,7 @@ import numpy as np
 from repro import configs
 from repro.distributed.sharding import BASELINE_RULES
 from repro.models import init_params
+from repro.runtime import Context
 from repro.serving import ServingEngine, Request
 
 
@@ -42,9 +43,13 @@ def main(argv=None):
         aux["frames"] = np.asarray(rng.standard_normal(
             (args.batch_slots, cfg.enc_seq, cfg.d_model)), np.float32)
 
+    # the engine's dispatch queue and KV-block pool come from a host
+    # Context (docs/host_api.md) — the same object model kernel launches
+    # and co-execution use
+    ctx = Context()
     eng = ServingEngine(cfg, params, BASELINE_RULES,
                         batch_slots=args.batch_slots, max_seq=args.max_seq,
-                        aux_inputs=aux)
+                        aux_inputs=aux, context=ctx)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, rng.integers(4, 17),
                                         dtype=np.int64).astype(np.int32),
                     max_new_tokens=args.max_new)
@@ -59,6 +64,10 @@ def main(argv=None):
     if dag:
         print(f"  dag: {dag['groups']} group(s), {dag['events']} events, "
               f"overlap {dag['overlap']:.2f}x")
+    kv = eng.kv_stats
+    print(f"  kv pool: {kv['hits']} hits / {kv['misses']} misses, "
+          f"{kv['kv_bytes_per_group']} B/group "
+          f"(context pools: {list(ctx.pool_stats())})")
     for i, r in enumerate(done):
         print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
               f"-> {r.out_tokens}")

@@ -1,7 +1,9 @@
 """OpenCL-shaped runtime: host layer over the device layer (paper §3).
 
-Layering (docs/runtime.md, docs/memory.md):
+Layering (docs/runtime.md, docs/memory.md, docs/host_api.md):
 
+  context.py    — Context: the host object-model root (shared caches,
+                  pooled allocation, programs/kernels/queues)
   events.py     — Event / UserEvent: status ladder + profiling counters
   queue.py      — CommandQueue: the event-DAG scheduler per device
   scheduler.py  — CoExecutor: one NDRange split across several devices
@@ -10,7 +12,11 @@ Layering (docs/runtime.md, docs/memory.md):
   memory.py     — sub-buffers, zero-copy map/unmap, size-class pooling
 """
 
+from ..core.errors import (BuildError, InvalidArgError, InvalidBufferError,
+                           ReproError, status_name)
+from ..core.program import Kernel, Program
 from .bufalloc import Bufalloc, OutOfMemory, ResidencyTracker
+from .context import Context, default_context
 from .events import (CommandError, DependencyError, Event, EventStatus,
                      UserEvent, wait_for_events)
 from .memory import (MAP_READ, MAP_READ_WRITE, MAP_WRITE,
@@ -22,6 +28,9 @@ from .queue import CommandQueue
 from .scheduler import CoExecStats, CoExecutor, SharedBuffer, split_groups
 
 __all__ = [
+    "Context", "default_context", "Program", "Kernel",
+    "ReproError", "InvalidArgError", "InvalidBufferError", "BuildError",
+    "status_name",
     "Bufalloc", "OutOfMemory", "ResidencyTracker",
     "Event", "EventStatus", "UserEvent", "CommandError", "DependencyError",
     "wait_for_events",

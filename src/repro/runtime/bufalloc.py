@@ -38,9 +38,16 @@ import threading
 from dataclasses import dataclass
 from typing import Dict, Hashable, Iterator, List, Optional, Tuple
 
+from ..core.errors import ReproError, register_error
 
-class OutOfMemory(Exception):
-    pass
+
+@register_error
+class OutOfMemory(ReproError, MemoryError):
+    """Arena exhausted (CL_MEM_OBJECT_ALLOCATION_FAILURE).  Part of the
+    typed :class:`~repro.core.errors.ReproError` hierarchy."""
+
+    code = -4
+    code_name = "CL_MEM_OBJECT_ALLOCATION_FAILURE"
 
 
 @dataclass

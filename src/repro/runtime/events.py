@@ -30,6 +30,8 @@ import threading
 import time
 from typing import Callable, Dict, List, Optional
 
+from ..core.errors import ReproError, register_error
+
 _event_ids = itertools.count()
 
 
@@ -49,12 +51,24 @@ class EventStatus(enum.IntEnum):
 ERROR_STATUS = -1
 
 
-class CommandError(RuntimeError):
-    """A command's function raised; the original exception is ``__cause__``."""
+@register_error
+class CommandError(ReproError, RuntimeError):
+    """A command's function raised; the original exception is ``__cause__``.
+    Part of the typed :class:`~repro.core.errors.ReproError` hierarchy;
+    a failed event's ``status`` surfaces the error's ``code`` (OpenCL's
+    negative-status convention)."""
+
+    code = -9998
+    code_name = "REPRO_COMMAND_FAILED"
 
 
+@register_error
 class DependencyError(CommandError):
-    """A command was abandoned because one of its wait-list events failed."""
+    """A command was abandoned because one of its wait-list events failed
+    (CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST)."""
+
+    code = -14
+    code_name = "CL_EXEC_STATUS_ERROR_FOR_EVENTS_IN_WAIT_LIST"
 
 
 class Event:
@@ -97,9 +111,13 @@ class Event:
     # -- status ---------------------------------------------------------------
     @property
     def status(self) -> int:
-        """Current execution status; negative once terminated by an error."""
+        """Current execution status; negative once terminated by an
+        error — the typed :class:`~repro.core.errors.ReproError` code
+        when the failure carries one (e.g. -14 for a DependencyError),
+        else the generic :data:`ERROR_STATUS`."""
         if self.error is not None:
-            return ERROR_STATUS
+            code = getattr(self.error, "code", ERROR_STATUS)
+            return int(code) if int(code) < 0 else ERROR_STATUS
         return int(self._status)
 
     @property

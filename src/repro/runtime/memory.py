@@ -35,12 +35,9 @@ from typing import Dict, List, Optional, Tuple
 
 import numpy as np
 
+from ..core.errors import MapError
 from .bufalloc import Bufalloc, Chunk, OutOfMemory
 from .platform import Buffer
-
-
-class MapError(RuntimeError):
-    """Illegal sub-buffer or map/unmap operation (CL_INVALID_* family)."""
 
 
 # map flags (clEnqueueMapBuffer map_flags analogues)

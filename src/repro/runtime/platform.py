@@ -23,13 +23,15 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
 import jax
 import numpy as np
 
-from ..core.api import CompiledKernel, compile_kernel
+from ..core.api import CompiledKernel, _compile_kernel
 from ..core.cache import CompilationCache
+from ..core.errors import InvalidBufferError
 from ..core.ir import Function
 from .bufalloc import Bufalloc, Chunk
 
@@ -71,16 +73,32 @@ class Device:
         self.compile_cache = CompilationCache.from_env()
 
     # -- device layer: kernel compilation -------------------------------------
-    def build_kernel(self, build: Callable[[], Function],
-                     local_size: Sequence[int], **opts) -> CompiledKernel:
-        """clBuildProgram + clCreateKernel for this device: run the pocl
-        pipeline for ``local_size`` on the device's target, memoized in
-        the device cache.  Autotuned devices key their tuning decisions by
-        device name, so co-executing heterogeneous devices measure
-        independently."""
+    def compile(self, build: Callable[[], Function],
+                local_size: Sequence[int], **opts) -> CompiledKernel:
+        """Device-layer compilation: run the pocl pipeline for
+        ``local_size`` on the device's target, memoized in the device
+        cache.  Autotuned devices key their tuning decisions by device
+        name, so co-executing heterogeneous devices measure
+        independently.  This is the internal specialization primitive
+        :meth:`repro.core.program.Program` builds on; host code should go
+        through ``Context.create_program`` (docs/host_api.md)."""
         opts.setdefault("cache", self.compile_cache)
         opts.setdefault("device_key", self.info.name)
-        return compile_kernel(build, local_size, target=self._target, **opts)
+        opts.setdefault("target", self._target)
+        return _compile_kernel(build, local_size, **opts)
+
+    def build_kernel(self, build: Callable[[], Function],
+                     local_size: Sequence[int], **opts) -> CompiledKernel:
+        """Deprecated host entry point (clBuildProgram + clCreateKernel in
+        one call).  Use ``Context.create_program(build)`` and specialize
+        through :class:`~repro.core.program.Kernel` objects instead; this
+        shim delegates to the same device-cache compilation."""
+        warnings.warn(
+            "Device.build_kernel() is deprecated; use Context."
+            "create_program(build).create_kernel(name) and enqueue the "
+            "Kernel object (docs/host_api.md)",
+            DeprecationWarning, stacklevel=2)
+        return self.compile(build, local_size, **opts)
 
     def cache_stats(self) -> Dict[str, int]:
         """Compilation-cache counters for this device (hits, misses,
@@ -110,9 +128,14 @@ class Buffer:
     """
 
     def __init__(self, device: Device, size_bytes: int, dtype: str,
-                 n_elems: int):
+                 n_elems: int, pool=None):
         self.device = device
-        self.chunk: Chunk = device.allocator.alloc(size_bytes)
+        # a pool-backed buffer draws its chunk from (and releases it to)
+        # a size-class BufferPool over the device arena instead of the
+        # raw first-fit allocator (Context.create_buffer does this)
+        self._pool = pool
+        self.chunk: Chunk = (pool.alloc(size_bytes) if pool is not None
+                             else device.allocator.alloc(size_bytes))
         self.dtype = dtype
         self.itemsize = np.dtype(dtype).itemsize
         self.n_elems = n_elems
@@ -165,7 +188,10 @@ class Buffer:
 
     def release(self) -> None:
         if self.chunk is not None:
-            self.device.allocator.free(self.chunk)
+            if self._pool is not None:
+                self._pool.free(self.chunk)
+            else:
+                self.device.allocator.free(self.chunk)
             self.chunk = None
 
 
@@ -224,11 +250,40 @@ class Platform:
         return {d.info.name: d.cache_stats() for d in self.devices}
 
 
-def create_buffer(device: Device, n_elems: int, dtype: str = "float32"
-                  ) -> Buffer:
-    """clCreateBuffer: allocate ``n_elems`` of ``dtype`` on ``device``."""
-    itemsize = np.dtype(dtype).itemsize
-    return Buffer(device, n_elems * itemsize, dtype, n_elems)
+def validate_buffer_request(n_elems, dtype) -> int:
+    """Validate a buffer-creation request; returns the element size.
+
+    Raises :class:`~repro.core.errors.InvalidBufferError`
+    (CL_INVALID_BUFFER_SIZE) for a zero/negative/non-integral element
+    count or an unknown dtype string — *before* the request reaches the
+    Bufalloc arena, which would otherwise fail deep inside chunk
+    bookkeeping with an untyped error (or silently clamp a zero-byte
+    allocation to the alignment granule)."""
+    if isinstance(n_elems, bool) or not isinstance(
+            n_elems, (int, np.integer)):
+        raise InvalidBufferError(
+            f"buffer element count must be an integer, got "
+            f"{type(n_elems).__name__} ({n_elems!r})")
+    if n_elems <= 0:
+        raise InvalidBufferError(
+            f"buffer element count must be positive, got {n_elems}")
+    try:
+        itemsize = np.dtype(dtype).itemsize
+    except TypeError as e:
+        raise InvalidBufferError(
+            f"unknown buffer dtype {dtype!r}: {e}") from None
+    return itemsize
+
+
+def create_buffer(device: Device, n_elems: int, dtype: str = "float32",
+                  pool=None) -> Buffer:
+    """clCreateBuffer: allocate ``n_elems`` of ``dtype`` on ``device``.
+    ``pool`` (a :class:`~repro.runtime.memory.BufferPool` over the
+    device's arena) serves the chunk from a size-class free list —
+    ``Context.create_buffer`` passes the context's per-device pool."""
+    itemsize = validate_buffer_request(n_elems, dtype)
+    return Buffer(device, int(n_elems) * itemsize, dtype, int(n_elems),
+                  pool=pool)
 
 
 # ---------------------------------------------------------------------------

@@ -41,12 +41,14 @@ write-back into the parent's span.
 from __future__ import annotations
 
 import threading
+import warnings
 from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
 from ..core.api import CompiledKernel
+from ..core.program import Kernel
 from .events import (CommandError, DependencyError, Event, EventStatus,
                      UserEvent, wait_for_events)
 from .memory import (MAP_READ_WRITE, MAP_WRITE_INVALIDATE, MapError,
@@ -295,17 +297,50 @@ class CommandQueue:
         return self._enqueue(f"ndrange:{kernel.name}", run, wait_for,
                              kind="kernel")
 
+    def enqueue_nd_range(self, kernel: Kernel,
+                         global_size: Sequence[int],
+                         local_size: Sequence[int],
+                         wait_for: Optional[Sequence[Event]] = None,
+                         group_range: Optional[Tuple[int, int]] = None,
+                         target: Optional[str] = None) -> Event:
+        """clEnqueueNDRangeKernel over a first-class
+        :class:`~repro.core.program.Kernel` object (docs/host_api.md).
+
+        Arguments were bound with ``kernel.set_arg``/``set_args`` and
+        must be device-resident :class:`Buffer`/:class:`~repro.runtime.
+        memory.SubBuffer` objects; they are validated and *snapshotted
+        now* (OpenCL: an enqueue captures the kernel's current
+        arguments, so mutating or cloning the kernel afterwards never
+        races the command).  Specialization for ``local_size`` on this
+        queue's device happens when the command runs — the paper's
+        enqueue-time work-group-function compilation (§4.1), memoized in
+        the device cache, so only the first enqueue compiles."""
+        buffers, scalars = kernel.launch_args(accept=("device",))
+
+        def run():
+            binary = kernel.bind(self.device, local_size, target=target)
+            self._launch(binary, buffers, global_size, scalars,
+                         group_range)
+        return self._enqueue(f"ndrange:{kernel.name}", run, wait_for,
+                             kind="kernel")
+
     def enqueue_kernel(self, build, local_size: Sequence[int],
                        global_size: Sequence[int],
                        buffers: Dict[str, Buffer],
                        scalars: Optional[Dict[str, object]] = None,
                        wait_for=None, **opts) -> Event:
-        """Enqueue-time specialization (paper §4.1): compile ``build`` for
-        ``local_size`` on this queue's device and launch it.  Compilation
-        goes through the device cache, so a steady-state enqueue does zero
-        region-formation or lowering work."""
+        """Deprecated host entry point: compile ``build`` at enqueue
+        time and launch it.  Superseded by binding arguments on a
+        :class:`~repro.core.program.Kernel` and calling
+        :meth:`enqueue_nd_range` — same enqueue-time specialization,
+        same device cache, plus typed argument validation."""
+        warnings.warn(
+            "CommandQueue.enqueue_kernel() is deprecated; create a "
+            "Program/Kernel via Context and use enqueue_nd_range "
+            "(docs/host_api.md)", DeprecationWarning, stacklevel=2)
+
         def run():
-            kernel = self.device.build_kernel(build, local_size, **opts)
+            kernel = self.device.compile(build, local_size, **opts)
             self._launch(kernel, buffers, global_size, scalars, None)
         return self._enqueue("ndrange:<enqueue-compiled>", run, wait_for,
                              kind="kernel")

@@ -48,11 +48,14 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import warnings
 from collections import deque
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..core.errors import InvalidArgError
+from ..core.program import Kernel
 from .bufalloc import ResidencyTracker, Span
 from .platform import Buffer, Device, create_buffer
 from .queue import CommandQueue, Event
@@ -332,11 +335,34 @@ class CoExecutor:
         key = (device, build, tuple(local_size))
         k = self._kernels.get(key)
         if k is None:
-            k = device.build_kernel(build, local_size)
+            k = device.compile(build, local_size)
             self._kernels[key] = k
         return k
 
     # -- the co-executed launch -------------------------------------------------
+    def launch(self, kernel: Kernel, global_size: Sequence[int],
+               local_size: Sequence[int],
+               mode: str = "static",
+               weights: Optional[Sequence[float]] = None
+               ) -> Dict[str, np.ndarray]:
+        """Co-execute a first-class :class:`~repro.core.program.Kernel`
+        over ``global_size``, split across this executor's devices
+        (docs/host_api.md).
+
+        Buffer arguments bound on the kernel must be host ndarrays
+        (wrapped in throwaway :class:`SharedBuffer`\\ s for the launch)
+        or :class:`SharedBuffer`\\ s (keep residency across calls); a
+        device-bound :class:`~repro.runtime.platform.Buffer` is rejected
+        with a typed error — it belongs on a single-device queue.  Each
+        device specializes the kernel through its own compilation cache
+        and the program's shared plan tier, so N devices run region
+        formation once.  Results are bitwise-identical to a
+        single-device launch of the same kernel object."""
+        buffers, scalars = kernel.launch_args(accept=("host", "shared"))
+        kernels = {d: kernel.bind(d, local_size) for d in self.devices}
+        return self._co_run(kernels, local_size, global_size, buffers,
+                            scalars, mode, weights)
+
     def run(self, build: Callable, local_size: Sequence[int],
             global_size: Sequence[int],
             buffers: Dict[str, Union[np.ndarray, SharedBuffer]],
@@ -344,14 +370,35 @@ class CoExecutor:
             mode: str = "static",
             weights: Optional[Sequence[float]] = None
             ) -> Dict[str, np.ndarray]:
-        """Launch ``build`` over ``global_size``, co-executed.
+        """Deprecated host entry point: co-execute a bare IR builder.
+        Superseded by binding arguments on a
+        :class:`~repro.core.program.Kernel` and calling :meth:`launch`
+        — same split/merge machinery, plus typed argument validation
+        and the program's shared plan tier."""
+        warnings.warn(
+            "CoExecutor.run(build, ...) is deprecated; create a "
+            "Program/Kernel via Context and use CoExecutor.launch "
+            "(docs/host_api.md)", DeprecationWarning, stacklevel=2)
+        kernels = {d: self._kernel_for(d, build, local_size)
+                   for d in self.devices}
+        return self._co_run(kernels, local_size, global_size, buffers,
+                            scalars, mode, weights)
 
-        Returns the merged output arrays (keyed like ``buffers``).  Plain
-        ndarrays are wrapped in throwaway :class:`SharedBuffer`s; pass
-        SharedBuffers (see :meth:`shared_buffer`) to keep residency
-        across calls.  ``mode`` is ``"static"`` (one weighted span per
-        device) or ``"steal"`` (shared chunk deque, self-scheduled).
-        """
+    def _co_run(self, kernels: Dict[Device, object],
+                local_size: Sequence[int],
+                global_size: Sequence[int],
+                buffers: Dict[str, Union[np.ndarray, SharedBuffer]],
+                scalars: Optional[Dict[str, object]] = None,
+                mode: str = "static",
+                weights: Optional[Sequence[float]] = None
+                ) -> Dict[str, np.ndarray]:
+        """Split/merge engine behind :meth:`launch` (and the deprecated
+        :meth:`run`): ``kernels`` maps each device to its specialized
+        launchable.  Returns the merged output arrays (keyed like
+        ``buffers``).  Plain ndarrays are wrapped in throwaway
+        :class:`SharedBuffer`\\ s; SharedBuffers keep residency across
+        calls.  ``mode`` is ``"static"`` (one weighted span per device)
+        or ``"steal"`` (shared chunk deque, self-scheduled)."""
         t0 = time.perf_counter()
         lsz = tuple(local_size) + (1,) * (3 - len(local_size))
         gsz = tuple(global_size) + (1,) * (3 - len(global_size))
@@ -367,8 +414,6 @@ class CoExecutor:
                 throwaway.append(sb)
         base = {nm: sb.host for nm, sb in shared.items()}
 
-        kernels = {d: self._kernel_for(d, build, local_size)
-                   for d in self.devices}
         stats = CoExecStats()
         stats.mode = mode
         stats.n_groups = n_groups
@@ -414,7 +459,7 @@ class CoExecutor:
             plan = None
             active = list(self.devices)
         else:
-            raise ValueError(f"unknown co-execution mode {mode!r}")
+            raise InvalidArgError(f"unknown co-execution mode {mode!r}")
 
         # -- event-ordered migration -------------------------------------------
         # each stale (buffer, device) pair becomes an explicit transfer

@@ -41,6 +41,7 @@ import numpy as np
 
 import jax.tree_util as jtu
 
+from repro.core.errors import InvalidArgError
 from repro.distributed.sharding import ShardingRules
 from repro.models import ModelConfig, forward, init_caches
 from repro.runtime.bufalloc import OutOfMemory
@@ -75,13 +76,20 @@ class ServingEngine:
         execute concurrently up to this width (1 disables overlap).
     device:
         Runtime device the dispatch queue binds to; defaults to the
-        process platform's first device.
+        first device of ``context``.
+    context:
+        The :class:`~repro.runtime.context.Context` the engine's
+        runtime resources come from (docs/host_api.md): the dispatch
+        queue is created through it and per-group KV blocks are
+        accounted on its per-device :class:`~repro.runtime.memory.
+        BufferPool` — engines sharing a context share the KV block
+        free lists.  Defaults to the process default context.
     """
 
     def __init__(self, cfg: ModelConfig, params, rules: ShardingRules,
                  batch_slots: int = 4, max_seq: int = 256,
                  aux_inputs: Optional[Dict] = None,
-                 dag_workers: int = 2, device=None):
+                 dag_workers: int = 2, device=None, context=None):
         self.cfg, self.rules = cfg, rules
         self.params = params
         self.B, self.S = batch_slots, max_seq
@@ -110,19 +118,34 @@ class ServingEngine:
         self._calls = {"prefill": 0, "decode": 0}
         self._calls_lock = threading.Lock()
         # request groups dispatch through an out-of-order event DAG; one
-        # chain of events per group, no cross-group edges
+        # chain of events per group, no cross-group edges.  The queue,
+        # device, and KV pool all come from the host Context
+        # (docs/host_api.md) so serving shares the runtime object model
+        # with kernel launches and co-execution.
+        if context is None:
+            from repro.runtime.context import default_context
+            context = default_context()
+        self.context = context
         if device is None:
-            from repro.runtime.platform import default_platform
-            device = default_platform().get_devices()[0]
-        self._queue = CommandQueue(device, out_of_order=True,
-                                   workers=max(1, dag_workers))
-        self._last_dag: Dict[str, Any] = {}
-        # per-group KV-cache accounting goes through a size-class pool
-        # over the device arena (docs/memory.md): each group's cache
-        # block is identically sized, so after the first group every
-        # alloc is an O(1) free-list pop instead of a first-fit walk
+            device = context.devices[0]
         self._kv_bytes = self._cache_bytes()
-        self._kv_pool = BufferPool(device.allocator, min_class=4096)
+        try:
+            self._queue = context.create_queue(
+                device, out_of_order=True, workers=max(1, dag_workers))
+            # per-group KV-cache accounting goes through the context's
+            # dedicated KV-class pool over the device arena
+            # (docs/memory.md): each group's cache block is identically
+            # sized, so after the first group every alloc is an O(1)
+            # free-list pop instead of a first-fit walk
+            self._kv_pool = context.pool_for(device, min_class=4096)
+        except InvalidArgError:
+            # a caller-supplied device outside the context's platform
+            # (pre-context behaviour): fall back to engine-owned
+            # resources so `device=` keeps working unchanged
+            self._queue = CommandQueue(device, out_of_order=True,
+                                       workers=max(1, dag_workers))
+            self._kv_pool = BufferPool(device.allocator, min_class=4096)
+        self._last_dag: Dict[str, Any] = {}
         self._kv_alloc_failures = 0
 
     def _cache_bytes(self) -> int:

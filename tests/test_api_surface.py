@@ -1,0 +1,67 @@
+"""Public-API surface lock (docs/host_api.md §Stability).
+
+Snapshots the ``__all__`` of every public ``repro.*`` package into
+``tests/golden/api_surface.json`` and fails when the surface drifts —
+an accidental export (or a dropped one) is an API change and must be
+made deliberately.  Regenerate after intentional changes:
+
+  REPRO_UPDATE_API=1 PYTHONPATH=src python -m pytest tests/test_api_surface.py
+"""
+
+import importlib
+import json
+import os
+
+# every package that declares a public surface; adding a package here is
+# itself a surface change and lands in the snapshot
+MODULES = [
+    "repro.core",
+    "repro.core.errors",
+    "repro.core.program",
+    "repro.runtime",
+    "repro.runtime.context",
+    "repro.serving",
+    "repro.models",
+    "repro.vml",
+]
+
+GOLDEN = os.path.join(os.path.dirname(__file__), "golden",
+                      "api_surface.json")
+
+
+def current_surface():
+    surface = {}
+    for mod in MODULES:
+        m = importlib.import_module(mod)
+        names = sorted(set(getattr(m, "__all__")))
+        assert len(names) == len(getattr(m, "__all__")), \
+            f"{mod}.__all__ has duplicate entries"
+        missing = [n for n in names if not hasattr(m, n)]
+        assert not missing, f"{mod}.__all__ exports missing names {missing}"
+        surface[mod] = names
+    return surface
+
+
+def test_api_surface_locked():
+    surface = current_surface()
+    if os.environ.get("REPRO_UPDATE_API"):
+        os.makedirs(os.path.dirname(GOLDEN), exist_ok=True)
+        with open(GOLDEN, "w") as f:
+            json.dump(surface, f, indent=1, sort_keys=True)
+            f.write("\n")
+        return
+    assert os.path.exists(GOLDEN), \
+        "no API snapshot; regenerate with REPRO_UPDATE_API=1"
+    with open(GOLDEN) as f:
+        locked = json.load(f)
+    problems = []
+    for mod in sorted(set(locked) | set(surface)):
+        old = set(locked.get(mod, []))
+        new = set(surface.get(mod, []))
+        for n in sorted(new - old):
+            problems.append(f"{mod}: NEW export {n!r}")
+        for n in sorted(old - new):
+            problems.append(f"{mod}: REMOVED export {n!r}")
+    assert not problems, (
+        "public API surface drifted; if intentional, regenerate with "
+        "REPRO_UPDATE_API=1:\n  " + "\n  ".join(problems))

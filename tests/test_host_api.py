@@ -1,0 +1,509 @@
+"""First-class Context / Program / Kernel host API (docs/host_api.md).
+
+Covers the host-object-model acceptance contract: typed set_arg
+signature validation against the IR, Program build logs on verifier
+failure, Kernel.clone under a 4-worker out-of-order queue, one Kernel
+object producing bitwise-identical results through single-device and
+2-device co-executed launches with unchanged compile counts, typed
+buffer-creation validation, the shared plan tier across devices, the
+ReproError status hierarchy, and the deprecation shims over the old
+entry points (which must keep working)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (BuildError, InvalidArgError, InvalidBufferError,
+                        KernelBuilder, ReproError, VerifierError,
+                        compile_count, status_name)
+from repro.core import program as program_mod
+from repro.runtime import (CommandError, Context, DependencyError,
+                           MapError, OutOfMemory, create_buffer,
+                           default_platform)
+
+_uniq = iter(range(10_000))
+
+
+def make_scale_builder(name=None):
+    """A uniquely-named scale kernel builder (unique IR => no cache
+    aliasing between tests measuring compile counts)."""
+    name = name or f"hostapi_scale{next(_uniq)}"
+
+    def build():
+        b = KernelBuilder(name)
+        x = b.arg_buffer("x", "float32")
+        s = b.arg_scalar("s", "float32")
+        g = b.global_id(0)
+        x[g] = x[g] * s
+        return b.finish()
+    return name, build
+
+
+def make_reduce_builder(name=None):
+    """Kernel with a LOCAL array + barrier (tests local-arg rules)."""
+    name = name or f"hostapi_reduce{next(_uniq)}"
+
+    def build():
+        b = KernelBuilder(name)
+        inp = b.arg_buffer("inp", "float32")
+        out = b.arg_buffer("out", "float32")
+        scratch = b.local_array("scratch", "float32", 8)
+        lid, gid, grp = b.local_id(0), b.global_id(0), b.group_id(0)
+        scratch[lid] = inp[gid]
+        b.barrier()
+        s = b.var(b.const(4), name="s")
+        with b.while_loop() as loop:
+            loop.cond(s.get() > 0)
+            with b.if_(lid < s.get()):
+                scratch[lid] = scratch[lid] + scratch[lid + s.get()]
+            b.barrier()
+            s.set(s.get() / 2)
+        with b.if_(lid == 0):
+            out[grp] = scratch[0]
+        return b.finish()
+    return name, build
+
+
+# --------------------------------------------------------------------------
+# Program: names, build, build log
+# --------------------------------------------------------------------------
+
+def test_program_kernel_names_and_build_log():
+    ctx = Context()
+    n1, b1 = make_scale_builder()
+    n2, b2 = make_reduce_builder()
+    prog = ctx.create_program(b1, b2)
+    assert sorted(prog.kernel_names()) == sorted([n1, n2])
+    prog.build()
+    log = prog.build_log()
+    assert n1 in log and n2 in log and "middle-end ok" in log
+    # duplicate kernel names are rejected, typed
+    with pytest.raises(InvalidArgError):
+        ctx.create_program(b1, b1)
+    with pytest.raises(InvalidArgError):
+        prog.create_kernel("nope")
+    # two kernels -> create_kernel() needs an explicit name
+    with pytest.raises(InvalidArgError):
+        prog.create_kernel()
+
+
+def test_program_build_log_on_verifier_failure(monkeypatch):
+    """A middle-end verifier failure surfaces as BuildError with the
+    verifier report in the program build log (CL_BUILD_PROGRAM_FAILURE
+    + CL_PROGRAM_BUILD_LOG semantics)."""
+    ctx = Context()
+    name, build = make_scale_builder()
+    prog = ctx.create_program(build)
+    # warm the plan tier via a lazy (unverified) specialization first:
+    # build() must still run its own verification pipeline — a plan-tier
+    # hit is not a proof
+    prog.create_kernel().bind(ctx.devices[0], (8,))
+    assert ctx.cache.stats.plan_builds == 1
+
+    def broken_build_plan(fn, **kw):
+        raise VerifierError("tail_duplicate",
+                            "block 'b3' unreachable after replication")
+    monkeypatch.setattr(program_mod, "build_plan", broken_build_plan)
+    with pytest.raises(BuildError) as ei:
+        prog.build()
+    assert name in str(ei.value)
+    log = prog.build_log()
+    assert "tail_duplicate" in log and "unreachable" in log
+    assert ei.value.build_log == log
+    # VerifierError itself is a BuildError in the typed hierarchy
+    assert ei.value.__cause__.code == -45
+
+
+# --------------------------------------------------------------------------
+# Kernel: set_arg signature validation
+# --------------------------------------------------------------------------
+
+def test_set_arg_signature_mismatches():
+    ctx = Context()
+    _, build = make_reduce_builder()
+    k = ctx.create_program(build).create_kernel()
+    f32 = np.zeros(64, np.float32)
+
+    # positional order: non-local buffers first, then scalars
+    assert [n for n, kind, _ in k.arg_info()] == ["inp", "out"]
+    k.set_arg(0, f32)                     # ok
+    k.set_arg("out", np.zeros(8, np.float32))
+
+    with pytest.raises(InvalidArgError, match="no argument"):
+        k.set_arg("nope", f32)
+    with pytest.raises(InvalidArgError, match="out of range"):
+        k.set_arg(7, f32)
+    with pytest.raises(InvalidArgError, match="LOCAL"):
+        k.set_arg("scratch", f32)         # auto-materialized, not settable
+    with pytest.raises(InvalidArgError, match="dtype"):
+        k.set_arg("inp", f32.astype(np.float64))
+    with pytest.raises(InvalidArgError, match="buffer"):
+        k.set_arg("inp", 3.0)             # scalar for a buffer arg
+    with pytest.raises(InvalidArgError, match="int index or str"):
+        k.set_arg(1.5, f32)
+
+    _, sbuild = make_scale_builder()
+    ks = ctx.create_program(sbuild).create_kernel()
+    with pytest.raises(InvalidArgError, match="scalar"):
+        ks.set_arg("s", f32)              # buffer for a scalar arg
+    with pytest.raises(InvalidArgError):
+        ks.set_arg("s", True)             # bool is not a kernel scalar
+    with pytest.raises(InvalidArgError, match="complex"):
+        ks.set_arg("s", 1 + 2j)           # complex for a float32 scalar
+
+    def build_int_scalar():
+        b = KernelBuilder(f"hostapi_int{next(_uniq)}")
+        x = b.arg_buffer("x", "float32")
+        n = b.arg_scalar("n", "int32")
+        g = b.global_id(0)
+        x[g] = x[g] + n
+        return b.finish()
+    ki = ctx.create_program(build_int_scalar).create_kernel()
+    ki.set_arg("n", 2.0)                  # integral float: fine
+    with pytest.raises(InvalidArgError, match="fractional"):
+        ki.set_arg("n", 2.7)              # silent truncation refused
+
+    # launches with unset args are CL_INVALID_KERNEL_ARGS
+    ks2 = ctx.create_program(make_scale_builder()[1]).create_kernel()
+    ks2.set_arg("s", 2.0)
+    with pytest.raises(InvalidArgError, match="unset"):
+        ctx.launch(ks2, (64,), (8,))
+    # error carries the OpenCL-style status code
+    try:
+        ks2.set_arg("bogus", 1)
+    except InvalidArgError as e:
+        assert e.code == -50 and e.code_name == "CL_INVALID_ARG_VALUE"
+        assert isinstance(e, ValueError)  # pre-hierarchy compat
+
+
+def test_launch_path_buffer_class_checks():
+    """Device buffers belong on queues; host arrays on ctx.launch;
+    a device buffer handed to a co-executed launch is rejected."""
+    ctx = Context()
+    _, build = make_scale_builder()
+    k = ctx.create_program(build).create_kernel()
+    buf = ctx.create_buffer(64, "float32")
+    k.set_args(x=buf, s=2.0)
+    with pytest.raises(InvalidArgError, match="accepts"):
+        ctx.launch(k, (64,), (8,))        # device buffer on host path
+    co = ctx.create_co_executor(ctx.platform.co_devices(2))
+    with pytest.raises(InvalidArgError, match="accepts"):
+        co.launch(k, (64,), (8,))         # device buffer on co path
+
+
+# --------------------------------------------------------------------------
+# create_buffer validation (the input-validation bugfix)
+# --------------------------------------------------------------------------
+
+def test_create_buffer_validation():
+    ctx = Context()
+    dev = default_platform().get_devices()[0]
+    for bad in (0, -3, 2.5, "8", None, True):
+        with pytest.raises(InvalidBufferError):
+            ctx.create_buffer(bad)
+        with pytest.raises(InvalidBufferError):
+            create_buffer(dev, bad)
+    for bad_dtype in ("floatXX", "not-a-dtype"):
+        with pytest.raises(InvalidBufferError):
+            ctx.create_buffer(8, bad_dtype)
+    with pytest.raises(InvalidBufferError) as ei:
+        create_buffer(dev, 0)
+    assert ei.value.code == -61
+    assert isinstance(ei.value, ValueError)     # pre-hierarchy compat
+    # numpy integer counts are fine
+    buf = ctx.create_buffer(np.int64(16), "float32")
+    assert buf.n_elems == 16
+    buf.release()
+
+
+def test_context_pooled_buffers_and_membership():
+    ctx = Context()
+    b1 = ctx.create_buffer(1024, "float32")
+    b1.release()
+    b2 = ctx.create_buffer(1024, "float32")   # same size class: pool hit
+    stats = ctx.pool_stats()[ctx.devices[0].info.name]
+    assert stats["hits"] >= 1
+    b2.release()
+    # an explicitly-scoped context rejects outside devices
+    # (CL_INVALID_DEVICE); a platform-spanning one adopts devices the
+    # platform grew after context creation
+    foreign = ctx.platform.co_devices(1)[0]
+    with pytest.raises(InvalidArgError, match="not part of this context"):
+        Context(devices=ctx.devices[:1]).create_buffer(8, device=foreign)
+    adopted = ctx.create_buffer(8, device=foreign)   # spanning: adopted
+    assert foreign in ctx.devices
+    adopted.release()
+    # an explicit empty device list is an error, not "all devices"
+    with pytest.raises(InvalidArgError, match="at least one device"):
+        Context(devices=[])
+
+
+def test_buffer_dtype_aliases_accepted():
+    """Equivalent dtype spellings (np.float32, 'f4', 'float32') are the
+    same dtype for set_arg validation."""
+    ctx = Context()
+    _, build = make_scale_builder()
+    k = ctx.create_program(build).create_kernel()
+    k.set_arg("x", ctx.create_buffer(8, np.float32))
+    k.set_arg("x", ctx.create_buffer(8, "f4"))
+    k.set_arg("x", np.zeros(8, dtype="<f4"))
+    with pytest.raises(InvalidArgError, match="dtype"):
+        k.set_arg("x", ctx.create_buffer(8, "f8"))
+
+
+# --------------------------------------------------------------------------
+# Kernel.clone under a 4-worker out-of-order queue
+# --------------------------------------------------------------------------
+
+def test_kernel_clone_concurrent_out_of_order_queue():
+    ctx = Context()
+    _, build = make_scale_builder()
+    base = ctx.create_program(build).create_kernel()
+    dev = ctx.devices[0]
+    q = ctx.create_queue(dev, out_of_order=True, workers=4)
+    n = 64
+    bufs, events = [], []
+    for i in range(8):
+        buf = ctx.create_buffer(n, "float32")
+        ev_w = q.enqueue_write_buffer(buf, np.arange(n, dtype=np.float32))
+        k = base.clone().set_args(x=buf, s=float(i + 1))
+        ev = q.enqueue_nd_range(k, (n,), (8,), wait_for=[ev_w])
+        bufs.append(buf)
+        events.append(ev)
+    q.finish()
+    host = np.arange(n, dtype=np.float32)
+    for i, buf in enumerate(bufs):
+        np.testing.assert_array_equal(buf.data, host * (i + 1))
+        buf.release()
+    assert all(ev.succeeded for ev in events)
+    # the base kernel's own binding never changed
+    assert base.missing_args() == ["x", "s"]
+
+
+def test_enqueue_snapshots_args():
+    """OpenCL: an enqueue captures the kernel's current args; mutating
+    the kernel after enqueue must not affect the queued command."""
+    ctx = Context()
+    _, build = make_scale_builder()
+    k = ctx.create_program(build).create_kernel()
+    buf1 = ctx.create_buffer(16, "float32")
+    buf2 = ctx.create_buffer(16, "float32")
+    q = ctx.create_queue()
+    q.enqueue_write_buffer(buf1, np.ones(16, np.float32))
+    q.enqueue_write_buffer(buf2, np.ones(16, np.float32))
+    k.set_args(x=buf1, s=3.0)
+    q.enqueue_nd_range(k, (16,), (8,))
+    k.set_args(x=buf2, s=100.0)           # re-bind after enqueue
+    q.finish()
+    np.testing.assert_array_equal(buf1.data, np.full(16, 3.0, np.float32))
+    np.testing.assert_array_equal(buf2.data, np.ones(16, np.float32))
+    buf1.release(), buf2.release()
+
+
+# --------------------------------------------------------------------------
+# one Kernel object: single-device vs 2-device co-execution, bitwise
+# --------------------------------------------------------------------------
+
+def test_bitwise_single_vs_co_executed_same_kernel():
+    ctx = Context()
+    _, build = make_reduce_builder()
+    prog = ctx.create_program(build).build()
+    kernel = prog.create_kernel()
+    rng = np.random.default_rng(7)
+    inp = rng.standard_normal(256).astype(np.float32)
+    kernel.set_args(inp=inp, out=np.zeros(32, np.float32))
+
+    c0 = compile_count()
+    single = ctx.launch(kernel, (256,), (8,))
+    single_compiles = compile_count() - c0
+
+    co = ctx.create_co_executor(ctx.platform.co_devices(2))
+    c0 = compile_count()
+    for mode in ("static", "steal"):
+        merged = co.launch(kernel.clone(), (256,), (8,), mode=mode)
+        assert merged["out"].tobytes() == single["out"].tobytes()
+        assert merged["inp"].tobytes() == single["inp"].tobytes()
+    co_compiles = compile_count() - c0
+    co.finish()
+
+    # compile economics unchanged vs the old entry points: one pipeline
+    # run per (device cache, target, local size) — 1 single-device + 2
+    # co-devices — and zero recompiles on the second co-executed mode
+    assert single_compiles == 1
+    assert co_compiles == 2
+    # the shared plan tier ran region formation once for all devices
+    assert ctx.cache.stats.plan_builds == 1
+
+
+def test_compile_counts_match_old_paths():
+    """The new object model does exactly as many pipeline runs as the
+    deprecated entry points for an identical workload."""
+    host = np.arange(64, dtype=np.float32)
+
+    ctx = Context()
+    dev_old, dev_new = ctx.platform.co_devices(2)
+
+    _, build_old = make_scale_builder()
+    c0 = compile_count()
+    with pytest.deprecated_call():
+        k_old = dev_old.build_kernel(build_old, (8,))
+    k_old({"x": host.copy()}, (64,), {"s": 2.0})
+    k_old({"x": host.copy()}, (64,), {"s": 2.0})
+    old_compiles = compile_count() - c0
+
+    _, build_new = make_scale_builder()
+    prog = Context(devices=[dev_new]).create_program(build_new)
+    k_new = prog.create_kernel().set_args(x=host.copy(), s=2.0)
+    c0 = compile_count()
+    binary = k_new.bind(dev_new, (8,))
+    out1 = binary({"x": host.copy()}, (64,), {"s": 2.0})
+    out2 = binary({"x": host.copy()}, (64,), {"s": 2.0})
+    new_compiles = compile_count() - c0
+
+    assert old_compiles == new_compiles == 1
+    np.testing.assert_array_equal(np.asarray(out1["x"]),
+                                  np.asarray(out2["x"]))
+
+
+def test_autotuned_device_through_program():
+    """An ``auto``-driver device specializes the same Kernel through the
+    autotuner (AutotunedKernel consumes the program's builder + shared
+    plan tier) — identical results, target chosen by measurement."""
+    ctx = Context()
+    auto_dev = next(d for d in ctx.devices if d.info.driver == "auto")
+    _, build = make_scale_builder()
+    k = ctx.create_program(build).create_kernel()
+    host = np.arange(32, dtype=np.float32)
+    k.set_args(x=host, s=2.5)
+    out = ctx.launch(k, (32,), (8,), device=auto_dev)
+    np.testing.assert_allclose(out["x"], host * 2.5)
+    binary = k.bind(auto_dev, (8,))
+    from repro.core import AutotunedKernel
+    assert isinstance(binary, AutotunedKernel)
+    assert binary.last_winner in ("loop", "vector", "pallas")
+
+
+# --------------------------------------------------------------------------
+# typed error hierarchy
+# --------------------------------------------------------------------------
+
+def test_error_hierarchy_and_status_codes():
+    assert issubclass(InvalidArgError, ReproError)
+    assert issubclass(InvalidArgError, ValueError)
+    assert issubclass(InvalidBufferError, InvalidArgError)
+    assert issubclass(BuildError, ReproError)
+    assert issubclass(BuildError, RuntimeError)
+    assert issubclass(VerifierError, BuildError)
+    assert issubclass(VerifierError, AssertionError)   # compat
+    assert issubclass(MapError, ReproError)
+    assert issubclass(MapError, RuntimeError)          # compat
+    assert issubclass(DependencyError, CommandError)
+    assert issubclass(CommandError, ReproError)
+    assert issubclass(OutOfMemory, ReproError)
+    assert issubclass(OutOfMemory, MemoryError)
+    assert BuildError("x").code == -11
+    assert MapError("x").code == -12
+    assert DependencyError("x").code == -14
+    assert OutOfMemory("x").code == -4
+    assert status_name(-50) == "CL_INVALID_ARG_VALUE"
+    assert status_name(-11) == "CL_BUILD_PROGRAM_FAILURE"
+    assert "UNKNOWN" in status_name(-123456)
+
+
+def test_map_guards_raise_typed_errors():
+    """Map/unmap guards and launch-over-mapped checks raise MapError
+    from the ReproError hierarchy (pre-existing guards, now typed)."""
+    ctx = Context()
+    buf = ctx.create_buffer(64, "float32")
+    q = ctx.create_queue()
+    region = q.enqueue_map_buffer(buf, "w")
+    region.get()
+    _, build = make_scale_builder()
+    k = ctx.create_program(build).create_kernel().set_args(x=buf, s=2.0)
+    ev = q.enqueue_nd_range(k, (64,), (8,))
+    with pytest.raises(CommandError):
+        q.finish()
+    assert isinstance(ev.error, MapError)
+    assert isinstance(ev.error, ReproError)
+    # the failed event's status surfaces the typed code (-12 MapError)
+    assert ev.status == MapError("x").code
+    buf.release()
+
+
+# --------------------------------------------------------------------------
+# deprecation shims: old entry points warn but keep working
+# --------------------------------------------------------------------------
+
+def test_deprecated_compile_kernel_still_works():
+    from repro.core import compile_kernel
+    _, build = make_scale_builder()
+    with pytest.deprecated_call():
+        k = compile_kernel(build, (8,))
+    out = k({"x": np.arange(16, dtype=np.float32)}, (16,), {"s": 2.0})
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.arange(16, dtype=np.float32) * 2)
+
+
+def test_deprecated_build_kernel_still_works():
+    ctx = Context()
+    _, build = make_scale_builder()
+    with pytest.deprecated_call():
+        k = ctx.devices[0].build_kernel(build, (8,))
+    out = k({"x": np.ones(8, np.float32)}, (8,), {"s": 4.0})
+    np.testing.assert_array_equal(np.asarray(out["x"]),
+                                  np.full(8, 4.0, np.float32))
+
+
+def test_deprecated_enqueue_kernel_still_works():
+    ctx = Context()
+    dev = ctx.devices[0]
+    buf = ctx.create_buffer(16, "float32")
+    q = ctx.create_queue(dev)
+    q.enqueue_write_buffer(buf, np.ones(16, np.float32))
+    _, build = make_scale_builder()
+    with pytest.deprecated_call():
+        q.enqueue_kernel(build, (8,), (16,), {"x": buf}, {"s": 5.0})
+    q.finish()
+    np.testing.assert_array_equal(buf.data, np.full(16, 5.0, np.float32))
+    buf.release()
+
+
+def test_deprecated_coexecutor_run_still_works():
+    ctx = Context()
+    co = ctx.create_co_executor(ctx.platform.co_devices(2))
+    _, build = make_scale_builder()
+    host = np.arange(64, dtype=np.float32)
+    with pytest.deprecated_call():
+        merged = co.run(build, (8,), (64,), {"x": host.copy()}, {"s": 3.0})
+    np.testing.assert_array_equal(merged["x"], host * 3.0)
+    co.finish()
+
+
+# --------------------------------------------------------------------------
+# serving engine through a Context
+# --------------------------------------------------------------------------
+
+def test_serving_engine_through_context():
+    import jax
+    from repro import configs
+    from repro.distributed.sharding import BASELINE_RULES
+    from repro.models import init_params
+    from repro.serving import Request, ServingEngine
+
+    cfg = configs.get_smoke("smollm-135m")
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    ctx = Context()
+    eng = ServingEngine(cfg, params, BASELINE_RULES, batch_slots=2,
+                        max_seq=32, context=ctx)
+    assert eng.context is ctx
+    # the KV pool is the context's dedicated KV-class pool over the
+    # dispatch device arena (own free lists + counters, shared arena)
+    assert eng._kv_pool is ctx.pool_for(ctx.devices[0], min_class=4096)
+    assert eng._kv_pool is not ctx.pool_for(ctx.devices[0])
+    reqs = [Request(prompt=np.arange(4, dtype=np.int32) + 2,
+                    max_new_tokens=3)]
+    done = eng.generate(reqs)
+    assert len(done) == 1 and len(done[0].out_tokens) == 3
+    kv = eng.kv_stats
+    assert kv["kv_bytes_per_group"] > 0
+    key = f"{ctx.devices[0].info.name}:4096"
+    assert ctx.pool_stats()[key]["frees"] >= 1
