@@ -11,6 +11,7 @@
   §3 runtime  -> bench_events         (event DAG overlap + co-execution)
   §4 pipeline -> bench_compile        (plan sharing across the target sweep)
   §3 memory   -> bench_memory         (map/unmap, pooling, ordered migration)
+  §Serving    -> bench_serving        (continuous batching vs fixed-slot)
 """
 
 from __future__ import annotations
@@ -31,7 +32,7 @@ def main(argv=None):
 
     t0 = time.time()
     print("=" * 72)
-    print("[1/10] Kernel suite across execution targets (paper Fig. 12-14)")
+    print("[1/11] Kernel suite across execution targets (paper Fig. 12-14)")
     print("=" * 72)
     from . import bench_kernel_suite
     res = bench_kernel_suite.main()
@@ -39,14 +40,14 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[2/10] DCT horizontal inner-loop parallelization (paper §6.4)")
+    print("[2/11] DCT horizontal inner-loop parallelization (paper §6.4)")
     print("=" * 72)
     from . import bench_horizontal
     summary["horizontal"] = bench_horizontal.main()
 
     print()
     print("=" * 72)
-    print("[3/10] Vecmathlib vs scalarized libm (paper Tables 3/4)")
+    print("[3/11] Vecmathlib vs scalarized libm (paper Tables 3/4)")
     print("=" * 72)
     from . import bench_vml
     res = bench_vml.main()
@@ -54,49 +55,56 @@ def main(argv=None):
 
     print()
     print("=" * 72)
-    print("[4/10] Bufalloc (paper §3)")
+    print("[4/11] Bufalloc (paper §3)")
     print("=" * 72)
     from . import bench_bufalloc
     summary["bufalloc"] = bench_bufalloc.main()
 
     print()
     print("=" * 72)
-    print("[5/10] Context-array uniform merging (paper §4.7)")
+    print("[5/11] Context-array uniform merging (paper §4.7)")
     print("=" * 72)
     from . import bench_context
     summary["context"] = bench_context.main()
 
     print()
     print("=" * 72)
-    print("[6/10] Compilation cache: cold vs cache-hit dispatch (§4.1)")
+    print("[6/11] Compilation cache: cold vs cache-hit dispatch (§4.1)")
     print("=" * 72)
     from . import bench_cache
     summary["cache"] = bench_cache.main()
 
     print()
     print("=" * 72)
-    print("[7/10] Event-DAG runtime: overlap + multi-device co-execution (§3)")
+    print("[7/11] Event-DAG runtime: overlap + multi-device co-execution (§3)")
     print("=" * 72)
     from . import bench_events
     summary["events"] = bench_events.main()
 
     print()
     print("=" * 72)
-    print("[8/10] Pass-manager plan sharing: cold autotune compile (§4)")
+    print("[8/11] Pass-manager plan sharing: cold autotune compile (§4)")
     print("=" * 72)
     from . import bench_compile
     summary["compile"] = bench_compile.main()
 
     print()
     print("=" * 72)
-    print("[9/10] Hierarchical memory: map/unmap, pool, migration (§3)")
+    print("[9/11] Hierarchical memory: map/unmap, pool, migration (§3)")
     print("=" * 72)
     from . import bench_memory
     summary["memory"] = bench_memory.main()
 
     print()
     print("=" * 72)
-    print("[10/10] Roofline report (dry-run derived)")
+    print("[10/11] Continuous-batching serving scheduler (vs fixed-slot)")
+    print("=" * 72)
+    from . import bench_serving
+    summary["serving"] = bench_serving.main(ci=args.quick)
+
+    print()
+    print("=" * 72)
+    print("[11/11] Roofline report (dry-run derived)")
     print("=" * 72)
     from . import roofline_report
     roofline_report.main()

@@ -1,9 +1,12 @@
-"""Batched serving example: prefill + synchronized batched decode with a
-KV cache, request grouping, greedy sampling.
+"""Continuous-batching serving example: requests are submitted into the
+engine's admission queue on a staggered schedule and the scheduler is
+pumped with ``step()`` — per-step slot refill, paged KV from the context
+BufferPool, decode overlapping refill prefills on the event DAG
+(docs/serving.md).
 
 The engine's runtime resources come from the first-class host Context
 (docs/host_api.md): the driver builds a ``Context``, the engine creates
-its dispatch queue through it, and per-group KV blocks are accounted on
+its dispatch queue through it, and per-request KV pages are accounted on
 the context's per-device BufferPool — the same object model that backs
 kernel launches and multi-device co-execution.
 
@@ -16,7 +19,7 @@ from repro.launch import serve as serve_cli
 def main():
     serve_cli.main(["--arch", "smollm-135m", "--smoke", "--requests", "6",
                     "--max-new", "12", "--batch-slots", "2",
-                    "--max-seq", "64"])
+                    "--max-seq", "64", "--arrival-every", "2"])
 
 
 if __name__ == "__main__":

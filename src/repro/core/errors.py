@@ -89,6 +89,18 @@ class MapError(ReproError, RuntimeError):
     code_name = "CL_MAP_FAILURE"
 
 
+class DeviceLostError(ReproError, RuntimeError):
+    """A device became unavailable mid-pipeline (CL_DEVICE_NOT_AVAILABLE).
+
+    The serving scheduler surfaces this on the *affected request's*
+    result when a device-side DAG command fails mid-group, while sibling
+    requests keep running (docs/serving.md §Failure handling); the
+    fault-injection harness raises it to drive that path."""
+
+    code = -2
+    code_name = "CL_DEVICE_NOT_AVAILABLE"
+
+
 #: status code -> symbolic name, for every code the hierarchy can raise
 #: (populated below; the paper's hosts report these via clGetEventInfo)
 STATUS_NAMES: Dict[int, str] = {}
@@ -113,11 +125,12 @@ def register_error(cls):
 
 
 for _cls in (ReproError, InvalidArgError, InvalidBufferError, BuildError,
-             MapError):
+             MapError, DeviceLostError):
     _register(_cls)
 
 
 __all__ = [
     "ReproError", "InvalidArgError", "InvalidBufferError", "BuildError",
-    "MapError", "status_name", "register_error", "STATUS_NAMES",
+    "MapError", "DeviceLostError", "status_name", "register_error",
+    "STATUS_NAMES",
 ]

@@ -1,4 +1,10 @@
-"""Batched serving driver (smoke-scale on CPU, production mesh on TPU).
+"""Continuous-batching serving driver (smoke-scale on CPU, production
+mesh on TPU).
+
+Requests are submitted into the engine's admission queue on a staggered
+arrival schedule and the driver pumps ``step()`` until the queue drains —
+the submit()/step() loop a real serving front-end runs, exercising
+per-step slot refill and paged KV instead of one-shot batch generate.
 
   PYTHONPATH=src python -m repro.launch.serve --arch smollm-135m --smoke \
       --requests 6 --max-new 16
@@ -16,7 +22,7 @@ from repro import configs
 from repro.distributed.sharding import BASELINE_RULES
 from repro.models import init_params
 from repro.runtime import Context
-from repro.serving import ServingEngine, Request
+from repro.serving import Request, ServingEngine
 
 
 def main(argv=None):
@@ -28,6 +34,10 @@ def main(argv=None):
     ap.add_argument("--batch-slots", type=int, default=4)
     ap.add_argument("--max-seq", type=int, default=128)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--scheduler", choices=["continuous", "fixed"],
+                    default="continuous")
+    ap.add_argument("--arrival-every", type=int, default=1,
+                    help="submit one request every N scheduler steps")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -43,34 +53,49 @@ def main(argv=None):
         aux["frames"] = np.asarray(rng.standard_normal(
             (args.batch_slots, cfg.enc_seq, cfg.d_model)), np.float32)
 
-    # the engine's dispatch queue and KV-block pool come from a host
+    # the engine's dispatch queue and KV page pool come from a host
     # Context (docs/host_api.md) — the same object model kernel launches
     # and co-execution use
     ctx = Context()
     eng = ServingEngine(cfg, params, BASELINE_RULES,
                         batch_slots=args.batch_slots, max_seq=args.max_seq,
-                        aux_inputs=aux, context=ctx)
+                        aux_inputs=aux, context=ctx,
+                        scheduler=args.scheduler)
     reqs = [Request(prompt=rng.integers(0, cfg.vocab, rng.integers(4, 17),
                                         dtype=np.int64).astype(np.int32),
-                    max_new_tokens=args.max_new)
+                    max_new_tokens=int(rng.integers(2, args.max_new + 1)))
             for _ in range(args.requests)]
+
     t0 = time.time()
-    done = eng.generate(reqs)
+    done = []
+    pending = list(reqs)
+    # staggered arrivals: one request every --arrival-every steps, then
+    # pump the scheduler until the queue drains
+    while pending or eng.scheduler_stats["waiting"] or \
+            eng.scheduler_stats["running"]:
+        if pending and eng.current_step % max(1, args.arrival_every) == 0:
+            eng.submit(pending.pop(0))
+        done.extend(eng.step())
     dt = time.time() - t0
-    total_toks = sum(len(r.out_tokens) for r in done)
+
+    total_toks = sum(len(r.out_tokens) for r in done if r.done)
     print(f"served {len(done)} requests, {total_toks} tokens "
           f"in {dt:.2f}s ({total_toks / max(dt, 1e-9):.1f} tok/s)")
+    sched = eng.scheduler_stats
+    print(f"  sched: {sched['steps']} steps, {sched['evictions']} "
+          f"evictions, {sched['preemptions']} preemptions")
     dag = eng.dag_stats
-    if dag:
-        print(f"  dag: {dag['groups']} group(s), {dag['events']} events, "
+    if dag["steps"]:
+        print(f"  dag: {dag['events']} events over {dag['steps']} steps, "
               f"overlap {dag['overlap']:.2f}x")
     kv = eng.kv_stats
     print(f"  kv pool: {kv['hits']} hits / {kv['misses']} misses, "
-          f"{kv['kv_bytes_per_group']} B/group "
-          f"(context pools: {list(ctx.pool_stats())})")
+          f"{kv['page_bytes']} B/page x {kv['pages_live']} live, "
+          f"{kv['frees']} frees (context pools: {list(ctx.pool_stats())})")
     for i, r in enumerate(done):
-        print(f"  req{i}: prompt[:4]={r.prompt[:4].tolist()} "
-              f"-> {r.out_tokens}")
+        tag = "FAILED " + type(r.error).__name__ if r.error else \
+            f"{r.out_tokens}"
+        print(f"  req{r.id}: prompt[:4]={r.prompt[:4].tolist()} -> {tag}")
 
 
 if __name__ == "__main__":

@@ -95,13 +95,19 @@ def attention(x, p: Params, cfg: ModelConfig, rules: ShardingRules, *,
             # happens (§Perf H1 iteration 2).  With S sharded
             # ("cache_seq"), XLA turns the softmax over the sharded S
             # into partial max/sum + tiny all-reduces = flash-decoding.
-            idx = lengths[0]
-            k_cache = jax.lax.dynamic_update_slice_in_dim(
+            # Each batch row writes at its OWN length: continuous-batching
+            # slots sit at different sequence positions (docs/serving.md),
+            # so the write index is per-row, not lengths[0] for the group.
+            row_idx = jnp.broadcast_to(jnp.asarray(lengths), (B,))
+            row_update = jax.vmap(
+                lambda c, n, i: jax.lax.dynamic_update_slice_in_dim(
+                    c, n, i, axis=1))
+            k_cache = row_update(
                 k_cache, k.transpose(0, 2, 1, 3).astype(k_cache.dtype),
-                idx, axis=2)
-            v_cache = jax.lax.dynamic_update_slice_in_dim(
+                row_idx)
+            v_cache = row_update(
                 v_cache, v.transpose(0, 2, 1, 3).astype(v_cache.dtype),
-                idx, axis=2)
+                row_idx)
             kq = jnp.squeeze(q, axis=1)              # (B,H,D)
             o = ops.decode_attention(kq, k_cache, v_cache,
                                      lengths + 1, use_pallas=cfg.use_pallas)

@@ -1,7 +1,11 @@
-"""Batched serving: `ServingEngine` dispatches request groups through the
-runtime's event DAG (prefill/decode chains per group, overlapped across
-groups — docs/runtime.md §4)."""
+"""Continuous-batching serving: `ServingEngine` schedules at request
+granularity over fixed decode slots — submit()/step()/drain() admission,
+per-step slot refill, paged KV from the context BufferPool, preemption
+on OOM — dispatching each step's prefills and decode through the
+runtime's event DAG (docs/serving.md)."""
 
-from .engine import ServingEngine, Request
+from .engine import Request, RequestState, ServingEngine
+from .executor import BatchExecutor, JaxExecutor, StubExecutor
 
-__all__ = ["ServingEngine", "Request"]
+__all__ = ["ServingEngine", "Request", "RequestState",
+           "BatchExecutor", "JaxExecutor", "StubExecutor"]

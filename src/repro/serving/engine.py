@@ -1,166 +1,256 @@
-"""Batched serving engine: continuous prefill + decode over a KV cache.
+"""Continuous-batching serving engine (docs/serving.md).
 
-The engine jits two functions per model — ``prefill`` (process a full
-prompt, populate caches) and ``decode`` (one token for the whole batch) —
-and drives them from a request queue.  Requests are grouped into fixed
-batch slots; each group runs synchronized batched decode (all slots step
-together), the standard TPU serving shape.
+The engine schedules at *request* granularity over a fixed set of decode
+slots — the EngineCL-style host scheduler the ROADMAP calls for, built on
+the runtime pieces underneath it (event DAG, size-class ``BufferPool``,
+host ``Context``):
 
-**DAG dispatch** (docs/runtime.md): each group's pipeline is enqueued on
-an out-of-order :class:`~repro.runtime.queue.CommandQueue` as a chain of
-events — ``prefill -> decode step 0 -> decode step 1 -> ...`` — with *no*
-edges between groups, so independent groups overlap on the queue's worker
-pool while each group's own steps stay strictly ordered.  Per-group state
-flows through the chain, never across it, so results are identical to
-serial execution; ``dag_stats`` reports how much overlap the DAG bought.
+* **Admission queue**: ``submit(request)`` enqueues; ``step()`` runs one
+  scheduler step; ``drain()`` steps until idle.  ``generate(requests)``
+  is the compatible one-shot wrapper (submit all + drain).
+* **Continuous batching**: a request that hits EOS / ``max_tokens`` is
+  evicted mid-decode and its slot is refilled from the waiting queue *on
+  the same step* — a long generation no longer stalls its batch
+  neighbours the way the old fixed-group engine did.
+* **Paged KV**: each request's cache footprint is accounted as
+  fixed-size pages (``page_tokens`` tokens each) allocated from the
+  context's size-class :class:`~repro.runtime.memory.BufferPool`, grown
+  lazily as the request decodes and freed page-by-page on eviction —
+  replacing the old per-group monolithic block.
+* **Preemption**: when page growth hits the KV budget (or the arena),
+  the lowest-priority running request (latest arrival breaks ties)
+  releases its pages and re-enters the waiting queue at the front —
+  recompute-style preemption, no request dropped; the typed
+  :class:`~repro.runtime.bufalloc.OutOfMemory` is surfaced via
+  ``last_oom`` / ``kv_stats``.  A request that cannot fit even alone
+  fails with the typed error instead of livelocking.
+* **DAG dispatch** (docs/runtime.md): each step's prefill commands and
+  the decode command are independent nodes on an out-of-order
+  :class:`~repro.runtime.queue.CommandQueue`, so refill prefills overlap
+  the decode step on the worker pool.  A failing command surfaces its
+  *original typed* exception on the affected request's ``error`` while
+  sibling requests keep running (see :meth:`inject_fault`).
 
-Steady-state compilation behaviour mirrors the kernel-compiler cache
-(docs/caching.md): ``jax.jit`` memoizes by argument shape, and the engine
-tracks the shapes it has dispatched so ``compile_stats`` proves that
-repeated serving steps trigger zero recompilation — prefill compiles once
-per prompt-length shape, decode compiles once per batch shape, and every
-subsequent step is a cache hit.
+Determinism: decode computes every slot row independently (per-row KV
+positions, per-row length masking — ``repro.models.layers``), so each
+request's token stream is bitwise-identical to serial one-request-at-a-
+time execution regardless of slot assignment, co-tenants, preemption, or
+arrival interleaving.  ``tests/test_serving_props.py`` state-machines
+that invariant against a single-slot oracle.
 
-**KV-block pooling** (docs/memory.md): each group's cache block is
-accounted on the dispatch device's Bufalloc arena through a size-class
-:class:`~repro.runtime.memory.BufferPool`, so per-request KV allocations
-in steady state are O(1) free-list pops instead of first-fit walks;
-``kv_stats`` exposes hit/miss counters.
+``scheduler="fixed"`` keeps the paging and DAG machinery but only
+refills when *every* slot is empty — the old synchronized-group
+behaviour, kept as the benchmark baseline (``benchmarks/bench_serving.py``)
+and as the regression reference for the short-tail bugfix (tails are
+masked empty slots now, never duplicated requests).
+
+Model work goes through a :class:`~repro.serving.executor.BatchExecutor`
+(the jitted :class:`~repro.serving.executor.JaxExecutor` by default);
+the deterministic :class:`~repro.serving.executor.StubExecutor` drives
+the property harness without tracing anything.
 """
 
 from __future__ import annotations
 
 import dataclasses
-import threading
+import itertools
 import time
+from collections import deque
 from typing import Any, Dict, List, Optional
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-import jax.tree_util as jtu
-
-from repro.core.errors import InvalidArgError
-from repro.distributed.sharding import ShardingRules
-from repro.models import ModelConfig, forward, init_caches
+from repro.core.errors import InvalidArgError, ReproError
 from repro.runtime.bufalloc import OutOfMemory
+from repro.runtime.events import CommandError
 from repro.runtime.memory import BufferPool
 from repro.runtime.queue import CommandQueue
+
+from .executor import BatchExecutor
+
+
+class RequestState:
+    """Lifecycle states of a request (docs/serving.md §Request lifecycle):
+    WAITING -> RUNNING -> FINISHED, with RUNNING -> WAITING on preemption
+    and -> FAILED on a typed error."""
+
+    WAITING = "waiting"
+    RUNNING = "running"
+    FINISHED = "finished"
+    FAILED = "failed"
 
 
 @dataclasses.dataclass
 class Request:
     """One generation request: a prompt and a token budget.
 
-    ``out_tokens`` is filled (and ``done`` set) by
-    :meth:`ServingEngine.generate`."""
+    ``out_tokens`` accumulates generated tokens; ``done`` is set on
+    successful completion, ``error`` carries the typed
+    :class:`~repro.core.errors.ReproError` on failure.  ``priority``
+    orders preemption victims (lower preempts first); ``eos_token``
+    stops generation early.  ``id``/``submit_step``/``finish_step``/
+    ``preemptions`` are scheduler bookkeeping filled in by the engine.
+    """
 
     prompt: np.ndarray                   # (S,) int32
     max_new_tokens: int = 16
+    priority: int = 0
+    eos_token: Optional[int] = None
     out_tokens: Optional[List[int]] = None
     done: bool = False
+    error: Optional[BaseException] = None
+    state: str = RequestState.WAITING
+    id: int = -1
+    submit_step: int = -1
+    finish_step: int = -1
+    preemptions: int = 0
+
+
+class _Slot:
+    """One decode slot: the resident request plus its KV pages."""
+
+    __slots__ = ("request", "pages", "cap_tokens", "last_tok", "inserted")
+
+    def __init__(self, request: Request):
+        self.request = request
+        self.pages: List[Any] = []      # BufferPool chunks
+        self.cap_tokens = 0             # tokens the pages cover
+        self.last_tok = 0               # input token for the next decode
+        self.inserted = False           # prefill fragment spliced in?
 
 
 class ServingEngine:
-    """Serves generation requests with batched prefill/decode.
+    """Continuous-batching request scheduler over ``batch_slots`` decode
+    slots (module docstring has the full picture).
 
     Parameters
     ----------
+    cfg, params, rules:
+        Model config / parameters / sharding rules for the default
+        :class:`~repro.serving.executor.JaxExecutor`; pass ``None`` for
+        all three when supplying ``executor``.
     batch_slots:
-        Requests per group (the decode batch size).
+        Decode batch width (concurrently-running requests).
     max_seq:
-        KV-cache capacity per slot.
+        KV-cache capacity per slot; a request is force-finished when
+        ``len(prompt) + generated`` reaches it.
     dag_workers:
-        Worker threads of the dispatch queue: independent request groups
-        execute concurrently up to this width (1 disables overlap).
-    device:
-        Runtime device the dispatch queue binds to; defaults to the
-        first device of ``context``.
-    context:
-        The :class:`~repro.runtime.context.Context` the engine's
-        runtime resources come from (docs/host_api.md): the dispatch
-        queue is created through it and per-group KV blocks are
-        accounted on its per-device :class:`~repro.runtime.memory.
-        BufferPool` — engines sharing a context share the KV block
-        free lists.  Defaults to the process default context.
+        Worker threads of the dispatch queue; >=2 lets refill prefills
+        overlap the decode command.
+    device / context:
+        Runtime placement, exactly as before: the dispatch queue and the
+        KV page pool come from the host
+        :class:`~repro.runtime.context.Context` (engines sharing a
+        context share KV free lists); a foreign device falls back to
+        engine-owned resources.
+    scheduler:
+        ``"continuous"`` (default) or ``"fixed"`` — the refill-barrier
+        baseline (slots refill only when all are empty).
+    page_tokens:
+        Tokens per KV page (paging granularity).
+    kv_budget_bytes:
+        Optional engine-level cap on summed page bytes; growth past it
+        triggers preemption.  ``None`` leaves only the arena as the
+        limit.
+    executor:
+        A :class:`~repro.serving.executor.BatchExecutor` override (the
+        property harness passes a
+        :class:`~repro.serving.executor.StubExecutor`).
     """
 
-    def __init__(self, cfg: ModelConfig, params, rules: ShardingRules,
+    def __init__(self, cfg, params, rules,
                  batch_slots: int = 4, max_seq: int = 256,
                  aux_inputs: Optional[Dict] = None,
-                 dag_workers: int = 2, device=None, context=None):
-        self.cfg, self.rules = cfg, rules
-        self.params = params
+                 dag_workers: int = 2, device=None, context=None,
+                 scheduler: str = "continuous", page_tokens: int = 16,
+                 kv_budget_bytes: Optional[int] = None,
+                 executor: Optional[BatchExecutor] = None,
+                 prefill_bucket: int = 8):
+        if scheduler not in ("continuous", "fixed"):
+            raise InvalidArgError(
+                f"scheduler must be 'continuous' or 'fixed', "
+                f"got {scheduler!r}")
+        self.cfg, self.rules, self.params = cfg, rules, params
         self.B, self.S = batch_slots, max_seq
         self.aux = aux_inputs or {}
+        self.scheduler = scheduler
 
-        def prefill(params, tokens, caches):
-            logits, _, caches = forward(params, tokens, cfg, rules,
-                                        aux_inputs=self.aux, caches=caches,
-                                        mode="prefill")
-            return logits[:, -1], caches
+        if executor is None:
+            from .executor import JaxExecutor
+            executor = JaxExecutor(cfg, params, rules, batch_slots,
+                                   max_seq, aux_inputs=aux_inputs,
+                                   prefill_bucket=prefill_bucket)
+        if executor.batch_slots != batch_slots or \
+                executor.max_seq != max_seq:
+            raise InvalidArgError(
+                f"executor shape ({executor.batch_slots}, "
+                f"{executor.max_seq}) does not match engine "
+                f"({batch_slots}, {max_seq})")
+        self._exec = executor
 
-        def decode(params, tok, caches):
-            logits, _, caches = forward(params, tok, cfg, rules,
-                                        aux_inputs=self.aux, caches=caches,
-                                        mode="decode")
-            return logits[:, -1], caches
-
-        self._prefill = jax.jit(prefill, donate_argnums=(2,))
-        self._decode = jax.jit(decode, donate_argnums=(2,))
-        # compile bookkeeping: compile counts are read from the jitted
-        # functions' own tracing caches (so any retrace — new shape, dtype,
-        # weak-type change — is observed); the shape sets are the expected
-        # lower bound for cross-checking
-        self._prefill_shapes: set = set()
-        self._decode_shapes: set = set()
-        self._calls = {"prefill": 0, "decode": 0}
-        self._calls_lock = threading.Lock()
-        # request groups dispatch through an out-of-order event DAG; one
-        # chain of events per group, no cross-group edges.  The queue,
-        # device, and KV pool all come from the host Context
-        # (docs/host_api.md) so serving shares the runtime object model
-        # with kernel launches and co-execution.
+        # runtime resources from the host Context (docs/host_api.md);
+        # a caller-supplied device outside the context's platform falls
+        # back to engine-owned queue + pool, as before
         if context is None:
             from repro.runtime.context import default_context
             context = default_context()
         self.context = context
         if device is None:
             device = context.devices[0]
-        self._kv_bytes = self._cache_bytes()
         try:
             self._queue = context.create_queue(
                 device, out_of_order=True, workers=max(1, dag_workers))
-            # per-group KV-cache accounting goes through the context's
-            # dedicated KV-class pool over the device arena
-            # (docs/memory.md): each group's cache block is identically
-            # sized, so after the first group every alloc is an O(1)
-            # free-list pop instead of a first-fit walk
             self._kv_pool = context.pool_for(device, min_class=4096)
         except InvalidArgError:
-            # a caller-supplied device outside the context's platform
-            # (pre-context behaviour): fall back to engine-owned
-            # resources so `device=` keeps working unchanged
             self._queue = CommandQueue(device, out_of_order=True,
                                        workers=max(1, dag_workers))
             self._kv_pool = BufferPool(device.allocator, min_class=4096)
-        self._last_dag: Dict[str, Any] = {}
-        self._kv_alloc_failures = 0
 
-    def _cache_bytes(self) -> int:
-        """Byte footprint of one group's KV/state caches, derived from
-        the abstract cache pytree (family-independent)."""
-        abstract = init_caches(self.cfg, self.B, self.S, abstract=True)
-        return int(sum(int(np.prod(leaf.shape)) * leaf.dtype.itemsize
-                       for leaf in jtu.tree_leaves(abstract)))
+        # paged KV accounting: page_bytes covers page_tokens tokens of
+        # one slot's cache row (docs/serving.md §KV paging)
+        self._kv_bytes = executor.cache_bytes(self.B, self.S)
+        per_slot = executor.cache_bytes(1, self.S)
+        self._bytes_per_token = max(1, -(-per_slot // self.S))
+        self.page_tokens = max(1, int(page_tokens))
+        self._page_bytes = self._bytes_per_token * self.page_tokens
+        self._kv_budget = kv_budget_bytes
+        self._kv_used = 0
+        self._kv_alloc_failures = 0
+        self.last_oom: Optional[OutOfMemory] = None
+
+        # scheduler state
+        self._waiting: deque = deque()
+        self._slots: List[Optional[_Slot]] = [None] * self.B
+        self._state: Any = None          # executor batch state (lazy)
+        self._req_ids = itertools.count()
+        self._step_idx = 0
+        self._faults: Dict[int, Dict[str, Any]] = {}
+        self._sched = {"submitted": 0, "completed": 0, "failed": 0,
+                       "preemptions": 0, "evictions": 0, "steps": 0,
+                       "pages_allocated": 0, "pages_freed": 0}
+        self._dag_accum = {"steps": 0, "events": 0, "prefill_events": 0,
+                           "decode_events": 0, "wall_s": 0.0,
+                           "busy_s": 0.0}
+
+    # ======================================================================
+    # introspection
+    # ======================================================================
+    @property
+    def current_step(self) -> int:
+        return self._step_idx
 
     @property
     def kv_stats(self) -> Dict[str, int]:
-        """KV-block pool counters: steady-state serving shows one miss
-        per concurrently-live group and hits for every later group."""
+        """KV page-pool counters: steady-state serving pops pages from
+        the size-class free list (hits) and eviction returns them
+        page-by-page (frees — per request, not per group)."""
         out = dict(self._kv_pool.stats())
-        out["kv_bytes_per_group"] = self._kv_bytes
+        out["kv_bytes_per_group"] = self._kv_bytes   # full-batch footprint
+        out["bytes_per_token"] = self._bytes_per_token
+        out["page_bytes"] = self._page_bytes
+        out["page_tokens"] = self.page_tokens
+        out["kv_used_bytes"] = self._kv_used
+        out["pages_live"] = self._kv_used // self._page_bytes
         out["alloc_failures"] = self._kv_alloc_failures
         return out
 
@@ -168,144 +258,491 @@ class ServingEngine:
     def compile_stats(self) -> Dict[str, int]:
         """Call and (re)compile counters proving steady-state serving does
         zero tracing work (docs/caching.md §Steady-state serving)."""
-        return {
-            "prefill_calls": self._calls["prefill"],
-            "decode_steps": self._calls["decode"],
-            "prefill_compiles": self._jit_compiles(
-                self._prefill, len(self._prefill_shapes)),
-            "decode_compiles": self._jit_compiles(
-                self._decode, len(self._decode_shapes)),
-        }
+        out = {"prefill_calls": 0, "decode_steps": 0,
+               "prefill_compiles": 0, "decode_compiles": 0}
+        out.update(self._exec.compile_stats())
+        return out
+
+    @property
+    def scheduler_stats(self) -> Dict[str, int]:
+        """Scheduler counters: admissions, evictions, preemptions, and
+        the current queue/slot occupancy."""
+        out = dict(self._sched)
+        out["waiting"] = len(self._waiting)
+        out["running"] = sum(1 for s in self._slots if s is not None)
+        return out
 
     @property
     def dag_stats(self) -> Dict[str, Any]:
-        """What the last :meth:`generate` dispatch did: group/event counts,
-        wall time, summed busy time, and the overlap factor busy/wall
-        (1.0 = fully serial; >1 means independent groups overlapped)."""
-        return dict(self._last_dag)
+        """What the dispatch DAG did since the last :meth:`generate` (or
+        engine creation): event counts, wall time, summed busy time, and
+        the overlap factor busy/wall (>1 means prefill overlapped
+        decode)."""
+        out = dict(self._dag_accum)
+        out["overlap"] = (out["busy_s"] / out["wall_s"]) \
+            if out["wall_s"] > 0 else 1.0
+        return out
 
-    @staticmethod
-    def _jit_compiles(fn, fallback: int) -> int:
+    # ======================================================================
+    # submission
+    # ======================================================================
+    def submit(self, request: Request) -> int:
+        """Admit a request to the waiting queue; returns its id.
+
+        Validates the prompt against slot capacity — a prompt that can
+        never fit (``len(prompt) >= max_seq``) is rejected with a typed
+        :class:`~repro.core.errors.InvalidArgError` instead of wedging
+        the queue."""
+        plen = int(len(request.prompt))
+        if plen < 1:
+            raise InvalidArgError("empty prompt")
+        if plen >= self.S:
+            raise InvalidArgError(
+                f"prompt length {plen} >= max_seq {self.S}: no room to "
+                f"generate")
+        request.id = next(self._req_ids)
+        request.state = RequestState.WAITING
+        request.out_tokens = []
+        request.done = False
+        request.error = None
+        request.submit_step = self._step_idx
+        request.finish_step = -1
+        self._sched["submitted"] += 1
+        self._waiting.append(request)
+        return request.id
+
+    def inject_fault(self, request: Request, stage: str = "decode",
+                     error: Optional[BaseException] = None) -> None:
+        """Arm a device-side failure for ``request`` (test/chaos hook,
+        ROADMAP item 5).  ``stage="prefill"`` makes the request's prefill
+        command raise; ``stage="decode"`` enqueues a failing DAG command
+        attributed to the request on its next decode step.  The typed
+        error (default :class:`~repro.core.errors.DeviceLostError`)
+        surfaces on the request's ``error`` while siblings complete."""
+        if stage not in ("prefill", "decode"):
+            raise InvalidArgError(f"unknown fault stage {stage!r}")
+        if request.id < 0:
+            raise InvalidArgError("submit the request before injecting "
+                                  "a fault")
+        if error is None:
+            from repro.core.errors import DeviceLostError
+            error = DeviceLostError(
+                f"injected {stage} fault for request {request.id}")
+        self._faults[request.id] = {"stage": stage, "error": error}
+
+    # ======================================================================
+    # KV paging
+    # ======================================================================
+    def _grow(self, slot: _Slot, want_tokens: int) -> None:
+        """Grow a slot's pages to cover ``want_tokens`` cache positions;
+        raises the typed OutOfMemory on budget or arena exhaustion."""
+        while slot.cap_tokens < want_tokens:
+            if self._kv_budget is not None and \
+                    self._kv_used + self._page_bytes > self._kv_budget:
+                raise OutOfMemory(
+                    f"KV budget exhausted: {self._kv_used} used + "
+                    f"{self._page_bytes} page > {self._kv_budget} budget")
+            chunk = self._kv_pool.alloc(self._page_bytes)
+            slot.pages.append(chunk)
+            slot.cap_tokens += self.page_tokens
+            self._kv_used += self._page_bytes
+            self._sched["pages_allocated"] += 1
+
+    def _free_pages(self, slot: _Slot) -> None:
+        """Return a slot's KV pages to the pool, page by page."""
+        for chunk in slot.pages:
+            self._kv_pool.free(chunk)
+            self._kv_used -= self._page_bytes
+            self._sched["pages_freed"] += 1
+        slot.pages = []
+        slot.cap_tokens = 0
+
+    def _tokens_needed(self, req: Request) -> int:
+        """Cache positions the request occupies after its next token."""
+        return min(len(req.prompt) + len(req.out_tokens) + 1, self.S)
+
+    def _preempt_one(self, requester: Request) -> Optional[int]:
+        """Preempt the lowest-priority occupied slot whose priority does
+        not exceed the requester's (latest arrival breaks ties); the
+        victim's pages are freed and it re-enters the waiting queue at
+        the front (recompute-style — deterministic decode regenerates
+        the same tokens).  Returns the freed slot index, or None if every
+        other resident outranks the requester."""
+        candidates = [
+            (s.request.priority, -s.request.id, i)
+            for i, s in enumerate(self._slots)
+            if s is not None and s.request.priority <= requester.priority]
+        if not candidates:
+            return None
+        _, _, vi = min(candidates)
+        slot = self._slots[vi]
+        victim = slot.request
+        self._free_pages(slot)
+        self._slots[vi] = None
+        victim.state = RequestState.WAITING
+        victim.out_tokens = []
+        victim.preemptions += 1
+        self._waiting.appendleft(victim)
+        self._sched["preemptions"] += 1
+        return vi
+
+    def _ensure_capacity(self, i: int) -> bool:
+        """Pre-decode page growth for slot ``i``, preempting on OOM.
+        Returns False when the slot lost its resident (self-preempted or
+        failed)."""
+        while True:
+            slot = self._slots[i]
+            if slot is None:
+                return False
+            try:
+                self._grow(slot, self._tokens_needed(slot.request))
+                return True
+            except OutOfMemory as e:
+                self.last_oom = e
+                self._kv_alloc_failures += 1
+                others = sum(1 for j, s in enumerate(self._slots)
+                             if s is not None and j != i)
+                if others == 0:
+                    # sole resident: every live page is already its own,
+                    # so no preemption can help — fail with the typed
+                    # error rather than livelock
+                    self._fail_slot(i, e)
+                    return False
+                vi = self._preempt_one(slot.request)
+                if vi is None or vi == i:
+                    # every other resident outranks this request (or it
+                    # preempted itself): yield the slot and retry later
+                    if vi is None:
+                        self._preempt_self(i)
+                    return False
+
+    def _preempt_self(self, i: int) -> None:
+        slot = self._slots[i]
+        self._free_pages(slot)
+        self._slots[i] = None
+        r = slot.request
+        r.state = RequestState.WAITING
+        r.out_tokens = []
+        r.preemptions += 1
+        self._waiting.appendleft(r)
+        self._sched["preemptions"] += 1
+
+    # ======================================================================
+    # request completion / failure
+    # ======================================================================
+    def _finish_request(self, req: Request) -> None:
+        req.state = RequestState.FINISHED
+        req.done = True
+        req.finish_step = self._step_idx
+        self._sched["completed"] += 1
+
+    def _evict(self, i: int) -> Request:
+        """Free slot ``i``'s pages and mark its request finished."""
+        slot = self._slots[i]
+        self._free_pages(slot)
+        self._slots[i] = None
+        self._sched["evictions"] += 1
+        self._finish_request(slot.request)
+        return slot.request
+
+    def _fail_slot(self, i: int, error: BaseException) -> Request:
+        slot = self._slots[i]
+        self._free_pages(slot)
+        self._slots[i] = None
+        return self._fail_request(slot.request, error)
+
+    def _fail_request(self, req: Request, error: BaseException) -> Request:
+        req.state = RequestState.FAILED
+        req.error = error
+        req.finish_step = self._step_idx
+        self._sched["failed"] += 1
+        self._faults.pop(req.id, None)
+        return req
+
+    def _should_finish(self, slot: _Slot) -> bool:
+        r = slot.request
+        if len(r.out_tokens) >= r.max_new_tokens:
+            return True
+        if r.eos_token is not None and r.out_tokens and \
+                r.out_tokens[-1] == r.eos_token:
+            return True
+        # cache full: force-finish (truncated) rather than overrun
+        return len(r.prompt) + len(r.out_tokens) >= self.S
+
+    # ======================================================================
+    # admission
+    # ======================================================================
+    def _admit(self, i: int, req: Request) -> Optional[_Slot]:
+        """Reserve slot ``i`` for ``req``: allocate pages for the prompt
+        plus the prefill's first token.  Returns None (pages rolled
+        back, request NOT requeued) when the allocation fails — the
+        caller decides between deferral and failure."""
+        slot = _Slot(req)
         try:
-            return fn._cache_size()
-        except AttributeError:  # older jax: fall back to shape bookkeeping
-            return fallback
-
-    def _run_prefill(self, tokens, caches):
-        with self._calls_lock:   # groups run concurrently on the DAG
-            self._calls["prefill"] += 1
-            self._prefill_shapes.add(tuple(tokens.shape))
-        return self._prefill(self.params, tokens, caches)
-
-    def _run_decode(self, tok, caches):
-        with self._calls_lock:
-            self._calls["decode"] += 1
-            self._decode_shapes.add(tuple(tok.shape))
-        return self._decode(self.params, tok, caches)
-
-    # -- group pipeline stages (each one DAG command) ---------------------------
-    def _make_groups(self, requests: List[Request]) -> List[List[Request]]:
-        groups = []
-        for i in range(0, len(requests), self.B):
-            group = requests[i:i + self.B]
-            # right-pad the group to full batch slots
-            while len(group) < self.B:
-                group.append(Request(prompt=group[0].prompt,
-                                     max_new_tokens=0))
-            groups.append(group)
-        return groups
-
-    def _start_group(self, group: List[Request]) -> Dict[str, Any]:
-        """Prefill stage: batch the prompts, populate caches, emit the
-        first sampled token.  Returns the group's pipeline state."""
-        plen = max(len(r.prompt) for r in group)
-        toks = np.zeros((self.B, plen), np.int32)
-        for j, r in enumerate(group):
-            toks[j, :len(r.prompt)] = r.prompt   # left-aligned
-        try:
-            kv_chunk = self._kv_pool.alloc(self._kv_bytes)
-        except OutOfMemory:
-            # arena accounting is full: serve anyway, untracked
-            kv_chunk = None
+            self._grow(slot, min(len(req.prompt) + 1, self.S))
+        except OutOfMemory as e:
+            self.last_oom = e
             self._kv_alloc_failures += 1
-        try:
-            caches = init_caches(self.cfg, self.B, self.S)
-            last_logits, caches = self._run_prefill(jnp.asarray(toks),
-                                                    caches)
-        except BaseException:
-            # a failed prefill never reaches the group state, so the
-            # generate() reclaim could not see this chunk — free it here
-            if kv_chunk is not None:
-                self._kv_pool.free(kv_chunk)
-            raise
-        tok = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
-        return {"caches": caches, "tok": tok, "kv_chunk": kv_chunk,
-                "outs": [[] for _ in group]}
+            self._free_pages(slot)
+            return None
+        self._slots[i] = slot
+        req.state = RequestState.RUNNING
+        return slot
 
-    def _step_group(self, st: Dict[str, Any]) -> None:
-        """One synchronized decode step for a group (one DAG command)."""
-        tok = st["tok"]
-        for j in range(self.B):
-            st["outs"][j].append(int(tok[j]))
-        last_logits, st["caches"] = self._run_decode(tok[:, None],
-                                                     st["caches"])
-        st["tok"] = jnp.argmax(last_logits, axis=-1).astype(jnp.int32)
+    def _refill_slots(self, finished: List[Request]) -> List[tuple]:
+        """Pop waiting requests into free slots (continuous mode; fixed
+        mode only when every slot is empty — the refill barrier).
+        Zero-budget requests complete immediately without a slot.
+        Returns ``(slot_idx, request)`` pairs needing prefill."""
+        if self.scheduler == "fixed" and \
+                any(s is not None for s in self._slots):
+            return []
+        staged = []
+        for i in range(self.B):
+            if self._slots[i] is not None:
+                continue
+            while self._waiting:
+                req = self._waiting.popleft()
+                if req.max_new_tokens <= 0:
+                    self._finish_request(req)
+                    finished.append(req)
+                    continue
+                if self._admit(i, req) is None:
+                    if all(s is None for s in self._slots):
+                        # nothing resident to wait on: the request can
+                        # never fit — fail typed instead of wedging
+                        finished.append(
+                            self._fail_request(req, self.last_oom))
+                        continue
+                    self._waiting.appendleft(req)   # defer
+                    return staged
+                staged.append((i, req))
+                break
+            if not self._waiting and self._slots[i] is None:
+                break
+        return staged
 
-    def _finish_group(self, group: List[Request],
-                      st: Dict[str, Any]) -> None:
-        for j, r in enumerate(group):
-            if r.max_new_tokens:
-                r.out_tokens = st["outs"][j][:r.max_new_tokens]
-                r.done = True
-        if st.get("kv_chunk") is not None:
-            # the group's KV block returns to its size-class free list;
-            # the next group's alloc is a pool hit, not a first-fit walk
-            self._kv_pool.free(st.pop("kv_chunk"))
+    # ======================================================================
+    # the DAG round
+    # ======================================================================
+    def _make_prefill_cmd(self, i: int, req: Request):
+        holder: Dict[str, Any] = {}
 
-    # -- dispatch ---------------------------------------------------------------
-    def generate(self, requests: List[Request], greedy: bool = True
-                 ) -> List[Request]:
-        """Serve requests with batched synchronized decode, dispatching
-        independent groups through the event DAG so they overlap."""
-        groups = self._make_groups(requests)
+        def cmd():
+            fault = self._faults.get(req.id)
+            if fault is not None and fault["stage"] == "prefill":
+                self._faults.pop(req.id, None)
+                raise fault["error"]
+            frag, tok = self._exec.prefill(np.asarray(req.prompt,
+                                                      np.int32), i)
+            holder["frag"], holder["tok"] = frag, tok
+
+        return holder, cmd
+
+    def _install_prefill(self, i: int, req: Request,
+                         holder: Dict[str, Any],
+                         finished: List[Request]) -> None:
+        """Splice a completed prefill into its slot and emit token 0."""
+        if self._state is None:
+            self._state = self._exec.init_state()
+        self._state = self._exec.insert(self._state, holder["frag"], i)
+        slot = self._slots[i]
+        slot.inserted = True
+        tok = int(holder["tok"])
+        req.out_tokens.append(tok)
+        slot.last_tok = tok
+        if self._should_finish(slot):
+            finished.append(self._evict(i))
+
+    def _run_round(self, staged: List[tuple], events: List,
+                   finished: List[Request]) -> None:
+        """One DAG round: staged prefills + (optionally) one decode
+        command for the already-resident slots, all independent nodes on
+        the out-of-order queue, then failure surfacing and state
+        updates."""
         q = self._queue
-        t0 = time.perf_counter()
-        states: List[Dict[str, Any]] = []
-        for gi, group in enumerate(groups):
-            st: Dict[str, Any] = {}
-            states.append(st)
+        prefills = []
+        for i, req in staged:
+            holder, cmd = self._make_prefill_cmd(i, req)
+            ev = q.enqueue_native(cmd, name=f"prefill:r{req.id}")
+            prefills.append((i, req, holder, ev))
+            events.append(ev)
+            self._dag_accum["prefill_events"] += 1
 
-            def prefill_cmd(group=group, st=st):
-                st.update(self._start_group(group))
+        staged_idx = {i for i, _ in staged}
+        decode_rows = [i for i in range(self.B)
+                       if self._slots[i] is not None
+                       and self._slots[i].inserted
+                       and i not in staged_idx]
+        decode_ev = None
+        decode_holder: Dict[str, Any] = {}
+        if decode_rows:
+            toks = np.zeros(self.B, np.int64)
+            occ = np.zeros(self.B, bool)
+            for i in decode_rows:
+                toks[i] = self._slots[i].last_tok
+                occ[i] = True
 
-            ev = q.enqueue_native(prefill_cmd, name=f"prefill:g{gi}")
-            for step in range(max(r.max_new_tokens for r in group)):
-                def step_cmd(st=st):
-                    self._step_group(st)
-                ev = q.enqueue_native(step_cmd, wait_for=[ev],
-                                      name=f"decode:g{gi}:s{step}")
+            def decode_cmd():
+                st, out = self._exec.decode(self._state, toks, occ)
+                self._state = st
+                decode_holder["out"] = out
 
-            def finish_cmd(group=group, st=st):
-                self._finish_group(group, st)
+            decode_ev = q.enqueue_native(
+                decode_cmd, name=f"decode:s{self._step_idx}")
+            events.append(decode_ev)
+            self._dag_accum["decode_events"] += 1
 
-            q.enqueue_native(finish_cmd, wait_for=[ev],
-                             name=f"finish:g{gi}")
-        events = q.events()
+        # armed decode-stage faults: a separately-enqueued failing
+        # command attributed to the request (a device-side failure
+        # mid-group that must not take the siblings down)
+        fault_evs = []
+        for rid, fault in list(self._faults.items()):
+            if fault["stage"] != "decode":
+                continue
+            owner = next((i for i in decode_rows
+                          if self._slots[i] is not None
+                          and self._slots[i].request.id == rid), None)
+            if owner is None:
+                continue
+            self._faults.pop(rid, None)
+
+            def fault_cmd(err=fault["error"]):
+                raise err
+
+            ev = q.enqueue_native(fault_cmd, name=f"fault:r{rid}")
+            fault_evs.append((owner, ev))
+            events.append(ev)
+
         try:
             q.finish()
-        finally:
-            # a failed group pipeline skips its finish command; reclaim
-            # any KV block it already allocated so the arena accounting
-            # does not leak across failed generate() calls
-            for st in states:
-                if st.get("kv_chunk") is not None:
-                    self._kv_pool.free(st.pop("kv_chunk"))
+        except CommandError:
+            pass   # surfaced per-event below, onto the affected request
+
+        # failure surfacing: each failed event maps to exactly the
+        # request(s) it belongs to, carrying the original typed error
+        for i, req, holder, ev in prefills:
+            if ev.failed:
+                finished.append(self._fail_slot(i, ev.error))
+        for i, ev in fault_evs:
+            if ev.failed and self._slots[i] is not None:
+                finished.append(self._fail_slot(i, ev.error))
+        if decode_ev is not None and decode_ev.failed:
+            # the shared decode command failed: every decoding request
+            # is affected (the staged prefills are independent nodes and
+            # carry on)
+            for i in decode_rows:
+                if self._slots[i] is not None:
+                    finished.append(self._fail_slot(i, decode_ev.error))
+        elif decode_ev is not None:
+            out = decode_holder["out"]
+            for i in decode_rows:
+                slot = self._slots[i]
+                if slot is None:      # failed via an injected fault
+                    continue
+                tok = int(out[i])
+                slot.request.out_tokens.append(tok)
+                slot.last_tok = tok
+                if self._should_finish(slot):
+                    finished.append(self._evict(i))
+
+        for i, req, holder, ev in prefills:
+            if ev.failed or self._slots[i] is None:
+                continue
+            self._install_prefill(i, req, holder, finished)
+
+    # ======================================================================
+    # the scheduler step
+    # ======================================================================
+    def step(self) -> List[Request]:
+        """One scheduler step; returns the requests that finished (or
+        failed) during it.
+
+        Phases: (1) pre-decode page growth for residents, preempting on
+        OOM; (2) refill free slots from the waiting queue; (3) one DAG
+        round — refill prefills overlap the decode command; (4) evict
+        finished requests; (5) *same-step* refill of slots freed by
+        eviction, so a newly-admitted request has its first token before
+        the step returns."""
+        self._step_idx += 1
+        self._sched["steps"] += 1
+        t0 = time.perf_counter()
+        events: List = []
+        finished: List[Request] = []
+        if self._state is None:
+            self._state = self._exec.init_state()
+
+        # 1. page growth (continuous + fixed both page)
+        for i in range(self.B):
+            if self._slots[i] is not None and self._slots[i].inserted:
+                self._ensure_capacity(i)
+
+        # 2+3. refill, then the overlapped DAG round
+        staged = self._refill_slots(finished)
+        self._run_round(staged, events, finished)
+
+        # 5. same-step refill: evictions (and preemption-freed slots)
+        # refill immediately — each refill is its own small DAG round
+        # (prefill + insert), repeated until slots or queue run dry
+        if self.scheduler == "continuous":
+            guard = 0
+            while self._waiting and \
+                    any(s is None for s in self._slots) and \
+                    guard <= 2 * self.B + len(self._waiting):
+                guard += 1
+                staged = self._refill_slots(finished)
+                if not staged:
+                    break
+                self._run_round(staged, events, finished)
+
         wall = time.perf_counter() - t0
         busy = sum((e.end_ns - e.start_ns) for e in events
                    if e.start_ns and e.end_ns) / 1e9
-        self._last_dag = {
-            "groups": len(groups), "events": len(events),
-            "wall_s": wall, "busy_s": busy,
-            "overlap": (busy / wall) if wall > 0 else 1.0,
-        }
+        self._dag_accum["steps"] += 1
+        self._dag_accum["events"] += len(events)
+        self._dag_accum["wall_s"] += wall
+        self._dag_accum["busy_s"] += busy
+        return finished
+
+    def drain(self, max_steps: Optional[int] = None) -> List[Request]:
+        """Step until the queue and every slot are empty; returns the
+        requests that finished (or failed), in completion order."""
+        done: List[Request] = []
+        stalled = 0
+        while self._waiting or any(s is not None for s in self._slots):
+            if max_steps is not None and self._sched["steps"] >= max_steps:
+                break
+            out = self.step()
+            done.extend(out)
+            # progress = tokens emitted or requests retired; a scheduler
+            # that does neither for several consecutive steps is wedged
+            emitted = any(s is not None and s.request.out_tokens
+                          for s in self._slots)
+            if out or emitted:
+                stalled = 0
+            else:
+                stalled += 1
+                if stalled > 2 * self.B + 8:
+                    raise RuntimeError(
+                        "serving scheduler made no progress for "
+                        f"{stalled} steps ({len(self._waiting)} waiting)")
+        return done
+
+    # ======================================================================
+    # compatible one-shot entry point
+    # ======================================================================
+    def generate(self, requests: List[Request], greedy: bool = True
+                 ) -> List[Request]:
+        """Submit every request and drain the scheduler; returns the
+        completed requests (the pre-scheduler signature, kept for
+        callers that batch up-front)."""
+        for k in self._dag_accum:
+            self._dag_accum[k] = 0 if isinstance(self._dag_accum[k], int) \
+                else 0.0
+        for r in requests:
+            self.submit(r)
+        self.drain()
         return [r for r in requests if r.done]
+
+
+__all__ = ["ServingEngine", "Request", "RequestState"]

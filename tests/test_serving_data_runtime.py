@@ -37,7 +37,7 @@ def test_engine_greedy_matches_teacher_forced():
     assert done[0].out_tokens == toks[len(prompt):]
 
 
-def test_engine_batches_multiple_groups():
+def test_engine_batches_more_requests_than_slots():
     cfg = configs.get_smoke("smollm-135m")
     params = init_params(cfg, jax.random.PRNGKey(1))
     eng = ServingEngine(cfg, params, BASELINE_RULES, batch_slots=2,
@@ -48,11 +48,16 @@ def test_engine_batches_multiple_groups():
     done = eng.generate(reqs)
     assert len(done) == 5
     assert all(len(r.out_tokens) == 3 for r in done)
-    # the dispatch went through the event DAG: one prefill + 3 decode +
-    # 1 finish command per group, all completed
+    # every dispatch went through the event DAG: one prefill per request
+    # (an odd tail is a masked empty slot, never a duplicated request —
+    # the old _make_groups padding bug) plus the shared decode commands
     dag = eng.dag_stats
-    assert dag["groups"] == 3 and dag["events"] == 3 * 5
+    assert dag["prefill_events"] == 5
+    assert dag["decode_events"] >= 2
+    assert dag["events"] == dag["prefill_events"] + dag["decode_events"]
     assert dag["wall_s"] > 0 and dag["busy_s"] > 0
+    st = eng.compile_stats
+    assert st["prefill_calls"] == 5, "tail slot duplicated a request"
 
 
 def test_engine_dag_overlap_matches_serial_results():

@@ -1,0 +1,283 @@
+"""Stateful property-test harness for the continuous-batching scheduler.
+
+A hypothesis :class:`RuleBasedStateMachine` drives random interleavings
+of the scheduler op vocabulary — submit (mixed prompt/output lengths and
+priorities), step, fault injection — against the *real*
+:class:`~repro.serving.ServingEngine` (real event DAG, real size-class
+``BufferPool`` paging) over the deterministic
+:class:`~repro.serving.executor.StubExecutor`, whose closed-form
+``expected_tokens`` is the single-slot oracle: the token stream a
+request must produce when served alone, one at a time.
+
+Invariants checked after every step and at teardown (docs/serving.md):
+
+* every submitted request reaches a terminal state **exactly once** —
+  completed or failed, never dropped, never completed twice (preemption
+  requeues, it does not retire);
+* per-request outputs are **independent of arrival interleaving**: a
+  running request's stream is always a prefix of the oracle stream, a
+  completed request's stream equals it bitwise;
+* failures are always *typed* (:class:`~repro.core.errors.ReproError`)
+  and only ever the injected fault's error;
+* the KV pool **never leaks pages**: live-page accounting matches the
+  resident slots at every step and returns to zero across a full drain,
+  with every allocated page freed.
+
+The op/oracle logic lives in :class:`SchedDriver`, which needs no
+hypothesis — a seeded random-walk test (plus a single-slot
+cross-engine comparison) drives it on every install, and the hypothesis
+state machine (run under the ``ci``/``dev`` profiles registered in
+tests/conftest.py, the PR-4 pattern) adds minimized counterexamples.
+"""
+
+import random
+
+import numpy as np
+
+from repro.core.errors import DeviceLostError, ReproError
+from repro.serving import Request, RequestState, ServingEngine, StubExecutor
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:               # plain tests below still run
+    HAVE_HYPOTHESIS = False
+
+SLOTS = 2
+MAX_SEQ = 64
+PAGE_TOKENS = 4
+BUDGET_PAGES = 10                 # 40 tokens: two residents can collide
+MAX_PROMPT = 8
+MAX_NEW = 20                      # 8 + 20 + 1 < 40: any request fits alone
+
+
+class SchedDriver:
+    """The machine body: a real engine + the closed-form oracle.
+
+    Every op method performs the real operation and asserts the
+    op-local contract; :meth:`check_invariants` asserts the global
+    ones.  Drivable by hypothesis rules or a plain seeded random walk.
+    """
+
+    def __init__(self, budget_pages=BUDGET_PAGES):
+        self.ex = StubExecutor(batch_slots=SLOTS, max_seq=MAX_SEQ,
+                               bytes_per_token=64)
+        budget = None if budget_pages is None \
+            else budget_pages * PAGE_TOKENS * 64
+        self.eng = ServingEngine(None, None, None, batch_slots=SLOTS,
+                                 max_seq=MAX_SEQ, executor=self.ex,
+                                 page_tokens=PAGE_TOKENS,
+                                 kv_budget_bytes=budget)
+        self.requests = []        # every request ever submitted
+        self.retired = set()      # ids observed terminal (exactly once)
+        self.injected = {}        # id -> injected error
+
+    # -- ops -------------------------------------------------------------------
+    def submit(self, plen, max_new, priority, seed):
+        rng = np.random.default_rng(seed)
+        r = Request(prompt=rng.integers(0, 500, plen).astype(np.int32),
+                    max_new_tokens=max_new, priority=priority)
+        self.eng.submit(r)
+        assert r.id >= 0 and r.state == RequestState.WAITING
+        self.requests.append(r)
+        return r
+
+    def step(self):
+        finished = self.eng.step()
+        for r in finished:
+            assert r.id not in self.retired, \
+                f"request {r.id} retired twice"
+            self.retired.add(r.id)
+            self._check_terminal(r)
+        return finished
+
+    def inject_fault(self, idx, stage):
+        live = [r for r in self.requests if r.id not in self.retired]
+        if not live:
+            return
+        r = live[idx % len(live)]
+        err = DeviceLostError(f"chaos:{r.id}:{stage}")
+        self.eng.inject_fault(r, stage=stage, error=err)
+        self.injected[r.id] = err
+
+    def drain(self):
+        out = self.eng.drain()
+        for r in out:
+            assert r.id not in self.retired
+            self.retired.add(r.id)
+            self._check_terminal(r)
+
+    # -- the oracle ------------------------------------------------------------
+    def _oracle(self, r):
+        return StubExecutor.expected_tokens(r.prompt, r.max_new_tokens,
+                                            eos_token=r.eos_token)
+
+    def _check_terminal(self, r):
+        if r.done:
+            assert r.state == RequestState.FINISHED
+            # bitwise-identical to serving the request alone: output
+            # independent of slots, co-tenants, preemption, arrivals
+            assert r.out_tokens == self._oracle(r), \
+                f"request {r.id} stream diverged from the oracle"
+        else:
+            assert r.state == RequestState.FAILED
+            assert isinstance(r.error, ReproError), r.error
+            assert r.id in self.injected, \
+                f"request {r.id} failed without an injected fault"
+            assert r.error is self.injected[r.id]
+
+    def check_invariants(self):
+        kv = self.eng.kv_stats
+        sched = self.eng.scheduler_stats
+        # page accounting matches the resident slots at every step
+        live_pages = sum(len(s.pages) for s in self.eng._slots
+                         if s is not None)
+        assert kv["pages_live"] == live_pages
+        assert kv["kv_used_bytes"] == live_pages * kv["page_bytes"]
+        assert sched["pages_allocated"] - sched["pages_freed"] == \
+            live_pages
+        # no request is lost: everything submitted is waiting, resident,
+        # or retired — and never more than one of those
+        waiting_ids = {r.id for r in self.eng._waiting}
+        running_ids = {s.request.id for s in self.eng._slots
+                       if s is not None}
+        assert not (waiting_ids & running_ids)
+        assert not (waiting_ids | running_ids) & self.retired
+        for r in self.requests:
+            assert (r.id in waiting_ids) or (r.id in running_ids) or \
+                (r.id in self.retired), f"request {r.id} dropped"
+            if r.id in running_ids:
+                # a running stream is always an oracle prefix
+                oracle = self._oracle(r)
+                assert r.out_tokens == oracle[:len(r.out_tokens)]
+
+    def check_drained(self):
+        assert {r.id for r in self.requests} == self.retired, \
+            "drain left requests behind"
+        kv = self.eng.kv_stats
+        assert kv["pages_live"] == 0 and kv["kv_used_bytes"] == 0, \
+            "KV pool leaked pages across a full drain"
+        sched = self.eng.scheduler_stats
+        assert sched["pages_allocated"] == sched["pages_freed"]
+
+
+# --------------------------------------------------------------------------
+# hypothesis-free: seeded random walk (runs on every install)
+# --------------------------------------------------------------------------
+
+def test_scheduler_random_walk_seeded():
+    for seed in range(6):
+        rnd = random.Random(seed)
+        d = SchedDriver()
+        for _ in range(120):
+            op = rnd.random()
+            if op < 0.35 and len(d.requests) < 25:
+                d.submit(plen=rnd.randint(2, MAX_PROMPT),
+                         max_new=rnd.randint(1, MAX_NEW),
+                         priority=rnd.randint(0, 2),
+                         seed=rnd.randint(0, 10**6))
+            elif op < 0.42:
+                d.inject_fault(rnd.randint(0, 30),
+                               rnd.choice(["prefill", "decode"]))
+            else:
+                d.step()
+            d.check_invariants()
+        d.drain()
+        d.check_invariants()
+        d.check_drained()
+
+
+def test_multi_slot_outputs_match_single_slot_engine():
+    """The literal single-slot oracle: the same request set served by a
+    batch_slots=1 engine, one at a time, produces identical streams."""
+    rng = np.random.default_rng(11)
+    specs = [(int(rng.integers(2, MAX_PROMPT + 1)),
+              int(rng.integers(1, MAX_NEW + 1))) for _ in range(8)]
+    prompts = [rng.integers(0, 500, p).astype(np.int32)
+               for p, _ in specs]
+
+    def serve(slots):
+        eng = ServingEngine(None, None, None, batch_slots=slots,
+                            max_seq=MAX_SEQ, page_tokens=PAGE_TOKENS,
+                            executor=StubExecutor(batch_slots=slots,
+                                                  max_seq=MAX_SEQ))
+        reqs = [Request(prompt=p.copy(), max_new_tokens=m)
+                for p, (_, m) in zip(prompts, specs)]
+        pending = list(reqs)
+        k = 0
+        while pending or eng.scheduler_stats["waiting"] or \
+                eng.scheduler_stats["running"]:
+            # stagger arrivals differently per width
+            if pending and k % (slots + 1) != 0:
+                eng.submit(pending.pop(0))
+            k += 1
+            eng.step()
+        assert all(r.done for r in reqs)
+        return [r.out_tokens for r in reqs]
+
+    assert serve(3) == serve(1)
+
+
+def test_preemption_pressure_walk_never_drops():
+    """Tight budget + long requests: heavy preemption churn must retire
+    every request with oracle-exact streams and zero page leaks."""
+    rnd = random.Random(99)
+    d = SchedDriver(budget_pages=8)     # 32 tokens for 2 slots
+    for _ in range(10):
+        d.submit(plen=rnd.randint(4, MAX_PROMPT),
+                 max_new=rnd.randint(10, 18),
+                 priority=rnd.randint(0, 1),
+                 seed=rnd.randint(0, 10**6))
+    d.drain()
+    d.check_drained()
+    assert d.eng.scheduler_stats["preemptions"] >= 1
+    assert all(r.done for r in d.requests)
+
+
+# --------------------------------------------------------------------------
+# hypothesis state machine (minimized counterexamples where available)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    class SchedulerMachine(RuleBasedStateMachine):
+        @initialize()
+        def setup(self):
+            self.d = SchedDriver()
+
+        @rule(plen=st.integers(2, MAX_PROMPT),
+              max_new=st.integers(1, MAX_NEW),
+              priority=st.integers(0, 2),
+              seed=st.integers(0, 10**6))
+        def submit(self, plen, max_new, priority, seed):
+            if len(self.d.requests) < 40:
+                self.d.submit(plen, max_new, priority, seed)
+
+        @rule()
+        def step(self):
+            self.d.step()
+
+        @rule(n=st.integers(2, 5))
+        def step_many(self, n):
+            for _ in range(n):
+                self.d.step()
+
+        @rule(idx=st.integers(0, 50),
+              stage=st.sampled_from(["prefill", "decode"]))
+        def chaos(self, idx, stage):
+            self.d.inject_fault(idx, stage)
+
+        @invariant()
+        def invariants(self):
+            if hasattr(self, "d"):
+                self.d.check_invariants()
+
+        def teardown(self):
+            if hasattr(self, "d"):
+                self.d.drain()
+                self.d.check_invariants()
+                self.d.check_drained()
+
+    TestSchedulerMachine = SchedulerMachine.TestCase
