@@ -1,0 +1,246 @@
+"""Adaptive N-device co-execution vs the best static split (§Scheduler).
+
+The lopsided platform the adaptive scheduler exists for: two fast
+devices plus one slow device (a :class:`ThrottledDevice` charging 8x
+the per-group cost), where the slow device additionally *stalls* for
+``STALL_S`` at the start of every timed launch — another tenant briefly
+hogging it.  Any static split provably loses on this platform:
+
+* give the slow device a fair share and the launch waits on
+  ``stall + 8ms/group * share`` — the whole point of asymmetry;
+* give it the minimal share (1 group) and the launch still waits out
+  ``stall + 8ms``: a static plan cannot un-assign work once the stall
+  materializes.
+
+The adaptive mode's throughput model learns the 2:2:16 speed ratio
+within a launch, the HGuided splitter sizes chunks to it, and — when
+the stall hits — the fast devices finish the frontier and *steal* the
+straggler's in-flight span, so the merge gate fires without waiting for
+the stall.  Gates (CI-enforced):
+
+* ``adaptive >= 1.5x`` the best static split over an all-positive
+  weight sweep (static weights of 0 are device exclusion — a different
+  platform, not a split policy);
+* the adaptive merge is **bitwise identical** to a single-device launch;
+* a fresh executor warm-started from the persisted
+  :class:`~repro.core.autotune.TuningTable` converges within its first
+  2 launches (slow-class share already lopsided, not the cold equal
+  third).
+
+Every executor warms the per-device jit trace with one untimed static
+launch first: the one-shot trace cost would otherwise land inside the
+first chunk's event window and poison the first throughput observation
+(docs/runtime.md §Scheduler).
+
+  PYTHONPATH=src python -m benchmarks.bench_coexec
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import KernelBuilder
+from repro.core.autotune import TuningTable
+from repro.runtime import Context, DeviceInfo, ThrottledDevice, device_class
+
+N = 96 * 16
+LSZ = 16
+N_GROUPS = N // LSZ
+FAST_S = 0.001          # seconds per work-group, fast devices
+SLOW_S = 0.008          # slow device: 8x per-group cost
+STALL_S = 0.25          # one-shot stall armed before every timed launch
+REPEATS = 3
+GATE_SPEEDUP = 1.5
+
+
+def build_scale():
+    b = KernelBuilder("scale")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    y[g] = x[g] * 2.0 + g
+    return b.finish()
+
+
+def make_device(i: int, seconds_per_group: float, cls: str) -> ThrottledDevice:
+    return ThrottledDevice(DeviceInfo(
+        name=f"bench-{cls}-{i}", driver="vector",
+        global_mem_size=1 << 30, local_mem_size=1 << 20,
+        max_work_group_size=1024, compute_units=1),
+        seconds_per_group=seconds_per_group, coexec_class=cls)
+
+
+def lopsided_platform() -> List[ThrottledDevice]:
+    return [make_device(0, FAST_S, "fast"),
+            make_device(1, FAST_S, "fast"),
+            make_device(2, SLOW_S, "slow")]
+
+
+def make_kernel(ctx: Context):
+    prog = ctx.create_program(build_scale).build()
+    k = prog.create_kernel("scale")
+    k.set_args(x=np.arange(N, dtype=np.float32),
+               y=np.zeros(N, np.float32))
+    return k
+
+
+def timed_launch(co, k, slow_dev, mode, weights=None):
+    """One timed launch with the stall armed — the same adversity for
+    every contender."""
+    slow_dev.stall(STALL_S)
+    t0 = time.perf_counter()
+    out = co.launch(k, (N,), (LSZ,), mode=mode, weights=weights)
+    return time.perf_counter() - t0, out
+
+
+def bench_static(reference: bytes) -> Dict[str, object]:
+    """Sweep all-positive static weight vectors, from fair to
+    minimal-slow (1 group): every one waits out the stall."""
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = make_kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=TuningTable())
+    co.launch(k, (N,), (LSZ,), mode="static")      # jit-trace warm-up
+    sweep = {}
+    for weights in [(1, 1, 1),                     # fair (speed-blind)
+                    (4, 4, 1), (8, 8, 1),          # oracle-ish ratios
+                    (16, 16, 1),
+                    (47.5, 47.5, 1)]:              # minimal-slow: 1 group
+        best = float("inf")
+        for _ in range(REPEATS):
+            wall, out = timed_launch(co, k, devs[2], "static",
+                                     weights=list(weights))
+            assert out["y"].tobytes() == reference, \
+                f"static {weights} diverged bitwise"
+            best = min(best, wall)
+        sweep["/".join(str(w) for w in weights)] = best
+    co.finish()
+    best_key = min(sweep, key=sweep.get)
+    return {"sweep_s": sweep, "best_weights": best_key,
+            "best_s": sweep[best_key]}
+
+
+def bench_adaptive(reference: bytes, table: TuningTable
+                   ) -> Dict[str, object]:
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = make_kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=table)
+    co.launch(k, (N,), (LSZ,), mode="static")      # jit-trace warm-up
+    for _ in range(3):                             # stall-free convergence
+        co.launch(k, (N,), (LSZ,), mode="adaptive")
+    best, bitwise = float("inf"), True
+    for _ in range(REPEATS):
+        wall, out = timed_launch(co, k, devs[2], "adaptive")
+        bitwise &= out["y"].tobytes() == reference
+        best = min(best, wall)
+    stats = co.last_stats
+    co.finish()
+    key = TuningTable.make_coexec_key(
+        k.ir_hash, [device_class(d) for d in devs])
+    return {"best_s": best, "bitwise_identical": bitwise,
+            "weights": dict(stats.weights),
+            "steals_per_device": dict(stats.steals_per_device),
+            "groups_per_device": dict(stats.groups_per_device),
+            "persisted": table.get_coexec(key)}
+
+
+def bench_warm_convergence(table: TuningTable) -> Dict[str, object]:
+    """A fresh executor over fresh devices, warm-started from the table
+    persisted by :func:`bench_adaptive`: within 2 launches the slow
+    class must already run a lopsided share."""
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = make_kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=table)
+    co.launch(k, (N,), (LSZ,), mode="static")      # jit-trace warm-up
+    per_launch = []
+    for _ in range(2):
+        co.launch(k, (N,), (LSZ,), mode="adaptive")
+        per_launch.append(dict(co.last_stats.weights))
+    co.finish()
+    slow = devs[2].info.name
+    slow_share = per_launch[-1][slow]
+    slow_groups = co.last_stats.groups_per_device.get(slow, 0)
+    return {"weights_per_launch": per_launch,
+            "slow_share_after_2": slow_share,
+            "slow_groups_last_launch": slow_groups,
+            # converged: nowhere near the cold equal third
+            "converged": slow_share < 0.2 and slow_groups < N_GROUPS / 3}
+
+
+def run() -> Dict[str, object]:
+    # bitwise reference: the same kernel on one unthrottled device
+    ref_dev = make_device(9, 0.0, "ref")
+    ref_ctx = Context(devices=[ref_dev])
+    ref_out = ref_ctx.create_co_executor(
+        [ref_dev], tuning_table=TuningTable()).launch(
+            make_kernel(ref_ctx), (N,), (LSZ,), mode="static")
+    reference = ref_out["y"].tobytes()
+
+    table = TuningTable()
+    static = bench_static(reference)
+    adaptive = bench_adaptive(reference, table)
+    warm = bench_warm_convergence(table)
+    return {"platform": {"n_groups": N_GROUPS, "fast_s_per_group": FAST_S,
+                         "slow_s_per_group": SLOW_S, "stall_s": STALL_S},
+            "static": static, "adaptive": adaptive, "warm": warm,
+            "speedup_vs_best_static":
+                static["best_s"] / adaptive["best_s"]}
+
+
+def main(trajectory: bool = True):
+    res = run()
+    st, ad, warm = res["static"], res["adaptive"], res["warm"]
+    print(f"platform    : 2 fast ({FAST_S * 1e3:.0f}ms/group) + 1 slow "
+          f"({SLOW_S * 1e3:.0f}ms/group), {N_GROUPS} groups, "
+          f"{STALL_S * 1e3:.0f}ms stall each timed launch")
+    for wkey, wall in st["sweep_s"].items():
+        mark = " <- best" if wkey == st["best_weights"] else ""
+        print(f"  static {wkey:14s}: {wall * 1e3:7.1f}ms{mark}")
+    print(f"adaptive    : {ad['best_s'] * 1e3:7.1f}ms  "
+          f"speedup {res['speedup_vs_best_static']:.2f}x vs best static  "
+          f"bitwise_identical={ad['bitwise_identical']}")
+    print(f"  weights   : { {k: round(v, 3) for k, v in ad['weights'].items()} }  "
+          f"steals={ad['steals_per_device']}")
+    print(f"  persisted : {ad['persisted']}")
+    print(f"warm start  : slow share {warm['slow_share_after_2']:.3f} "
+          f"after 2 launches ({warm['slow_groups_last_launch']} of "
+          f"{N_GROUPS} groups)  converged={warm['converged']}")
+
+    ok = (res["speedup_vs_best_static"] >= GATE_SPEEDUP
+          and ad["bitwise_identical"] and warm["converged"])
+    status = "OK" if ok else "BELOW TARGET"
+    print(f"\nadaptive co-execution gate (>={GATE_SPEEDUP}x best static "
+          f"+ bitwise + warm convergence): {status}")
+    if trajectory:
+        _append_trajectory(res)
+    res["_gate_ok"] = ok
+    return res
+
+
+def _append_trajectory(res) -> None:
+    """Append this run to BENCH_COEXEC.json (one record per run, so the
+    adaptive-vs-static margin is tracked across PRs)."""
+    path = os.path.join(os.path.dirname(__file__), "BENCH_COEXEC.json")
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = []
+    hist.append({"timestamp": time.time(), "results": res})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
+    print(f"trajectory -> {path} ({len(hist)} runs)")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main().get("_gate_ok") else 1)

@@ -24,6 +24,7 @@ which bypasses measurement for every shape of that kernel.
 from __future__ import annotations
 
 import json
+import math
 import os
 import threading
 import time
@@ -41,14 +42,21 @@ class TuningTable:
     """Persistent (kernel shape -> winning target) table.
 
     Schema (JSON): ``{"winners": {key: {"target", "timings_us",
-    "failed"?}}, "pins": {kernel_name: target}}``.  Keys are
-    ``"<ir-hash>|l=<local>|g=<global>|<options>"`` so a tuning decision is
-    exactly as specific as the compilation it selects.
+    "failed"?}}, "pins": {kernel_name: target},
+    "coexec": {key: {"weights": {class: share}, "launches": n}}}``.
+    Winner keys are ``"<ir-hash>|l=<local>|g=<global>|<options>"`` so a
+    tuning decision is exactly as specific as the compilation it
+    selects.  The ``coexec`` section persists converged multi-device
+    split weights per *device class* (docs/runtime.md §Scheduler), keyed
+    ``"<ir-hash>|coexec=<class>+<class>+..."`` — the ImageCL-style
+    per-platform mapping decision, so a warm process starts a co-executed
+    launch near the converged split instead of re-learning it.
     """
 
     def __init__(self, path: Optional[str] = None):
         self.path = path
         self._winners: Dict[str, Dict[str, object]] = {}
+        self._coexec: Dict[str, Dict[str, object]] = {}
         self._pins: Dict[str, str] = {}
         self._lock = threading.Lock()
         # per-key tuning locks: concurrent first launches of the same
@@ -83,15 +91,25 @@ class TuningTable:
         d = f"|dev={device}" if device else ""
         return f"{ir}{d}|l={l}|g={g}|{o}"
 
+    @staticmethod
+    def make_coexec_key(ir: str, device_classes: Sequence[str]) -> str:
+        """Key for a persisted co-execution split: kernel identity plus
+        the ordered *device-class vector* of the platform.  Classes (not
+        device names) make the entry portable across processes whose
+        device objects differ but whose platform shape is the same; the
+        vector is ordered because weights are positional."""
+        return f"{ir}|coexec={'+'.join(device_classes)}"
+
     # -- persistence -----------------------------------------------------------
     def _load(self) -> None:
         try:
             with open(self.path) as f:
                 raw = json.load(f)
             self._winners = dict(raw.get("winners", {}))
+            self._coexec = dict(raw.get("coexec", {}))
             self._pins = dict(raw.get("pins", {}))
         except Exception:
-            self._winners, self._pins = {}, {}
+            self._winners, self._coexec, self._pins = {}, {}, {}
 
     def _save(self) -> None:
         if not self.path:
@@ -101,7 +119,8 @@ class TuningTable:
             os.makedirs(os.path.dirname(os.path.abspath(self.path)),
                         exist_ok=True)
             with open(tmp, "w") as f:
-                json.dump({"winners": self._winners, "pins": self._pins},
+                json.dump({"winners": self._winners,
+                           "coexec": self._coexec, "pins": self._pins},
                           f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except Exception as e:
@@ -126,6 +145,51 @@ class TuningTable:
             self._winners[key] = ent
             self._save()
 
+    def record_coexec(self, key: str, weights: Dict[str, float],
+                      blend: float = 0.5) -> None:
+        """Fold one launch's converged per-class split weights into the
+        persisted entry.
+
+        ``weights`` maps device class -> observed share; they are
+        normalized here so the stored entry is always a distribution.
+        Existing entries are blended (``blend`` is the weight of the new
+        observation) rather than overwritten: per-launch noise averages
+        out across launches, the ImageCL persistence idea.  Non-finite
+        or non-positive totals are dropped — a persisted entry must never
+        poison a warm start."""
+        try:
+            vals = {str(c): float(w) for c, w in weights.items()}
+        except (TypeError, ValueError):
+            return
+        total = sum(vals.values())
+        if not vals or not all(math.isfinite(w) and w >= 0
+                               for w in vals.values()) or total <= 0:
+            return
+        vals = {c: w / total for c, w in vals.items()}
+        with self._lock:
+            ent = self._coexec.get(key)
+            if ent and set(ent.get("weights", {})) == set(vals):
+                old = ent["weights"]
+                mixed = {c: blend * vals[c] + (1 - blend) * float(old[c])
+                         for c in vals}
+                tot = sum(mixed.values())
+                vals = {c: w / tot for c, w in mixed.items()}
+                launches = int(ent.get("launches", 0)) + 1
+            else:
+                launches = 1
+            self._coexec[key] = {"weights": vals, "launches": launches}
+            self._save()
+
+    def get_coexec(self, key: str) -> Optional[Dict[str, object]]:
+        """The persisted co-execution entry for ``key`` —
+        ``{"weights": {class: share}, "launches": n}`` — or None."""
+        with self._lock:
+            ent = self._coexec.get(key)
+            if ent is None:
+                return None
+            return {"weights": dict(ent.get("weights", {})),
+                    "launches": int(ent.get("launches", 0))}
+
     def pin(self, kernel_name: str, target: str) -> None:
         with self._lock:
             self._pins[kernel_name] = target
@@ -138,6 +202,7 @@ class TuningTable:
     def clear(self) -> None:
         with self._lock:
             self._winners.clear()
+            self._coexec.clear()
             self._pins.clear()
             self._save()
 

@@ -147,6 +147,17 @@ class Program:
                             horizontal=self.options["horizontal"],
                             merge_uniform=self.options["merge_uniform"])
 
+    def ir_hash(self, name: str) -> str:
+        """Canonical IR hash of kernel ``name`` — the content-addressed
+        kernel identity every persistent key is derived from (compilation
+        cache, tuning-table winners, co-execution weight entries)."""
+        try:
+            return self._ir[name]
+        except KeyError:
+            raise InvalidArgError(
+                f"no kernel {name!r} in program; have "
+                f"{self.kernel_names()}") from None
+
     def build(self, verify: bool = True) -> "Program":
         """clBuildProgram: run the target-independent middle-end for
         every kernel through the shared plan tier, with the structural
@@ -279,6 +290,13 @@ class Kernel:
         self._args: Dict[str, object] = {}
 
     # -- signature introspection -------------------------------------------------
+    @property
+    def ir_hash(self) -> str:
+        """Canonical IR hash of this kernel's function (stable across
+        processes) — the identity the co-execution scheduler keys its
+        persisted per-device-class split weights on (docs/caching.md)."""
+        return self.program.ir_hash(self.name)
+
     @property
     def num_args(self) -> int:
         """clGetKernelInfo(CL_KERNEL_NUM_ARGS) over the settable args."""

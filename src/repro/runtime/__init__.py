@@ -18,14 +18,16 @@ from ..core.program import Kernel, Program
 from .bufalloc import Bufalloc, OutOfMemory, ResidencyTracker
 from .context import Context, default_context
 from .events import (CommandError, DependencyError, Event, EventStatus,
-                     UserEvent, wait_for_events)
+                     UserEvent, chunk_counters, wait_for_events)
 from .memory import (MAP_READ, MAP_READ_WRITE, MAP_WRITE,
                      MAP_WRITE_INVALIDATE, BufferPool, MapError,
                      MappedRegion, SubBuffer, create_sub_buffer)
-from .platform import (Buffer, Device, DeviceInfo, Platform, create_buffer,
-                       default_platform)
+from .platform import (Buffer, Device, DeviceInfo, Platform,
+                       ThrottledDevice, create_buffer, default_platform)
 from .queue import CommandQueue
-from .scheduler import CoExecStats, CoExecutor, SharedBuffer, split_groups
+from .scheduler import (AdaptiveSplitter, CoExecStats, CoExecutor,
+                        SharedBuffer, ThroughputModel, device_class,
+                        split_groups)
 
 __all__ = [
     "Context", "default_context", "Program", "Kernel",
@@ -33,11 +35,12 @@ __all__ = [
     "status_name",
     "Bufalloc", "OutOfMemory", "ResidencyTracker",
     "Event", "EventStatus", "UserEvent", "CommandError", "DependencyError",
-    "wait_for_events",
-    "Platform", "Device", "DeviceInfo", "Buffer", "create_buffer",
-    "default_platform",
+    "wait_for_events", "chunk_counters",
+    "Platform", "Device", "DeviceInfo", "ThrottledDevice", "Buffer",
+    "create_buffer", "default_platform",
     "CommandQueue",
     "CoExecutor", "CoExecStats", "SharedBuffer", "split_groups",
+    "ThroughputModel", "AdaptiveSplitter", "device_class",
     "MapError", "MappedRegion", "SubBuffer", "create_sub_buffer",
     "BufferPool", "MAP_READ", "MAP_WRITE", "MAP_READ_WRITE",
     "MAP_WRITE_INVALIDATE",

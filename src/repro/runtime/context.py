@@ -173,17 +173,30 @@ class Context:
         return q
 
     def create_co_executor(self, devices: Optional[Sequence[Device]] = None,
-                           chunks_per_device: int = 4) -> CoExecutor:
+                           chunks_per_device: int = 4,
+                           tuning_table=None,
+                           min_chunk_groups: int = 1,
+                           hguided_divisor: float = 2.0,
+                           ewma_alpha: float = 0.5) -> CoExecutor:
         """A multi-device :class:`~repro.runtime.scheduler.CoExecutor`
         over ``devices`` (default: every context device; given devices
-        are scope-checked like every other context factory).  Its
+        are scope-checked like every other context factory) — any number
+        of heterogeneous devices, each specializing kernels through the
+        context's shared plan tier so N devices build a plan once.  Its
         :meth:`~repro.runtime.scheduler.CoExecutor.launch` consumes the
-        same :class:`~repro.core.program.Kernel` objects queues do."""
+        same :class:`~repro.core.program.Kernel` objects queues do; the
+        extra keyword arguments configure the ``adaptive`` scheduling
+        mode (throughput-model EWMA, HGuided chunking, tuning-table
+        weight persistence — docs/runtime.md §Scheduler)."""
         if devices is not None:
             devices = [self._check_device(d, "create_co_executor")
                        for d in devices]
         return CoExecutor(devices if devices is not None else self.devices,
-                          chunks_per_device=chunks_per_device)
+                          chunks_per_device=chunks_per_device,
+                          tuning_table=tuning_table,
+                          min_chunk_groups=min_chunk_groups,
+                          hguided_divisor=hguided_divisor,
+                          ewma_alpha=ewma_alpha)
 
     # -- direct host launch -------------------------------------------------------
     def launch(self, kernel: Kernel, global_size: Sequence[int],

@@ -255,6 +255,44 @@ class UserEvent(Event):
         self.submit_ns = time.monotonic_ns()
 
 
+def chunk_counters(events, kind: Optional[str] = None
+                   ) -> List[Dict[str, object]]:
+    """Per-event profiling rows for a set of chunk events.
+
+    Returns one dict per *terminal* event (optionally filtered by
+    ``kind``): ``name``, ``kind``, ``ok``, the four
+    ``clGetEventProfilingInfo`` counters, plus two derived fields —
+    ``duration_s`` (RUNNING -> terminal) and ``queue_s``
+    (QUEUED -> RUNNING, the scheduling delay).  Events still in flight
+    are skipped, so the rows are safe to take mid-launch.
+
+    This is the extraction layer between raw event profiles and
+    consumers that reason about chunk timing: the co-execution
+    throughput model (:class:`~repro.runtime.scheduler.ThroughputModel`)
+    feeds on ``duration_s`` of completed ``"kernel"`` chunks, and the
+    stats tests cross-check :class:`~repro.runtime.scheduler.CoExecStats`
+    against these rows."""
+    rows: List[Dict[str, object]] = []
+    for ev in events:
+        if kind is not None and ev.kind != kind:
+            continue
+        if not ev.done:
+            continue
+        duration_s = None
+        if ev.start_ns is not None and ev.end_ns is not None:
+            duration_s = (ev.end_ns - ev.start_ns) / 1e9
+        queue_s = None
+        if ev.queued_ns is not None and ev.start_ns is not None:
+            queue_s = (ev.start_ns - ev.queued_ns) / 1e9
+        row: Dict[str, object] = {"name": ev.name, "kind": ev.kind,
+                                  "ok": ev.succeeded}
+        row.update(ev.profile)
+        row["duration_s"] = duration_s
+        row["queue_s"] = queue_s
+        rows.append(row)
+    return rows
+
+
 def wait_for_events(events, timeout: Optional[float] = None) -> bool:
     """clWaitForEvents: block until every event is terminal.
 

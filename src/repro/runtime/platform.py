@@ -23,6 +23,7 @@ from __future__ import annotations
 
 import dataclasses
 import threading
+import time
 import warnings
 from typing import Callable, Dict, List, Optional, Sequence
 
@@ -107,6 +108,126 @@ class Device:
 
     def query(self, what: str):
         return getattr(self.info, what)
+
+
+class ThrottledDevice(Device):
+    """A device that models a slower — or intermittently busy — member
+    of a lopsided platform (the benchmark and test double for N-device
+    asymmetric co-execution, docs/runtime.md §Scheduler).
+
+    Kernels compiled on a ThrottledDevice run the *real* computation
+    (results stay bitwise-identical to any other device) and then charge
+    simulated time: ``seconds_per_group`` for every work-group in the
+    executed range, plus any one-shot delay armed with :meth:`stall`
+    (another tenant briefly hogging the device).  The charged time lands
+    inside the chunk command, so it shows up in the event profiling
+    counters exactly like real execution time — which is what the
+    co-execution throughput model measures.
+
+    With ``window_chunks=True`` (the default) a ``group_range``
+    sub-launch is executed by running the *full-range* kernel through
+    the normal cached jit trace and windowing out the chunk's linearized
+    element span — so timing-dependent adaptive chunk boundaries never
+    force a fresh ``(lo, hi)`` jit trace (~100ms each, which would drown
+    the simulated per-group cost).  The windowing is exact for kernels
+    where work-group ``g`` writes exactly its own linearized element
+    span — elementwise kernels, which is what the lopsided benchmark
+    runs.  For kernels with scattered cross-group writes pass
+    ``window_chunks=False`` to delegate ``group_range`` untouched.
+
+    ``coexec_class`` (default ``"<driver>-throttled"``) is the
+    device-class key the scheduler persists split weights under — give
+    fast and slow wrappers different classes so their learned weights
+    never alias.  ``sleep`` is injectable so tests can run simulated
+    platforms in virtual time.
+    """
+
+    def __init__(self, info: DeviceInfo, jax_device=None,
+                 seconds_per_group: float = 0.0,
+                 coexec_class: Optional[str] = None,
+                 sleep: Optional[Callable[[float], None]] = None,
+                 window_chunks: bool = True):
+        super().__init__(info, jax_device)
+        self.seconds_per_group = float(seconds_per_group)
+        self.coexec_class = coexec_class or f"{info.driver}-throttled"
+        self._sleep = sleep if sleep is not None else time.sleep
+        self.window_chunks = bool(window_chunks)
+        self._stall_s = 0.0
+        self._stall_lock = threading.Lock()
+
+    def stall(self, seconds: float) -> None:
+        """Arm a one-shot delay charged to the next kernel execution on
+        this device."""
+        with self._stall_lock:
+            self._stall_s += float(seconds)
+
+    def _consume_stall(self) -> float:
+        with self._stall_lock:
+            s, self._stall_s = self._stall_s, 0.0
+            return s
+
+    def compile(self, build: Callable[[], Function],
+                local_size: Sequence[int], **opts) -> "_ThrottledKernel":
+        inner = super().compile(build, local_size, **opts)
+        return _ThrottledKernel(inner, self,
+                                tuple(int(x) for x in local_size))
+
+
+class _ThrottledKernel:
+    """Launchable proxy that charges its ThrottledDevice's simulated
+    time per executed work-group (plus any armed stall) after running
+    the real kernel."""
+
+    def __init__(self, kernel, device: ThrottledDevice,
+                 local_size: Sequence[int]):
+        self._kernel = kernel
+        self._device = device
+        self._local = tuple(local_size)
+
+    def __getattr__(self, name):
+        return getattr(self._kernel, name)
+
+    def _window(self, buffers, global_size, scalars, jit, lo, hi):
+        """Execute groups ``[lo, hi)`` by windowing the cached full-range
+        launch: bitwise-identical to a real ``group_range`` sub-launch
+        for kernels whose group ``g`` writes its own linearized element
+        span, and free of per-span retracing."""
+        full = self._kernel(buffers, global_size, scalars, jit=jit)
+        L = 1
+        for x in self._local:
+            L *= max(1, int(x))
+        out = {}
+        for nm, arr in buffers.items():
+            base = np.asarray(arr)
+            res = base.reshape(-1).copy()
+            f = np.asarray(full[nm]).reshape(-1)
+            res[lo * L:hi * L] = f[lo * L:hi * L]
+            out[nm] = res.reshape(base.shape)
+        return out
+
+    def __call__(self, buffers, global_size, scalars=None, jit: bool = True,
+                 group_range=None):
+        d = self._device
+        if group_range is not None:
+            lo, hi = int(group_range[0]), int(group_range[1])
+            groups = max(0, hi - lo)
+            if d.window_chunks:
+                out = self._window(buffers, global_size, scalars, jit,
+                                   lo, hi)
+            else:
+                out = self._kernel(buffers, global_size, scalars, jit=jit,
+                                   group_range=group_range)
+        else:
+            out = self._kernel(buffers, global_size, scalars, jit=jit)
+            gsz = tuple(global_size) + (1,) * (3 - len(global_size))
+            lsz = self._local + (1,) * (3 - len(self._local))
+            groups = 1
+            for g, l in zip(gsz, lsz):
+                groups *= max(1, g // max(1, l))
+        delay = d._consume_stall() + groups * d.seconds_per_group
+        if delay > 0:
+            d._sleep(delay)
+        return out
 
 
 class Buffer:

@@ -14,6 +14,17 @@ throughput.  This module fans one launch out over several
 * **steal** mode enqueues many small chunks into a shared deque and lets
   each device's drain command pull the next chunk whenever it finishes
   one — self-scheduling, so a slow device simply takes fewer chunks;
+* **adaptive** mode (EngineCL's HGuided) is the N-device asymmetric
+  scheduler: a per-device :class:`ThroughputModel` (EWMA of groups/sec
+  read off the event profiling counters) drives an
+  :class:`AdaptiveSplitter` that hands out geometrically shrinking
+  chunks proportional to modeled speed, re-weights across launches, and
+  — when the frontier drains — *steals* a straggler's in-flight span so
+  a stalled device never strands work (chunks are pure, so duplicate
+  execution is bitwise-harmless).  Converged weights persist per device
+  class through the :class:`~repro.core.autotune.TuningTable`
+  (``<ir-hash>|coexec=<class-vector>`` keys), so a warm second run
+  starts near the converged split;
 * every chunk launch goes through the device's own
   :class:`~repro.runtime.queue.CommandQueue`, so chunk commands carry
   events with full profiling, and the final merge command *waits on all
@@ -46,6 +57,7 @@ elements.)
 from __future__ import annotations
 
 import itertools
+import math
 import threading
 import time
 import warnings
@@ -54,9 +66,11 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..core.autotune import TuningTable, default_table
 from ..core.errors import InvalidArgError
 from ..core.program import Kernel
 from .bufalloc import ResidencyTracker, Span
+from .events import UserEvent, chunk_counters
 from .platform import Buffer, Device, create_buffer
 from .queue import CommandQueue, Event
 
@@ -230,19 +244,266 @@ class SharedBuffer:
 def split_groups(n_groups: int, shares: Sequence[float]
                  ) -> List[Tuple[int, int]]:
     """Split ``[0, n_groups)`` into contiguous spans proportional to
-    ``shares`` (one span per share; empty spans allowed at the tail)."""
-    total = float(sum(shares))
-    assert total > 0, "shares must sum > 0"
+    ``shares`` (one span per share).
+
+    Shares need not sum to 1 — only the ratios matter.  A zero share is
+    legal and yields an empty span (the caller decides whether that
+    device participates); so is ``n_groups < len(shares)``, where
+    rounding leaves some spans empty.  Degenerate inputs — an empty
+    share list, a negative/NaN/infinite share, a non-numeric share, or a
+    non-positive total — raise a typed
+    :class:`~repro.core.errors.InvalidArgError` (CL_INVALID_VALUE)
+    instead of producing overlapping or nonsensical spans."""
+    try:
+        n = int(n_groups)
+    except (TypeError, ValueError):
+        raise InvalidArgError(
+            f"n_groups must be an integer, got {n_groups!r}") from None
+    if n < 0:
+        raise InvalidArgError(f"n_groups must be >= 0, got {n}")
+    try:
+        vals = [float(s) for s in shares]
+    except (TypeError, ValueError):
+        raise InvalidArgError(
+            f"split shares must be numeric, got {shares!r}") from None
+    if not vals:
+        raise InvalidArgError("split_groups needs at least one share")
+    for s in vals:
+        if not math.isfinite(s) or s < 0:
+            raise InvalidArgError(
+                f"split shares must be finite and >= 0, got {vals}")
+    total = sum(vals)
+    if total <= 0:
+        raise InvalidArgError(f"split shares must sum > 0, got {vals}")
     bounds = [0]
     acc = 0.0
-    for s in shares[:-1]:
+    for s in vals[:-1]:
         acc += s
-        bounds.append(min(n_groups, round(n_groups * acc / total)))
-    bounds.append(n_groups)
+        bounds.append(min(n, round(n * acc / total)))
+    bounds.append(n)
     # enforce monotonicity after rounding
     for i in range(1, len(bounds)):
         bounds[i] = max(bounds[i], bounds[i - 1])
-    return [(bounds[i], bounds[i + 1]) for i in range(len(shares))]
+    return [(bounds[i], bounds[i + 1]) for i in range(len(vals))]
+
+
+def device_class(device) -> str:
+    """The persistence class of a device: devices of one class share one
+    tuning-table weight entry.  Wrappers (e.g.
+    :class:`~repro.runtime.platform.ThrottledDevice`) override
+    ``coexec_class``; plain devices fall back to their driver kind, so
+    e.g. all ``vector`` devices of a platform learn one weight."""
+    cls = getattr(device, "coexec_class", None)
+    if cls:
+        return str(cls)
+    info = getattr(device, "info", None)
+    return str(getattr(info, "driver", device))
+
+
+class ThroughputModel:
+    """Per-device online throughput model: an EWMA of observed execution
+    rate in work-groups per second, fed by the profiling counters
+    stamped on every chunk :class:`~repro.runtime.events.Event`.
+
+    ``weights()`` turns modeled rates into a normalized split: devices
+    with no observations yet are assumed average (equal split when
+    nothing is known), so a cold N-device launch degrades gracefully to
+    the symmetric case.  Degenerate observations — zero/negative
+    duration, non-finite rate, failed events — are dropped, which is
+    what keeps the harness invariant *weights stay normalized and
+    finite* true under arbitrary traces.
+
+    A warm start (:meth:`seed`, fed from the tuning table's persisted
+    per-class weights) holds only until the first real observation of
+    that device, which *replaces* it instead of blending: persisted
+    weights are relative shares, not groups/sec, so mixing the two
+    scales would distort ratios between already-measured and
+    still-seeded devices.
+    """
+
+    def __init__(self, alpha: float = 0.5):
+        if not (0.0 < float(alpha) <= 1.0):
+            raise InvalidArgError(
+                f"EWMA alpha must be in (0, 1], got {alpha}")
+        self.alpha = float(alpha)
+        self._rate: Dict[object, float] = {}
+        self._seeded: set = set()
+        self._lock = threading.Lock()
+
+    def seed(self, device, rate: float) -> bool:
+        """Warm-start a device's modeled rate (any positive scale — only
+        ratios matter).  Ignored when invalid or when the device already
+        has a measured rate.  Returns True when applied."""
+        try:
+            r = float(rate)
+        except (TypeError, ValueError):
+            return False
+        if not math.isfinite(r) or r <= 0:
+            return False
+        with self._lock:
+            if device in self._rate and device not in self._seeded:
+                return False
+            self._rate[device] = r
+            self._seeded.add(device)
+        return True
+
+    def observe(self, device, groups: int, seconds: float) -> bool:
+        """Fold one measured chunk (``groups`` over ``seconds``) into the
+        device's EWMA.  Returns False (and changes nothing) for
+        degenerate samples."""
+        try:
+            g, s = float(groups), float(seconds)
+        except (TypeError, ValueError):
+            return False
+        if not (math.isfinite(g) and math.isfinite(s)) or g <= 0 or s <= 0:
+            return False
+        rate = g / s
+        if not math.isfinite(rate) or rate <= 0:
+            return False
+        with self._lock:
+            prev = self._rate.get(device)
+            if prev is None or device in self._seeded:
+                # first real measurement: replace (see class docstring)
+                self._rate[device] = rate
+                self._seeded.discard(device)
+            else:
+                self._rate[device] = \
+                    self.alpha * rate + (1 - self.alpha) * prev
+        return True
+
+    def observe_event(self, device, groups: int, event: Event) -> bool:
+        """Feed one completed chunk event through the profiling-counter
+        extraction layer (:func:`~repro.runtime.events.chunk_counters`)."""
+        rows = chunk_counters([event])
+        if not rows or not rows[0]["ok"]:
+            return False
+        return self.observe(device, groups, rows[0]["duration_s"])
+
+    def rate(self, device) -> Optional[float]:
+        """Modeled groups/sec for ``device`` (None when never observed
+        or seeded)."""
+        with self._lock:
+            return self._rate.get(device)
+
+    def weights(self, devices: Sequence[object]) -> List[float]:
+        """Normalized relative speeds over ``devices``: finite, positive,
+        summing to 1.  Unobserved devices get the mean known rate."""
+        with self._lock:
+            known = [self._rate[d] for d in devices if d in self._rate]
+            fill = (sum(known) / len(known)) if known else 1.0
+            raw = [self._rate.get(d, fill) for d in devices]
+        total = sum(raw)
+        return [r / total for r in raw]
+
+
+class AdaptiveSplitter:
+    """HGuided self-scheduling chunker over a shared group frontier
+    (EngineCL, Nozal et al. — PAPERS.md).
+
+    Each call to :meth:`next_chunk` hands the asking device the next
+    contiguous span off the frontier, sized
+    ``max(min_chunk, remaining * weight / divisor)`` — large chunks
+    early (low scheduling overhead), geometrically shrinking toward the
+    tail (load balance), proportional to the device's modeled speed
+    (asymmetry).  When the frontier is empty but spans are still in
+    flight, a finished device **steals** a straggler's span and
+    re-executes it: chunks are pure and deterministic, so the duplicate
+    writes identical bytes and the merge stays bitwise-correct, while
+    the launch no longer waits for the straggler.
+
+    Thread-safe: the co-executor calls it from event-completion
+    callbacks on device worker threads.  :meth:`complete` returns True
+    exactly once — when the completed spans first cover the whole range
+    — which is the co-executor's signal to fire the merge gate.
+    """
+
+    def __init__(self, n_groups: int, devices: Sequence[object],
+                 model: ThroughputModel, min_chunk: int = 1,
+                 divisor: float = 2.0):
+        if int(n_groups) < 0:
+            raise InvalidArgError(f"n_groups must be >= 0, got {n_groups}")
+        if not devices:
+            raise InvalidArgError("AdaptiveSplitter needs >= 1 device")
+        if int(min_chunk) < 1:
+            raise InvalidArgError(f"min_chunk must be >= 1, got {min_chunk}")
+        if not math.isfinite(float(divisor)) or float(divisor) < 1.0:
+            raise InvalidArgError(f"divisor must be >= 1, got {divisor}")
+        self.n_groups = int(n_groups)
+        self.devices = list(devices)
+        self.model = model
+        self.min_chunk = int(min_chunk)
+        self.divisor = float(divisor)
+        self._next = 0                       # frontier: first unassigned group
+        self._lock = threading.Lock()
+        # span -> devices currently executing it (dispensed, not completed)
+        self._inflight: Dict[Tuple[int, int], List[object]] = {}
+        self._done: List[Tuple[int, int]] = []   # merged completed spans
+        self._finished = self.n_groups == 0      # empty range: nothing to do
+        self.chunks: Dict[object, int] = {d: 0 for d in self.devices}
+        self.dispensed: Dict[object, int] = {d: 0 for d in self.devices}
+        self.steals: Dict[object, int] = {d: 0 for d in self.devices}
+
+    def next_chunk(self, device) -> Optional[Tuple[int, int]]:
+        """The next span for ``device``: a fresh frontier chunk sized by
+        modeled speed, else a steal of a straggler's in-flight span, else
+        None (nothing useful left for this device)."""
+        with self._lock:
+            rem = self.n_groups - self._next
+            if rem > 0:
+                share = self.model.weights(self.devices)[
+                    self.devices.index(device)]
+                size = max(self.min_chunk,
+                           int(math.ceil(rem * share / self.divisor)))
+                size = min(size, rem)
+                span = (self._next, self._next + size)
+                self._next += size
+                self._inflight.setdefault(span, []).append(device)
+                self.chunks[device] += 1
+                self.dispensed[device] += size
+                return span
+            # frontier drained: steal one straggler span (at most one
+            # duplicate per span — a second executor buys nothing)
+            for span, owners in self._inflight.items():
+                if device not in owners and len(owners) == 1:
+                    owners.append(device)
+                    self.chunks[device] += 1
+                    self.dispensed[device] += span[1] - span[0]
+                    self.steals[device] += 1
+                    return span
+            return None
+
+    def complete(self, device, span: Tuple[int, int]) -> bool:
+        """Record that ``device`` finished ``span``.  Returns True exactly
+        once: when completed spans first cover ``[0, n_groups)``."""
+        with self._lock:
+            self._inflight.pop(span, None)
+            lo, hi = span
+            merged: List[Tuple[int, int]] = []
+            for a, b in self._done + [(int(lo), int(hi))]:
+                merged.append((a, b))
+            merged.sort()
+            out: List[Tuple[int, int]] = []
+            for a, b in merged:
+                if out and a <= out[-1][1]:
+                    out[-1] = (out[-1][0], max(out[-1][1], b))
+                else:
+                    out.append((a, b))
+            self._done = out
+            covered = sum(b - a for a, b in out)
+            if not self._finished and covered >= self.n_groups:
+                self._finished = True
+                return True
+            return False
+
+    @property
+    def finished(self) -> bool:
+        with self._lock:
+            return self._finished
+
+    def pending_spans(self) -> List[Tuple[int, int]]:
+        """Spans dispensed but not yet completed (stragglers)."""
+        with self._lock:
+            return list(self._inflight)
 
 
 class CoExecStats:
@@ -255,6 +516,12 @@ class CoExecStats:
         self.n_groups = 0
         self.chunks_per_device: Dict[str, int] = {}
         self.groups_per_device: Dict[str, int] = {}
+        # chunks a device executed beyond its own assignment: re-executed
+        # straggler spans in "adaptive" mode, chunks pulled from another
+        # device's equal-split territory in "steal" mode (0 in "static")
+        self.steals_per_device: Dict[str, int] = {}
+        # modeled normalized split after the launch ("adaptive" only)
+        self.weights: Dict[str, float] = {}
         self.events: List[Event] = []
         self.transfer_events: List[Event] = []
         self.migrations = 0
@@ -290,6 +557,8 @@ class CoExecStats:
         return {"mode": self.mode, "n_groups": self.n_groups,
                 "chunks_per_device": dict(self.chunks_per_device),
                 "groups_per_device": dict(self.groups_per_device),
+                "steals_per_device": dict(self.steals_per_device),
+                "weights": dict(self.weights),
                 "migrations": self.migrations,
                 "partial_migrations": self.partial_migrations,
                 "bytes_migrated": self.bytes_migrated,
@@ -309,18 +578,43 @@ class CoExecutor:
     chunks_per_device:
         Granularity of the ``steal`` mode: the NDRange is cut into
         ``chunks_per_device * len(devices)`` chunks for self-scheduling.
+    tuning_table:
+        Where ``adaptive`` mode persists converged per-device-class
+        split weights (and warm-starts from them).  Defaults to the
+        process-default :func:`~repro.core.autotune.default_table`;
+        pass an explicit table for isolation.
+    min_chunk_groups / hguided_divisor / ewma_alpha:
+        Adaptive-mode knobs: smallest chunk the splitter dispenses, the
+        HGuided shrink divisor (chunk = remaining * weight / divisor),
+        and the throughput model's EWMA smoothing factor.
     """
 
     def __init__(self, devices: Sequence[Device],
-                 chunks_per_device: int = 4):
-        assert devices, "CoExecutor needs at least one device"
+                 chunks_per_device: int = 4,
+                 tuning_table: Optional[TuningTable] = None,
+                 min_chunk_groups: int = 1,
+                 hguided_divisor: float = 2.0,
+                 ewma_alpha: float = 0.5):
+        if not devices:
+            raise InvalidArgError("CoExecutor needs at least one device")
         self.devices = list(devices)
         self.chunks_per_device = chunks_per_device
+        self.tuning_table = tuning_table
+        self.min_chunk_groups = int(min_chunk_groups)
+        self.hguided_divisor = float(hguided_divisor)
+        # the throughput model outlives launches: that is what
+        # "re-weights across launches" means — launch k+1's first split
+        # uses launch k's converged rates
+        self.throughput = ThroughputModel(alpha=ewma_alpha)
         self.tracker = ResidencyTracker()
         self.queues = {d: CommandQueue(d, out_of_order=True, workers=2)
                        for d in self.devices}
         self._kernels: Dict[tuple, object] = {}
         self.last_stats: Optional[CoExecStats] = None
+
+    def _table(self) -> TuningTable:
+        return self.tuning_table if self.tuning_table is not None \
+            else default_table()
 
     # -- buffers ---------------------------------------------------------------
     def shared_buffer(self, host: np.ndarray, name: str) -> SharedBuffer:
@@ -361,7 +655,8 @@ class CoExecutor:
         buffers, scalars = kernel.launch_args(accept=("host", "shared"))
         kernels = {d: kernel.bind(d, local_size) for d in self.devices}
         return self._co_run(kernels, local_size, global_size, buffers,
-                            scalars, mode, weights)
+                            scalars, mode, weights,
+                            persist_key=kernel.ir_hash)
 
     def run(self, build: Callable, local_size: Sequence[int],
             global_size: Sequence[int],
@@ -390,15 +685,20 @@ class CoExecutor:
                 buffers: Dict[str, Union[np.ndarray, SharedBuffer]],
                 scalars: Optional[Dict[str, object]] = None,
                 mode: str = "static",
-                weights: Optional[Sequence[float]] = None
+                weights: Optional[Sequence[float]] = None,
+                persist_key: Optional[str] = None
                 ) -> Dict[str, np.ndarray]:
         """Split/merge engine behind :meth:`launch` (and the deprecated
         :meth:`run`): ``kernels`` maps each device to its specialized
         launchable.  Returns the merged output arrays (keyed like
         ``buffers``).  Plain ndarrays are wrapped in throwaway
         :class:`SharedBuffer`\\ s; SharedBuffers keep residency across
-        calls.  ``mode`` is ``"static"`` (one weighted span per device)
-        or ``"steal"`` (shared chunk deque, self-scheduled)."""
+        calls.  ``mode`` is ``"static"`` (one weighted span per device),
+        ``"steal"`` (shared chunk deque, self-scheduled) or
+        ``"adaptive"`` (throughput-modeled HGuided splitter with
+        straggler stealing).  ``persist_key`` is the kernel's IR hash;
+        when set, adaptive mode warm-starts from and records per-class
+        weights into the tuning table."""
         t0 = time.perf_counter()
         lsz = tuple(local_size) + (1,) * (3 - len(local_size))
         gsz = tuple(global_size) + (1,) * (3 - len(global_size))
@@ -449,13 +749,15 @@ class CoExecutor:
         if mode == "static":
             shares = list(weights) if weights is not None \
                 else [1.0] * len(self.devices)
-            assert len(shares) == len(self.devices), \
-                "one weight per device"
+            if len(shares) != len(self.devices):
+                raise InvalidArgError(
+                    f"static co-execution needs one weight per device: "
+                    f"{len(shares)} weights for {len(self.devices)} devices")
             spans = split_groups(n_groups, shares)
             plan = [(dev, (lo, hi)) for dev, (lo, hi)
                     in zip(self.devices, spans) if hi > lo]
             active = [dev for dev, _ in plan]
-        elif mode == "steal":
+        elif mode in ("steal", "adaptive"):
             plan = None
             active = list(self.devices)
         else:
@@ -481,6 +783,10 @@ class CoExecutor:
 
         # -- enqueue chunk commands --------------------------------------------
         chunk_events: List[Event] = []
+        elock = threading.Lock()
+        splitter: Optional[AdaptiveSplitter] = None
+        merge_gate: Optional[UserEvent] = None
+        co_key: Optional[str] = None
         if mode == "static":
             for dev, (lo, hi) in plan:
                 q = self.queues[dev]
@@ -490,12 +796,22 @@ class CoExecutor:
                     name=f"co-chunk:{dev.info.name}:{lo}-{hi}",
                     kind="kernel")
                 chunk_events.append(ev)
-        else:  # steal
+        elif mode == "steal":
             n_chunks = max(len(self.devices),
                            self.chunks_per_device * len(self.devices))
             chunk = -(-n_groups // n_chunks)  # ceil; whole work-groups
             todo = deque((lo, min(lo + chunk, n_groups))
                          for lo in range(0, n_groups, max(1, chunk)))
+            # equal-split "territories" for steal accounting: a chunk a
+            # device pulls from another device's territory is a steal
+            own = split_groups(n_groups, [1.0] * len(self.devices)) \
+                if n_groups else []
+
+            def owner_of(lo: int) -> Optional[Device]:
+                for d, (a, b) in zip(self.devices, own):
+                    if a <= lo < b:
+                        return d
+                return None
 
             def drain(device: Device) -> None:
                 while True:
@@ -504,6 +820,11 @@ class CoExecutor:
                     except IndexError:
                         return
                     run_chunk(device, lo, hi)
+                    if owner_of(lo) is not device:
+                        with plock:
+                            nm = device.info.name
+                            stats.steals_per_device[nm] = \
+                                stats.steals_per_device.get(nm, 0) + 1
 
             for dev in self.devices:
                 q = self.queues[dev]
@@ -513,19 +834,78 @@ class CoExecutor:
                     name=f"co-drain:{dev.info.name}",
                     kind="kernel")
                 chunk_events.append(ev)
+        else:  # adaptive: event-driven HGuided dispatch
+            table = self._table()
+            classes = [device_class(d) for d in self.devices]
+            if persist_key:
+                co_key = TuningTable.make_coexec_key(persist_key, classes)
+                ent = table.get_coexec(co_key)
+                if ent:
+                    for d, cls in zip(self.devices, classes):
+                        w = ent["weights"].get(cls)
+                        if w is not None:
+                            self.throughput.seed(d, w)
+            splitter = AdaptiveSplitter(
+                n_groups, self.devices, self.throughput,
+                min_chunk=self.min_chunk_groups,
+                divisor=self.hguided_divisor)
+            # the merge waits on this gate, not on the chunk events: it
+            # fires when completed spans first cover [0, n_groups), which
+            # may be *before* a stalled straggler finishes its (stolen,
+            # already re-executed) span
+            merge_gate = UserEvent("co-adaptive-done")
+
+            def on_chunk_done(ev: Event, device: Device,
+                              span: Tuple[int, int]) -> None:
+                if ev.failed:
+                    merge_gate.fail(ev.error)  # merge sees DependencyError
+                    return
+                self.throughput.observe_event(device, span[1] - span[0], ev)
+                if splitter.complete(device, span):
+                    merge_gate.complete()
+                elif not merge_gate.done:
+                    dispatch(device)
+
+            def dispatch(device: Device) -> None:
+                span = splitter.next_chunk(device)
+                if span is None:
+                    return
+                lo, hi = span
+                q = self.queues[device]
+                ev = q.enqueue_native(
+                    lambda d=device, a=lo, b=hi: run_chunk(d, a, b),
+                    wait_for=transfer_events[device],
+                    name=f"co-adaptive:{device.info.name}:{lo}-{hi}",
+                    kind="kernel")
+                with elock:
+                    chunk_events.append(ev)
+                ev.add_callback(
+                    lambda e, d=device, s=span: on_chunk_done(e, d, s))
+                # callbacks enqueue after the launch-time flush below, so
+                # every dynamic enqueue must arm its command itself
+                q.flush()
+
+            if splitter.finished:        # n_groups == 0: nothing to run
+                merge_gate.complete()
+            for dev in active:
+                dispatch(dev)
 
         # the merge waits on every chunk event — across queues — then
         # folds each chunk's written elements into the canonical copy
         merged: Dict[str, np.ndarray] = {}
 
         def merge() -> None:
+            # snapshot: in adaptive mode a stalled straggler (whose span
+            # was stolen and already merged-in) may still be appending
+            with plock:
+                parts = list(partials)
             for nm, sb in shared.items():
                 ref = base[nm]
                 acc = ref.copy()
                 itemsize = acc.dtype.itemsize
                 written: Dict[Device, List] = {}
                 exact = True
-                for device, part in partials:
+                for device, part in parts:
                     sub = np.asarray(part[nm])
                     mask = _changed_mask(sub, ref)
                     if mask.any():
@@ -548,19 +928,51 @@ class CoExecutor:
                         sb.commit(acc)
 
         q0 = self.queues[self.devices[0]]
-        merge_ev = q0.enqueue_native(merge, wait_for=chunk_events,
+        merge_deps = [merge_gate] if merge_gate is not None else chunk_events
+        merge_ev = q0.enqueue_native(merge, wait_for=merge_deps,
                                      name="co-merge")
         for q in self.queues.values():
             q.flush()
         try:
             merge_ev.wait()
         finally:
-            for sb in throwaway:  # one-shot wrappers: free device chunks
-                sb.release()
+            with elock:
+                evs = list(chunk_events)
+            stragglers = [e for e in evs if not e.done]
+            if throwaway and stragglers:
+                # a stolen straggler is still executing against the
+                # throwaway device buffers: release once it lands, off
+                # the launch's critical path (its result is already
+                # merged — purity makes the duplicate bitwise-identical)
+                def release_when_idle(evs=evs):
+                    for e in evs:
+                        e._terminal.wait(60.0)
+                    for sb in throwaway:
+                        sb.release()
+                q0.enqueue_native(release_when_idle, name="co-release")
+                q0.flush()
+            else:
+                for sb in throwaway:  # one-shot wrappers: free chunks
+                    sb.release()
 
+        if splitter is not None:
+            for d in self.devices:
+                nm = d.info.name
+                stats.steals_per_device[nm] = splitter.steals[d]
+            stats.weights = {
+                d.info.name: w for d, w in
+                zip(self.devices, self.throughput.weights(self.devices))}
+            if co_key is not None:
+                # persist per *class*: same-class devices share (average)
+                cls_w: Dict[str, List[float]] = {}
+                for d in self.devices:
+                    cls_w.setdefault(device_class(d), []).append(
+                        stats.weights[d.info.name])
+                self._table().record_coexec(
+                    co_key, {c: sum(v) / len(v) for c, v in cls_w.items()})
         stats.events = chunk_events + [merge_ev]
-        stats.transfer_events = [e for evs in transfer_events.values()
-                                 for e in evs]
+        stats.transfer_events = [e for evs_ in transfer_events.values()
+                                 for e in evs_]
         stats.migrations = self.tracker.migrations - mig0
         stats.partial_migrations = self.tracker.partial_migrations - pmig0
         stats.bytes_migrated = self.tracker.bytes_migrated - byte0

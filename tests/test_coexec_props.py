@@ -1,0 +1,623 @@
+"""Stateful property-test harness for the N-device adaptive scheduler.
+
+The adaptive co-execution path (docs/runtime.md §Scheduler) composes a
+per-device :class:`~repro.runtime.scheduler.ThroughputModel` (EWMA of
+groups/sec off the event profiling counters) with an HGuided
+:class:`~repro.runtime.scheduler.AdaptiveSplitter` (geometrically
+shrinking chunks proportional to modeled speed, straggler stealing when
+the frontier drains).  This harness locks down its invariants:
+
+* **exactly-once assignment** — the fresh (non-stolen) spans the
+  splitter dispenses partition ``[0, n_groups)`` contiguously, with no
+  gap and no overlap, for every device count / speed vector / trace;
+* **coverage** — the launch finishes exactly when completed spans first
+  cover the range, and a span is duplicated only by an explicit steal;
+* **weights stay normalized and finite** — under arbitrary observation
+  traces, including zero/negative/NaN durations and mid-run speed
+  changes;
+* **a stalled device never strands work** — tail chunks get stolen, so
+  completion time is bounded by the healthy devices, not the stall;
+* **merge is bitwise-identical to single-device** — for real launches
+  over lopsided simulated platforms, every interleaving.
+
+The scheduling logic is simulated in *virtual time* by
+:class:`SplitDriver` (no real devices, threads, or sleeps), which needs
+no hypothesis — seeded random-walk tests drive it on every install, and
+a hypothesis ``RuleBasedStateMachine`` (under the ``ci``/``dev``
+profiles from tests/conftest.py) adds minimized counterexamples.  Real
+:class:`~repro.runtime.scheduler.CoExecutor` launches over
+:class:`~repro.runtime.platform.ThrottledDevice` platforms then pin the
+end-to-end behaviour: bitwise identity, one plan build across N
+heterogeneous devices, stats consistency with the event timeline, and
+warm-table convergence within two launches (acceptance criteria).
+"""
+
+import math
+import random
+
+import numpy as np
+import pytest
+
+from repro.core import KernelBuilder
+from repro.core.autotune import TuningTable
+from repro.runtime import (AdaptiveSplitter, Context, DeviceInfo,
+                           InvalidArgError, ThrottledDevice,
+                           ThroughputModel, chunk_counters, device_class)
+
+try:
+    from hypothesis import given, strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:               # plain tests below still run
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# SplitDriver: virtual-time simulation of one adaptive launch
+# ---------------------------------------------------------------------------
+
+class SplitDriver:
+    """Simulates the co-executor's adaptive dispatch loop in virtual
+    time: symbolic devices with true speeds (groups/sec), one in-flight
+    chunk per device, completion-ordered event callbacks, optional
+    one-shot stalls and mid-run speed changes.  Mirrors
+    ``CoExecutor._co_run``'s adaptive mode exactly — dispatch one chunk
+    per device, then on each (virtual) completion observe throughput and
+    dispatch the next chunk for that device until completed spans cover
+    the range — so its invariants are the scheduler's invariants."""
+
+    def __init__(self, speeds, n_groups, min_chunk=1, divisor=2.0,
+                 alpha=0.5, seed_weights=None):
+        self.devices = [f"dev{i}" for i in range(len(speeds))]
+        self.speed = dict(zip(self.devices, [float(s) for s in speeds]))
+        self.model = ThroughputModel(alpha=alpha)
+        if seed_weights is not None:
+            for d, w in zip(self.devices, seed_weights):
+                self.model.seed(d, w)
+        self.split = AdaptiveSplitter(n_groups, self.devices, self.model,
+                                      min_chunk=min_chunk, divisor=divisor)
+        self.n_groups = int(n_groups)
+        self.stalls = {d: 0.0 for d in self.devices}
+        self.fresh_spans = []        # (device, span) in dispense order
+        self.steal_spans = []        # (device, span)
+        self.completions = []        # (device, span, t_end)
+        self.finished_at = None
+        self.weight_checks = 0
+
+    def add_stall(self, device, seconds):
+        self.stalls[device] += float(seconds)
+
+    def set_speed(self, device, speed):
+        self.speed[device] = float(speed)
+
+    def _check_weights(self):
+        w = self.model.weights(self.devices)
+        assert len(w) == len(self.devices)
+        assert all(math.isfinite(x) and x > 0 for x in w), \
+            f"weights not finite/positive: {w}"
+        assert abs(sum(w) - 1.0) < 1e-9, f"weights not normalized: {w}"
+        self.weight_checks += 1
+
+    def _dispatch(self, device, now, active):
+        steals_before = self.split.steals[device]
+        span = self.split.next_chunk(device)
+        if span is None:
+            return
+        if self.split.steals[device] > steals_before:
+            self.steal_spans.append((device, span))
+        else:
+            self.fresh_spans.append((device, span))
+        stall = self.stalls[device]
+        self.stalls[device] = 0.0
+        dur = stall + (span[1] - span[0]) / self.speed[device]
+        active[device] = (span, now, now + dur)
+
+    def run(self, max_events=100000):
+        active = {}
+        for d in self.devices:
+            self._dispatch(d, 0.0, active)
+        events = 0
+        while active:
+            events += 1
+            assert events < max_events, "scheduler failed to terminate"
+            d = min(active, key=lambda k: active[k][2])
+            span, t0, t1 = active.pop(d)
+            # the real path feeds the event's RUNNING->end window, which
+            # includes any stall charged inside the chunk
+            self.model.observe(d, span[1] - span[0], t1 - t0)
+            self._check_weights()
+            finished = self.split.complete(d, span)
+            self.completions.append((d, span, t1))
+            if finished:
+                self.finished_at = t1
+            if self.finished_at is None:
+                self._dispatch(d, t1, active)
+        self.check_invariants()
+        return self
+
+    def check_invariants(self):
+        # fresh spans partition [0, n_groups): contiguous, no overlap
+        spans = sorted(s for _, s in self.fresh_spans)
+        if self.n_groups == 0:
+            assert spans == []
+            assert self.split.finished
+            return
+        assert spans[0][0] == 0
+        assert spans[-1][1] == self.n_groups
+        for (_, e0), (s1, _) in zip(spans, spans[1:]):
+            assert e0 == s1, f"gap or overlap in fresh spans: {spans}"
+        assert all(b > a for a, b in spans), "empty span dispensed"
+        # the launch finished, and exactly when coverage completed
+        assert self.finished_at is not None
+        assert self.split.finished
+        # duplicates only via explicit steals, at most one per span
+        fresh = [s for _, s in self.fresh_spans]
+        for d, s in self.steal_spans:
+            assert s in fresh, "stole a span that was never dispensed"
+            owner = [dd for dd, ss in self.fresh_spans if ss == s]
+            assert owner and owner[0] != d, "device stole its own span"
+        assert len(set(self.steal_spans)) == len(self.steal_spans)
+        # splitter accounting matches the trace
+        for d in self.devices:
+            mine = [s for dd, s in self.fresh_spans + self.steal_spans
+                    if dd == d]
+            assert self.split.chunks[d] == len(mine)
+            assert self.split.dispensed[d] == \
+                sum(b - a for a, b in mine)
+            assert self.split.steals[d] == \
+                len([1 for dd, _ in self.steal_spans if dd == d])
+        self._check_weights()
+
+
+def _rand_driver(rng, **overrides):
+    n_dev = overrides.pop("n_dev", rng.randint(1, 6))
+    speeds = overrides.pop(
+        "speeds", [10 ** rng.uniform(-1.5, 1.5) for _ in range(n_dev)])
+    kw = dict(n_groups=rng.randint(0, 200),
+              min_chunk=rng.randint(1, 8),
+              divisor=rng.uniform(1.0, 4.0),
+              alpha=rng.uniform(0.1, 1.0))
+    kw.update(overrides)
+    return SplitDriver(speeds, **kw)
+
+
+# ---------------------------------------------------------------------------
+# seeded random walks (run on every install, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+def test_split_driver_random_walks():
+    """Random device counts, speed vectors, chunk knobs, stalls, and
+    mid-run speed changes: every trace upholds the invariants."""
+    rng = random.Random(0xC0E3EC)
+    for _ in range(150):
+        drv = _rand_driver(rng)
+        # random one-shot stalls and mid-run speed changes
+        for d in drv.devices:
+            if rng.random() < 0.3:
+                drv.add_stall(d, rng.uniform(0.0, 50.0))
+        if rng.random() < 0.5 and drv.devices:
+            drv.set_speed(rng.choice(drv.devices),
+                          10 ** rng.uniform(-1.5, 1.5))
+        drv.run()
+
+
+def test_stalled_device_never_strands_work():
+    """One device stalls for ~forever; the others finish the whole range
+    (tail chunks stolen) in time bounded by their own speed, not by the
+    stall."""
+    for seed in range(5):
+        rng = random.Random(seed)
+        stall = 1e6
+        drv = _rand_driver(rng, n_dev=3, speeds=[100.0, 100.0, 50.0],
+                           n_groups=rng.randint(30, 120))
+        drv.add_stall(drv.devices[2], stall)
+        drv.run()
+        # two healthy devices at 100 groups/s: generous bound, still
+        # orders of magnitude under the stall
+        assert drv.finished_at < drv.n_groups / 100.0 + 1.0
+        assert drv.finished_at < stall / 100
+        stolen = [s for d, s in drv.steal_spans]
+        assert stolen, "stalled device's in-flight span was never stolen"
+
+
+def test_weights_converge_to_speed_ratio():
+    """Stationary speeds: after one launch the modeled split tracks the
+    true speed ratio (the HGuided premise)."""
+    drv = SplitDriver([100.0, 100.0, 20.0], n_groups=400, min_chunk=2)
+    drv.run()
+    w = drv.model.weights(drv.devices)
+    ideal = [100 / 220, 100 / 220, 20 / 220]
+    for got, want in zip(w, ideal):
+        assert abs(got - want) < 0.12, (w, ideal)
+
+
+def test_throughput_model_degenerate_observations():
+    """Zero/negative/NaN/inf durations and group counts never corrupt
+    the model: rejected samples change nothing, weights stay a finite
+    distribution."""
+    m = ThroughputModel(alpha=0.5)
+    devs = ["a", "b"]
+    assert m.observe("a", 10, 0.1)
+    baseline = m.weights(devs)
+    for groups, seconds in [(0, 1.0), (-5, 1.0), (10, 0.0), (10, -1.0),
+                            (float("nan"), 1.0), (10, float("nan")),
+                            (10, float("inf")), (None, 1.0), (10, "x")]:
+        assert not m.observe("a", groups, seconds)
+        assert not m.observe("b", groups, seconds)
+    assert m.weights(devs) == baseline
+    assert m.rate("b") is None
+    # invalid seeds are rejected too
+    for bad in (0.0, -1.0, float("nan"), float("inf"), None, "x"):
+        assert not m.seed("b", bad)
+    w = m.weights(devs)
+    assert abs(sum(w) - 1.0) < 1e-9 and all(x > 0 for x in w)
+    with pytest.raises(InvalidArgError):
+        ThroughputModel(alpha=0.0)
+    with pytest.raises(InvalidArgError):
+        ThroughputModel(alpha=1.5)
+
+
+def test_throughput_model_seed_replaced_by_first_measurement():
+    """A warm-start seed (a relative share, arbitrary scale) must be
+    *replaced* by the first real groups/sec measurement, not blended
+    across scales."""
+    m = ThroughputModel(alpha=0.5)
+    assert m.seed("a", 0.9)
+    assert m.seed("b", 0.1)
+    assert m.weights(["a", "b"])[0] == pytest.approx(0.9)
+    m.observe("a", 100, 1.0)           # 100 g/s, replaces the 0.9 seed
+    assert m.rate("a") == pytest.approx(100.0)
+    m.observe("a", 200, 1.0)           # now EWMA: 0.5*200 + 0.5*100
+    assert m.rate("a") == pytest.approx(150.0)
+    # a seed never overwrites a measured rate
+    assert not m.seed("a", 5.0)
+    assert m.rate("a") == pytest.approx(150.0)
+
+
+def test_adaptive_splitter_basics():
+    m = ThroughputModel()
+    s = AdaptiveSplitter(10, ["a", "b"], m, min_chunk=1, divisor=2.0)
+    # equal cold weights: chunk = ceil(remaining * 0.5 / 2)
+    assert s.next_chunk("a") == (0, 3)       # ceil(10 * .5 / 2)
+    assert s.next_chunk("b") == (3, 5)       # ceil(7 * .5 / 2)
+    # drain the rest of the frontier via a: geometric shrink to min_chunk
+    spans = [(0, 3), (3, 5)]
+    while spans[-1][1] < 10:                 # stop at coverage: no steal
+        spans.append(s.next_chunk("a"))
+    # fresh spans partition [0, 10) contiguously
+    assert spans[-1][1] == 10
+    assert all(e0 == s1 for (_, e0), (s1, _) in zip(spans, spans[1:]))
+    # completion fires True exactly once, on first full coverage
+    fired = [sp for sp in spans if s.complete("a", sp)]
+    assert fired == [spans[-1]] and s.finished
+    # accounting: every dispensed group attributed, no steals yet
+    assert s.dispensed["a"] + s.dispensed["b"] == 10
+    assert s.steals == {"a": 0, "b": 0}
+    # empty range is born finished
+    assert AdaptiveSplitter(0, ["a"], m).finished
+    with pytest.raises(InvalidArgError):
+        AdaptiveSplitter(4, [], m)
+    with pytest.raises(InvalidArgError):
+        AdaptiveSplitter(4, ["a"], m, min_chunk=0)
+    with pytest.raises(InvalidArgError):
+        AdaptiveSplitter(4, ["a"], m, divisor=0.5)
+
+
+def test_adaptive_splitter_steals_only_when_frontier_empty():
+    m = ThroughputModel()
+    s = AdaptiveSplitter(8, ["a", "b"], m, min_chunk=1, divisor=2.0)
+    first = s.next_chunk("a")
+    assert s.steals["a"] == 0 and s.steals["b"] == 0
+    # drain the frontier with b
+    while True:
+        sp = s.next_chunk("b")
+        if sp is None or s.steals["b"] > 0:
+            break
+    # b's last grab was a steal of a's in-flight span (frontier empty)
+    assert s.steals["b"] == 1 and sp == first
+    # no second duplicate of the same span
+    assert s.next_chunk("b") is None
+    # completing everything flips finished exactly once
+    fired = 0
+    for d, span in [("a", first)] + \
+            [("b", x) for x in list(s.pending_spans())]:
+        if s.complete(d, span):
+            fired += 1
+    assert s.finished and fired == 1
+
+
+# ---------------------------------------------------------------------------
+# real launches: lopsided simulated platforms (ThrottledDevice)
+# ---------------------------------------------------------------------------
+
+def build_scale():
+    b = KernelBuilder("scale")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    y[g] = x[g] * 2.0 + g
+    return b.finish()
+
+
+def make_sim_device(i, seconds_per_group, cls):
+    return ThrottledDevice(DeviceInfo(
+        name=f"sim-{cls}-{i}", driver="vector",
+        global_mem_size=1 << 30, local_mem_size=1 << 20,
+        max_work_group_size=1024, compute_units=1),
+        seconds_per_group=seconds_per_group, coexec_class=cls)
+
+
+# simulated per-group costs must dominate the ~1ms per-chunk scheduling
+# overhead, or the observed speed ratio compresses under host load and
+# convergence assertions get noisy (same constants as bench_coexec)
+FAST_S = 0.001
+SLOW_S = 0.008
+
+
+def lopsided_platform(fast_s=FAST_S, slow_s=SLOW_S):
+    return [make_sim_device(0, fast_s, "fast"),
+            make_sim_device(1, fast_s, "fast"),
+            make_sim_device(2, slow_s, "slow")]
+
+
+N = 96 * 16
+LSZ = 16
+
+
+def _kernel(ctx):
+    prog = ctx.create_program(build_scale).build()
+    k = prog.create_kernel("scale")
+    k.set_args(x=np.arange(N, dtype=np.float32),
+               y=np.zeros(N, np.float32))
+    return k
+
+
+def test_adaptive_bitwise_identical_every_interleaving():
+    """Adaptive N-device launches — cold, converged, stalled (with
+    steals), re-weighted — are all bitwise-identical to a single-device
+    launch of the same kernel."""
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = _kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=TuningTable())
+
+    ref_dev = make_sim_device(9, 0.0, "ref")
+    ref_ctx = Context(devices=[ref_dev])
+    ref = ref_ctx.create_co_executor(
+        [ref_dev], tuning_table=TuningTable()).launch(
+            _kernel(ref_ctx), (N,), (LSZ,), mode="static")
+
+    rng = random.Random(7)
+    for i in range(6):
+        if rng.random() < 0.5:
+            devs[2].stall(rng.uniform(0.01, 0.08))
+        out = co.launch(k, (N,), (LSZ,), mode="adaptive")
+        assert out["y"].tobytes() == ref["y"].tobytes(), \
+            f"launch {i} diverged bitwise from single-device"
+        st = co.last_stats
+        assert st.mode == "adaptive" and st.n_groups == N // LSZ
+        w = st.weights
+        assert abs(sum(w.values()) - 1.0) < 1e-9
+        assert all(math.isfinite(x) and x > 0 for x in w.values())
+    co.finish()
+
+
+def test_one_plan_build_across_n_heterogeneous_devices():
+    """N heterogeneous devices specialize one kernel through the
+    context's shared plan tier: region formation runs once, not once
+    per device."""
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = _kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=TuningTable())
+    co.launch(k, (N,), (LSZ,), mode="adaptive")
+    assert ctx.cache.stats.plan_builds == 1, \
+        "shared plan tier must build the work-group plan exactly once"
+    co.finish()
+
+
+def test_coexec_stats_consistent_with_event_timeline():
+    """Satellite: CoExecStats cross-checked against the event profile of
+    a seeded 3-device adaptive run — per-device chunk counts equal the
+    per-device kernel events, steal counts equal duplicated spans, and
+    migration overlap is bounded by the transfer/kernel windows."""
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = _kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=TuningTable())
+    devs[2].stall(0.05)                    # force at least one steal
+    co.launch(k, (N,), (LSZ,), mode="adaptive")
+    st = co.last_stats
+    co.finish()                            # drain stragglers first
+
+    rows = chunk_counters(st.events, kind="kernel")
+    assert all(r["ok"] for r in rows)
+    # event names carry device + span: co-adaptive:<device>:<lo>-<hi>
+    by_dev, spans = {}, {}
+    for r in rows:
+        _, dev_name, span = str(r["name"]).split(":")
+        lo, hi = map(int, span.split("-"))
+        by_dev[dev_name] = by_dev.get(dev_name, 0) + 1
+        spans.setdefault((lo, hi), []).append(dev_name)
+    # chunk counts: every executed chunk event is counted, per device
+    assert by_dev == st.chunks_per_device
+    # groups: per device, the sum of its executed span lengths
+    for name, count in st.groups_per_device.items():
+        got = sum(hi - lo for (lo, hi), ds in spans.items()
+                  for d in ds if d == name)
+        assert got == count, (name, got, count)
+    # spans executed by >1 device are exactly the steals
+    dup = sum(len(ds) - 1 for ds in spans.values())
+    assert dup == sum(st.steals_per_device.values())
+    assert dup >= 1, "the stalled device's span should have been stolen"
+    # every group covered: union of executed spans is [0, n_groups)
+    merged = []
+    for lo, hi in sorted(spans):
+        if merged and lo <= merged[-1][1]:
+            merged[-1] = (merged[-1][0], max(merged[-1][1], hi))
+        else:
+            merged.append((lo, hi))
+    assert merged == [(0, st.n_groups)]
+    # migration overlap: non-negative, bounded by total transfer time
+    overlap = st.migration_overlap_s()
+    total_transfer = sum(r["duration_s"] for r in
+                         chunk_counters(st.transfer_events))
+    assert 0.0 <= overlap <= total_transfer + 1e-9
+    assert st.migrations == 6, "2 buffers x 3 devices, copied once each"
+
+
+def test_warm_tuning_table_converges_within_two_launches():
+    """Acceptance: a fresh executor warm-started from a persisted
+    TuningTable reaches the converged lopsided split within 2 launches
+    — its very first split already avoids overloading the slow device."""
+    table = TuningTable()
+    devs = lopsided_platform()
+    ctx = Context(devices=devs)
+    k = _kernel(ctx)
+    co = ctx.create_co_executor(devs, tuning_table=table)
+    # one untimed static launch warms each device's jit trace: the
+    # one-shot trace cost otherwise lands inside the first chunk's event
+    # window and poisons the first throughput observation (which
+    # *replaces* the seed) — compile cost is not execution speed
+    co.launch(k, (N,), (LSZ,), mode="static")
+    for _ in range(4):                      # converge + persist
+        co.launch(k, (N,), (LSZ,), mode="adaptive")
+    co.finish()
+    key = TuningTable.make_coexec_key(
+        k.ir_hash, [device_class(d) for d in devs])
+    ent = table.get_coexec(key)
+    assert ent is not None and ent["launches"] == 4
+    slow_share = ent["weights"]["slow"]
+    assert slow_share < 0.25, f"persisted slow share too high: {ent}"
+
+    # fresh executor, same table: warm from launch one
+    devs2 = lopsided_platform()
+    ctx2 = Context(devices=devs2)
+    k2 = _kernel(ctx2)
+    co2 = ctx2.create_co_executor(devs2, tuning_table=table)
+    co2.launch(k2, (N,), (LSZ,), mode="static")    # jit-trace warm-up
+    for launch in range(2):
+        co2.launch(k2, (N,), (LSZ,), mode="adaptive")
+        st = co2.last_stats
+    co2.finish()
+    slow_name = devs2[2].info.name
+    # converged: slow's modeled share is lopsided (true speed ratio is
+    # ~0.06), nowhere near the cold-start equal third
+    assert st.weights[slow_name] < 0.2, \
+        f"warm run failed to converge within 2 launches: {st.weights}"
+    # and the slow device executed far less than an equal share
+    slow_groups = st.groups_per_device.get(slow_name, 0)
+    assert slow_groups < st.n_groups / 2
+
+
+# ---------------------------------------------------------------------------
+# hypothesis layer: minimized traces + stateful machine
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    @given(st.data())
+    def test_split_driver_hypothesis_traces(data):
+        n_dev = data.draw(st.integers(1, 5), label="n_dev")
+        speeds = data.draw(st.lists(
+            st.floats(0.05, 500.0, allow_nan=False, allow_infinity=False),
+            min_size=n_dev, max_size=n_dev), label="speeds")
+        n_groups = data.draw(st.integers(0, 150), label="n_groups")
+        drv = SplitDriver(
+            speeds, n_groups,
+            min_chunk=data.draw(st.integers(1, 6), label="min_chunk"),
+            divisor=data.draw(st.floats(1.0, 4.0), label="divisor"),
+            alpha=data.draw(st.floats(0.05, 1.0), label="alpha"))
+        for d in drv.devices:
+            if data.draw(st.booleans(), label=f"stall?{d}"):
+                drv.add_stall(d, data.draw(
+                    st.floats(0.0, 100.0), label=f"stall{d}"))
+        drv.run()
+
+    class CoexecMachine(RuleBasedStateMachine):
+        """Drives the splitter + model with an adversarial interleaving
+        of dispenses, completions (any order), steals, and arbitrary —
+        including degenerate — observations, checking the dispense
+        partition, steal discipline, and weight normalization after
+        every step."""
+
+        @initialize(n_groups=st.integers(0, 120),
+                    n_dev=st.integers(1, 4),
+                    min_chunk=st.integers(1, 5))
+        def setup(self, n_groups, n_dev, min_chunk):
+            self.devices = [f"d{i}" for i in range(n_dev)]
+            self.model = ThroughputModel(alpha=0.5)
+            self.split = AdaptiveSplitter(
+                n_groups, self.devices, self.model, min_chunk=min_chunk)
+            self.n_groups = n_groups
+            self.fresh = []
+            self.stolen = []
+            self.inflight = []
+
+        def _dev(self, i):
+            return self.devices[i % len(self.devices)]
+
+        @rule(i=st.integers(0, 3))
+        def dispense(self, i):
+            d = self._dev(i)
+            before = self.split.steals[d]
+            span = self.split.next_chunk(d)
+            if span is None:
+                return
+            if self.split.steals[d] > before:
+                assert (d, span) not in self.stolen
+                self.stolen.append((d, span))
+                # steals only happen with the frontier drained
+                assert sum(b - a for _, (a, b) in self.fresh) \
+                    == self.n_groups
+            else:
+                self.fresh.append((d, span))
+            self.inflight.append((d, span))
+
+        @rule(i=st.integers(0, 3), j=st.integers(0, 200))
+        def complete_one(self, i, j):
+            if not self.inflight:
+                return
+            d, span = self.inflight.pop(j % len(self.inflight))
+            was_finished = self.split.finished
+            fired = self.split.complete(d, span)
+            if fired:
+                assert not was_finished, "finished fired twice"
+
+        @rule(i=st.integers(0, 3),
+              groups=st.one_of(st.integers(-5, 50),
+                               st.floats(allow_nan=True)),
+              seconds=st.one_of(st.floats(allow_nan=True),
+                                st.floats(0.0001, 10.0)))
+        def observe(self, i, groups, seconds):
+            self.model.observe(self._dev(i), groups, seconds)
+
+        @invariant()
+        def weights_normalized_finite(self):
+            if not hasattr(self, "model"):
+                return
+            w = self.model.weights(self.devices)
+            assert all(math.isfinite(x) and x > 0 for x in w)
+            assert abs(sum(w) - 1.0) < 1e-9
+
+        @invariant()
+        def fresh_spans_prefix_partition(self):
+            if not hasattr(self, "split"):
+                return
+            spans = sorted(s for _, s in self.fresh)
+            covered = 0
+            for a, b in spans:
+                assert a == covered, f"gap/overlap: {spans}"
+                assert b > a
+                covered = b
+            assert covered <= self.n_groups
+
+        @invariant()
+        def finished_only_after_full_dispensation(self):
+            if not hasattr(self, "split"):
+                return
+            if self.split.finished and self.n_groups:
+                dispensed = {s for _, s in self.fresh}
+                assert sum(b - a for a, b in dispensed) >= self.n_groups
+
+    TestCoexecMachine = CoexecMachine.TestCase

@@ -252,6 +252,47 @@ def test_split_groups_proportional():
         assert e0 == s1
 
 
+def test_split_groups_rejects_degenerate_shares():
+    """Zero-sum / negative / NaN / infinite / empty / non-numeric shares
+    must raise a typed InvalidArgError, never emit overlapping spans."""
+    from repro.runtime import InvalidArgError
+    for bad in ([], [0.0, 0.0], [-1.0, 2.0], [float("nan"), 1.0],
+                [float("inf"), 1.0], ["x", 1.0], [1.0, None]):
+        with pytest.raises(InvalidArgError):
+            split_groups(8, bad)
+    with pytest.raises(InvalidArgError):
+        split_groups(-1, [1.0])
+    with pytest.raises(InvalidArgError):
+        split_groups("eight", [1.0])
+
+
+def test_split_groups_rounding_boundaries():
+    """Shares that don't sum to 1, zero shares, fewer groups than
+    devices, and 1-group splits: spans always partition [0, n)."""
+    # shares need not sum to 1 — only ratios matter
+    assert split_groups(8, [0.2, 0.2]) == split_groups(8, [1, 1])
+    assert split_groups(10, [0.75]) == [(0, 10)]
+    # a zero share yields an empty span, never an overlap
+    assert split_groups(8, [0.0, 1.0]) == [(0, 0), (0, 8)]
+    assert split_groups(8, [1.0, 0.0]) == [(0, 8), (8, 8)]
+    # n_groups < n_devices: normalized — some spans empty, union exact
+    for n, shares in [(1, [1, 1, 1]), (2, [1, 1, 1, 1, 1]),
+                      (0, [1, 1]), (3, [5, 1, 1, 1])]:
+        spans = split_groups(n, shares)
+        assert len(spans) == len(shares)
+        assert spans[0][0] == 0 and spans[-1][1] == n
+        for (_, e0), (s1, _) in zip(spans, spans[1:]):
+            assert e0 == s1                      # contiguous
+        assert all(a <= b for a, b in spans)     # no negative spans
+        assert sum(b - a for a, b in spans) == n  # exact partition
+    # 1-group split lands the group on exactly one device
+    spans = split_groups(1, [1, 3])
+    assert sum(b - a for a, b in spans) == 1
+    # extreme skew still covers the range
+    spans = split_groups(100, [1e-9, 1.0])
+    assert spans[-1][1] == 100 and spans[0] == (0, 0)
+
+
 @pytest.mark.parametrize("mode", ["static", "steal"])
 def test_multi_device_split_bitwise_identical(plat, mode):
     """An out-of-order multi-device run of the kernel must be *bitwise*

@@ -451,6 +451,45 @@ def test_group_range_invalidation_is_span_granular(plat):
     co.finish()
 
 
+def test_group_range_invalidation_span_granular_three_devices(plat):
+    """N-device generalization of the half-the-bytes regression: three
+    devices write disjoint thirds of y, so each device's copy goes stale
+    over exactly the *two* thirds the others wrote, and a repeat run
+    re-migrates two thirds per device — 2*n*4 bytes total, not the
+    3*n*4 a whole-buffer invalidate would move."""
+    n = 768                                     # 12 groups of 64: thirds align
+    co = CoExecutor(plat.co_devices(3))
+    x = co.shared_buffer(np.arange(n, dtype=np.float32), "x")
+    y = co.shared_buffer(np.zeros(n, np.float32), "y")
+    co.run(build_scale2, (64,), (n,), {"x": x, "y": y}, mode="static")
+    d0, d1, d2 = co.devices
+    third = n // 3 * 4                          # bytes
+    assert co.tracker.stale_spans(y.key, d0, y.nbytes) == \
+        [(third, 3 * third)]
+    assert co.tracker.stale_spans(y.key, d1, y.nbytes) == \
+        [(0, third), (2 * third, 3 * third)]
+    assert co.tracker.stale_spans(y.key, d2, y.nbytes) == \
+        [(0, 2 * third)]
+    # x was never written: all three copies stay fully valid
+    for d in (d0, d1, d2):
+        assert co.tracker.resident(x.key, d)
+
+    merged = co.run(build_scale2, (64,), (n,), {"x": x, "y": y},
+                    mode="static")
+    st = co.last_stats
+    assert st.partial_migrations == 3, \
+        "each of 3 devices re-migrates partially"
+    assert st.bytes_migrated == 2 * n * 4, \
+        "two thirds of y per device — a whole-buffer invalidate would " \
+        "move 3*n*4"
+    assert st.migrations == 3 and st.residency_hits >= 3
+    expect = (np.arange(n, dtype=np.float32) * 2 + 1)
+    assert np.asarray(merged["y"]).tobytes() == expect.tobytes()
+    assert all(e.kind == "transfer" and e.succeeded
+               for e in st.transfer_events)
+    co.finish()
+
+
 def test_merge_survives_nan_initialized_buffers(plat):
     """NaN canonical elements must not read as 'written by every chunk'
     (NaN != NaN): a non-writing chunk's stale NaNs would clobber the
