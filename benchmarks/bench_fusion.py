@@ -1,0 +1,155 @@
+"""DAG-level kernel fusion: fused chain vs per-kernel launches.
+
+The rmsnorm→residual→quantize elementwise chain from
+``repro.core.examples`` is enqueued on two queues over the same device:
+``fusion="off"`` (three launches, two materialized intermediates) and
+``fusion="flush"`` (one stitched launch, both intermediates elided —
+docs/runtime.md §Kernel fusion).  Each size is timed as best-of-R
+batches of enqueue×3 + ``finish()``, so the measured win is exactly what
+fusion buys: two launch round-trips and two intermediate store/load
+pairs per chain.  Gates (CI-enforced):
+
+* best fused speedup across the size sweep ``>= 1.3x`` unfused;
+* fused output **bitwise identical** to unfused at every size;
+* ``plan_builds`` stable after the first fused launch (the stitched
+  kernel is planned once, then every flush is a fused-tier hit);
+* ``bytes_elided > 0`` and the pooled intermediates are *never
+  materialized* by the fused queue.
+
+  PYTHONPATH=src python -m benchmarks.bench_fusion
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Dict
+
+import numpy as np
+
+from repro.core.examples import (build_quantize, build_residual_add,
+                                 build_rmsnorm_ew)
+from repro.runtime.context import Context
+
+SIZES = (1024, 16384, 262144)
+ITERS = 20
+REPEATS = 5
+GATE_SPEEDUP = 1.3
+
+
+def _chain(ctx: Context, fusion: str, n: int):
+    """A ready-to-run chain: (queue, kernels, buffers)."""
+    prog = ctx.create_program(build_rmsnorm_ew, build_residual_add,
+                              build_quantize)
+    bufs = {nm: ctx.create_buffer(n) for nm in "xwryzq"}
+    rng = np.random.default_rng(0)
+    queue = ctx.create_queue(ctx.devices[0], fusion=fusion)
+    for nm in "xwr":
+        queue.enqueue_write_buffer(
+            bufs[nm], rng.standard_normal(n).astype(np.float32))
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+    k3 = prog.create_kernel("quantize")
+    k3.set_args(z=bufs["z"], q=bufs["q"], scale=16.0)
+    return queue, (k1, k2, k3), bufs
+
+
+def bench_mode(ctx: Context, fusion: str, n: int) -> Dict[str, object]:
+    lsz = (min(n, 256),)
+    queue, kernels, bufs = _chain(ctx, fusion, n)
+    for k in kernels:                              # jit/stitch warm-up
+        queue.enqueue_nd_range(k, (n,), lsz)
+    queue.finish()
+    plans_after_warm = ctx.devices[0].compile_cache.stats.plan_builds
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(ITERS):
+            for k in kernels:
+                queue.enqueue_nd_range(k, (n,), lsz)
+            queue.finish()
+        best = min(best, (time.perf_counter() - t0) / ITERS)
+    stats = queue.dag_stats()
+    return {"best_s": best,
+            "q": np.array(bufs["q"].data),
+            "dag_stats": stats,
+            "launches": queue.stats["launches"],
+            "intermediates_materialized":
+                bufs["y"].materialized or bufs["z"].materialized,
+            "plan_builds_stable":
+                ctx.devices[0].compile_cache.stats.plan_builds
+                == plans_after_warm}
+
+
+def run() -> Dict[str, object]:
+    per_size = {}
+    for n in SIZES:
+        off = bench_mode(Context(), "off", n)
+        fused = bench_mode(Context(), "flush", n)
+        per_size[n] = {
+            "unfused_ms": off["best_s"] * 1e3,
+            "fused_ms": fused["best_s"] * 1e3,
+            "speedup": off["best_s"] / fused["best_s"],
+            "bitwise_identical": bool(
+                np.array_equal(off["q"], fused["q"])),
+            "bytes_elided": fused["dag_stats"]["bytes_elided"],
+            "fused_chains": fused["dag_stats"]["fused_chains"],
+            "intermediates_materialized":
+                fused["intermediates_materialized"],
+            "plan_builds_stable": fused["plan_builds_stable"],
+        }
+    best_speedup = max(r["speedup"] for r in per_size.values())
+    return {"sizes": per_size, "best_speedup": best_speedup}
+
+
+def main(trajectory: bool = True):
+    res = run()
+    print(f"{'N':>8s} {'unfused':>10s} {'fused':>10s} {'speedup':>8s} "
+          f"{'bitwise':>8s} {'elided':>10s}")
+    for n, r in res["sizes"].items():
+        print(f"{n:8d} {r['unfused_ms']:8.3f}ms {r['fused_ms']:8.3f}ms "
+              f"{r['speedup']:7.2f}x {str(r['bitwise_identical']):>8s} "
+              f"{r['bytes_elided']:>9d}B")
+
+    rs = res["sizes"].values()
+    ok = (res["best_speedup"] >= GATE_SPEEDUP
+          and all(r["bitwise_identical"] for r in rs)
+          and all(r["plan_builds_stable"] for r in rs)
+          and all(r["bytes_elided"] > 0 for r in rs)
+          and not any(r["intermediates_materialized"] for r in rs))
+    status = "OK" if ok else "BELOW TARGET"
+    print(f"\nfusion gate (>={GATE_SPEEDUP}x best, bitwise at every size, "
+          f"plan_builds stable, intermediates elided): {status}")
+    if trajectory:
+        _append_trajectory(res)
+    res["_gate_ok"] = ok
+    return res
+
+
+def _append_trajectory(res) -> None:
+    """Append this run to BENCH_FUSION.json (one record per run, so the
+    fusion margin is tracked across PRs)."""
+    path = os.path.join(os.path.dirname(__file__), "BENCH_FUSION.json")
+    hist = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                hist = json.load(f)
+        except Exception:
+            hist = []
+    keep = {n: {k: v for k, v in r.items()}
+            for n, r in res["sizes"].items()}
+    hist.append({"timestamp": time.time(),
+                 "results": {"sizes": keep,
+                             "best_speedup": res["best_speedup"]}})
+    with open(path, "w") as f:
+        json.dump(hist, f, indent=1, default=float)
+    print(f"trajectory -> {path} ({len(hist)} runs)")
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main().get("_gate_ok") else 1)

@@ -13,7 +13,11 @@ Public API:
                      targets share; plan_count counts pipeline runs
   run_ndrange      — fiber-based reference executor (semantics oracle)
   CompilationCache — LRU + disk compilation cache, with a stage-level
-                     plan tier (docs/caching.md)
+                     plan tier and a fused-chain tier (docs/caching.md)
+  stitch_functions — DAG-level kernel fusion: compose one IR Function
+                     from an elementwise producer→consumer chain
+                     (docs/compiler.md §Fusion); FusedSpec/build_fused_spec
+                     are the cached runtime product
   TuningTable      — persistent per-kernel-shape target winners
   ReproError       — typed error hierarchy with OpenCL-style status
                      codes (InvalidArgError, BuildError, MapError, ...)
@@ -21,12 +25,16 @@ Public API:
 
 from .dsl import KernelBuilder
 from .api import compile_kernel, compile_count, CompiledKernel
-from .cache import (CacheKey, CompilationCache, PlanKey, canonical_ir,
-                    default_cache, ir_hash, reset_default_cache)
+from .cache import (CacheKey, CompilationCache, FusedKey, PlanKey,
+                    canonical_ir, default_cache, ir_hash,
+                    reset_default_cache)
 from .errors import (BuildError, InvalidArgError, InvalidBufferError,
                      MapError, ReproError, status_name)
-from .passes import (ParallelRegionMD, Pass, PassManager, VerifierError,
-                     WorkGroupPlan, build_plan, plan_count, verify_ir)
+from .fusion import (ChainEdge, FusedSpec, FusionError, build_fused_spec,
+                     fusible_kernel, make_fused_key, stitch_functions)
+from .passes import (BufferFootprint, KernelFusibility, ParallelRegionMD,
+                     Pass, PassManager, VerifierError, WorkGroupPlan,
+                     build_plan, kernel_fusibility, plan_count, verify_ir)
 from .program import Kernel, Program
 from .autotune import AutotunedKernel, TuningTable, default_table, \
     set_default_table
@@ -35,12 +43,16 @@ from .interp import run_ndrange
 __all__ = [
     "KernelBuilder", "compile_kernel", "compile_count", "CompiledKernel",
     "Program", "Kernel",
-    "CacheKey", "CompilationCache", "PlanKey", "canonical_ir",
+    "CacheKey", "CompilationCache", "FusedKey", "PlanKey", "canonical_ir",
     "default_cache", "ir_hash", "reset_default_cache",
     "ReproError", "InvalidArgError", "InvalidBufferError", "BuildError",
     "MapError", "status_name",
-    "ParallelRegionMD", "Pass", "PassManager", "VerifierError",
-    "WorkGroupPlan", "build_plan", "plan_count", "verify_ir",
+    "ChainEdge", "FusedSpec", "FusionError", "build_fused_spec",
+    "fusible_kernel", "make_fused_key", "stitch_functions",
+    "BufferFootprint", "KernelFusibility", "ParallelRegionMD",
+    "Pass", "PassManager", "VerifierError",
+    "WorkGroupPlan", "build_plan", "kernel_fusibility", "plan_count",
+    "verify_ir",
     "AutotunedKernel", "TuningTable", "default_table", "set_default_table",
     "run_ndrange",
 ]

@@ -43,7 +43,8 @@ from .ir import CondBranch, Function, Jump, Return, Value
 # bump when the compiler pipeline changes in ways that invalidate old
 # compiled programs (folded into every cache key, incl. disk entries)
 # v2: pass-manager pipeline — compiled kernels embed a WorkGroupPlan
-CACHE_SCHEMA_VERSION = 2
+# v3: WorkGroupPlan carries fusibility facts (DAG-level kernel fusion)
+CACHE_SCHEMA_VERSION = 3
 
 
 # ---------------------------------------------------------------------------
@@ -187,6 +188,27 @@ class PlanKey:
         return cls(ir, tuple(sorted(opts.items())))
 
 
+@dataclass(frozen=True)
+class FusedKey:
+    """Identity of a stitched kernel chain in the fused tier
+    (docs/caching.md §Fused-chain caching).
+
+    ``parts`` are the constituent kernels' canonical IR hashes in chain
+    order; ``edges`` is the chain topology — one
+    ``(producer_seg, consumer_seg, producer_arg, consumer_arg, elided)``
+    tuple per forwarded buffer; ``aliases`` records which (segment, arg)
+    pairs were bound to one buffer object and therefore folded into one
+    fused parameter.  The key is purely structural: two chains of
+    structurally identical kernels wired the same way hit the same entry
+    regardless of which Buffer objects or queues are involved."""
+
+    parts: Tuple[str, ...]
+    edges: Tuple[Tuple[int, int, str, str, bool], ...]
+    aliases: Tuple[Tuple[Tuple[int, str], ...], ...]
+    options: Tuple[Tuple[str, object], ...]
+    schema: int = CACHE_SCHEMA_VERSION
+
+
 # ---------------------------------------------------------------------------
 # The cache
 # ---------------------------------------------------------------------------
@@ -204,6 +226,10 @@ class CacheStats:
     plan_hits: int = 0
     plan_misses: int = 0
     plan_builds: int = 0
+    # fused tier (stitched kernel chains, keyed by FusedKey)
+    fused_hits: int = 0
+    fused_misses: int = 0
+    fused_builds: int = 0
 
     def as_dict(self) -> Dict[str, int]:
         return dict(self.__dict__)
@@ -241,6 +267,10 @@ class CompilationCache:
         # kernel LRU so plan sharing never evicts compiled kernels (and
         # len(cache) keeps meaning "compiled kernels resident")
         self._plans: "OrderedDict[PlanKey, object]" = OrderedDict()
+        # fused tier: FusedSpec per FusedKey (stitched kernel chains) —
+        # memory-only, like plans: the compiled fused kernels land in the
+        # normal kernel tiers through the usual device.compile path
+        self._fused: "OrderedDict[FusedKey, object]" = OrderedDict()
         self._inflight: Dict[object, threading.Event] = {}
         self._lock = threading.Lock()
         self.stats = CacheStats()
@@ -347,6 +377,52 @@ class CompilationCache:
         with self._lock:
             return len(self._plans)
 
+    # -- fused tier (stitched kernel chains) ------------------------------------
+    def get_or_build_fused(self, key: FusedKey,
+                           build_fn: Callable[[], object]):
+        """Memoize a stitched-chain artifact (a
+        :class:`~repro.core.fusion.FusedSpec`) under its structural
+        :class:`FusedKey`.  Memory-only and single-flight like the plan
+        tier: steady-state fusion of a repeated chain is one dict
+        lookup — the stitching, verification, and planning all happened
+        on the first flush."""
+        while True:
+            with self._lock:
+                ent = self._fused.get(key)
+                if ent is not None:
+                    self._fused.move_to_end(key)
+                    self.stats.fused_hits += 1
+                    return ent
+                ev = self._inflight.get(key)
+                if ev is None:
+                    ev = threading.Event()
+                    self._inflight[key] = ev
+                    owner = True
+                else:
+                    owner = False
+            if not owner:
+                ev.wait()
+                continue
+            try:
+                with self._lock:
+                    self.stats.fused_misses += 1
+                ent = build_fn()
+                with self._lock:
+                    self.stats.fused_builds += 1
+                    self._fused[key] = ent
+                    self._fused.move_to_end(key)
+                    while len(self._fused) > self.plan_capacity:
+                        self._fused.popitem(last=False)
+                return ent
+            finally:
+                with self._lock:
+                    self._inflight.pop(key, None)
+                ev.set()
+
+    def fused_cache_size(self) -> int:
+        with self._lock:
+            return len(self._fused)
+
     # -- mutation --------------------------------------------------------------
     def _insert(self, key: CacheKey, ent: object) -> None:
         with self._lock:
@@ -360,6 +436,7 @@ class CompilationCache:
         with self._lock:
             self._entries.clear()
             self._plans.clear()
+            self._fused.clear()
 
     def __len__(self) -> int:
         with self._lock:

@@ -50,6 +50,48 @@ def build_condbar():
     return b.finish()
 
 
+def build_rmsnorm_ew():
+    """Elementwise RMSNorm apply (the normalization half of a decode
+    step, with ``1/rms`` precomputed on the host): the canonical
+    *producer* of a fusible chain — one gid-indexed store, no barriers,
+    no loops."""
+    b = KernelBuilder("rmsnorm_ew")
+    x = b.arg_buffer("x", "float32")
+    w = b.arg_buffer("w", "float32")
+    y = b.arg_buffer("y", "float32")
+    inv_rms = b.arg_scalar("inv_rms", "float32")
+    gid = b.global_id(0)
+    y[gid] = x[gid] * w[gid] * inv_rms
+    return b.finish()
+
+
+def build_residual_add():
+    """Elementwise residual connection ``z = y + r`` — the middle link
+    of the rmsnorm→residual→quantize chain (both producer and
+    consumer)."""
+    b = KernelBuilder("residual_add")
+    y = b.arg_buffer("y", "float32")
+    r = b.arg_buffer("r", "float32")
+    z = b.arg_buffer("z", "float32")
+    gid = b.global_id(0)
+    z[gid] = y[gid] + r[gid]
+    return b.finish()
+
+
+def build_quantize():
+    """Elementwise symmetric int8-style quantization (round-to-nearest
+    via ``floor(v*scale + 0.5)``, clamped to ±127, kept in float32 —
+    the classic chain *consumer*."""
+    b = KernelBuilder("quantize")
+    z = b.arg_buffer("z", "float32")
+    q = b.arg_buffer("q", "float32")
+    scale = b.arg_scalar("scale", "float32")
+    gid = b.global_id(0)
+    v = b.floor(z[gid] * scale + 0.5)
+    q[gid] = b.maximum(-127.0, b.minimum(127.0, v))
+    return b.finish()
+
+
 def build_dct():
     """Uniform-trip-count inner loop (the §4.6/Fig. 9 DCT pattern):
     exercises the horizontal parallelization pass."""

@@ -44,7 +44,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Set, Tuple
 
 from .errors import BuildError, register_error
-from .ir import CondBranch, Function, Jump, Return
+from .ir import CONSTANT, CondBranch, Function, GLOBAL, Jump, LOCAL, Return
 from .regions import (WGInfo, form_regions, inject_loop_barriers, normalize,
                       out_of_ssa, tail_duplicate)
 from .context import ContextPlan, build_context_plan, fold_constants
@@ -358,6 +358,97 @@ def _region_md(fn: Function, wg: WGInfo, uni) -> Dict[str, ParallelRegionMD]:
 
 
 # ---------------------------------------------------------------------------
+# Fusibility facts — what the DAG-level fusion optimizer needs per kernel
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class BufferFootprint:
+    """Static access footprint of one buffer parameter: how many loads
+    and stores the kernel body performs on it, and whether every access
+    index is the work-item's own ``global_id(0)`` — the property that
+    makes per-lane value forwarding between a producer's store and a
+    consumer's load legal (:mod:`repro.core.fusion`)."""
+
+    name: str
+    space: str
+    loads: int
+    stores: int
+    gid_only: bool
+
+
+@dataclass(frozen=True)
+class KernelFusibility:
+    """Per-kernel fusion facts exported by the middle-end.
+
+    ``elementwise`` is the DAG optimizer's admission test: a 1-D,
+    loop-free, user-barrier-free kernel with no LOCAL arrays whose every
+    global-buffer access indexes at ``global_id(0)`` — i.e. a pure map
+    over the NDRange where work-item *i* touches exactly element *i* of
+    every buffer.  ``reasons`` names the first facts that broke the
+    classification (for ``dag_stats``/debugging); ``footprints`` carries
+    the per-parameter access counts the buffer-elision decision reads."""
+
+    elementwise: bool
+    reasons: Tuple[str, ...]
+    footprints: Tuple[BufferFootprint, ...]
+
+    def footprint(self, name: str) -> Optional[BufferFootprint]:
+        for f in self.footprints:
+            if f.name == name:
+                return f
+        return None
+
+
+def kernel_fusibility(fn: Function) -> KernelFusibility:
+    """Compute :class:`KernelFusibility` for ``fn``.
+
+    Works on both the raw builder IR and the post-pipeline CFG: the
+    facts it reads (``global_id`` instrs, load/store buffer attrs, user
+    barriers, natural loops) survive every pass unchanged."""
+    reasons: List[str] = []
+    if fn.ndim != 1:
+        reasons.append(f"ndim={fn.ndim}")
+    if any(a.space == LOCAL for a in fn.buffer_args):
+        reasons.append("local-array")
+    if fn.natural_loops():
+        reasons.append("loop")
+    # SSA ids of values that *are* the work-item's global_id(0)
+    gid_ids: Set[int] = set()
+    for blk in fn.blocks.values():
+        for ins in blk.instrs:
+            if ins.op == "global_id" and int(ins.attrs.get("dim", 0)) == 0 \
+                    and ins.result is not None:
+                gid_ids.add(ins.result.id)
+            elif ins.op == "barrier" and not ins.attrs.get("implicit"):
+                if "user-barrier" not in reasons:
+                    reasons.append("user-barrier")
+    loads: Dict[str, int] = {}
+    stores: Dict[str, int] = {}
+    gid_ok: Dict[str, bool] = {}
+    for blk in fn.blocks.values():
+        for ins in blk.instrs:
+            if ins.op not in ("load", "store"):
+                continue
+            buf = str(ins.attrs.get("buffer"))
+            idx = ins.operands[0]
+            at_gid = getattr(idx, "id", None) in gid_ids
+            gid_ok[buf] = gid_ok.get(buf, True) and at_gid
+            if ins.op == "load":
+                loads[buf] = loads.get(buf, 0) + 1
+            else:
+                stores[buf] = stores.get(buf, 0) + 1
+    fps = tuple(BufferFootprint(
+        name=a.name, space=a.space,
+        loads=loads.get(a.name, 0), stores=stores.get(a.name, 0),
+        gid_only=gid_ok.get(a.name, True)) for a in fn.buffer_args)
+    for f in fps:
+        if f.space in (GLOBAL, CONSTANT) and not f.gid_only:
+            reasons.append(f"non-gid-access:{f.name}")
+    return KernelFusibility(elementwise=not reasons,
+                            reasons=tuple(reasons), footprints=fps)
+
+
+# ---------------------------------------------------------------------------
 # WorkGroupPlan — the shared target-independent product
 # ---------------------------------------------------------------------------
 
@@ -377,6 +468,7 @@ class WorkGroupPlan:
     md: Dict[str, ParallelRegionMD]         # §4 parallelism metadata
     options: Tuple[Tuple[str, object], ...]  # (horizontal, merge_uniform)
     pass_times: Dict[str, float] = field(default_factory=dict)
+    fusibility: Optional[KernelFusibility] = None   # DAG-fusion facts
 
     @property
     def order(self) -> List[str]:
@@ -423,6 +515,7 @@ class PipelineState:
     ctx: Optional[ContextPlan] = None
     region_plans: Optional[Dict[str, List[object]]] = None
     md: Optional[Dict[str, ParallelRegionMD]] = None
+    fusibility: Optional[KernelFusibility] = None
 
 
 @dataclass(frozen=True)
@@ -507,6 +600,10 @@ def _p_annotate_md(st: PipelineState) -> None:
     st.md = _region_md(st.fn, st.wg, st.uni)
 
 
+def _p_annotate_fusibility(st: PipelineState) -> None:
+    st.fusibility = kernel_fusibility(st.fn)
+
+
 DEFAULT_PASSES: Tuple[Pass, ...] = (
     Pass("normalize", _p_normalize,
          establishes=("single-exit", "barriers-isolated"),
@@ -554,6 +651,10 @@ DEFAULT_PASSES: Tuple[Pass, ...] = (
          requires=("regions-formed", "uniformity-known"),
          mutates_cfg=False,
          paper="§4 (llvm.mem.parallel_loop_access analogue)"),
+    Pass("annotate_fusibility", _p_annotate_fusibility,
+         requires=("regions-formed",),
+         mutates_cfg=False,
+         paper="§4 (parallelism facts consumed by later generic passes)"),
 )
 
 
@@ -617,7 +718,8 @@ class PassManager:
             region_plans=st.region_plans, md=st.md,
             options=(("horizontal", bool(horizontal)),
                      ("merge_uniform", bool(merge_uniform))),
-            pass_times=dict(self.timings))
+            pass_times=dict(self.timings),
+            fusibility=st.fusibility)
 
 
 def build_plan(fn: Function, horizontal: bool = True,

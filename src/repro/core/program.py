@@ -56,7 +56,10 @@ def _classify(value) -> str:
         return "host"
     if hasattr(value, "tracker") and hasattr(value, "host"):
         return "shared"
-    if hasattr(value, "root") and hasattr(value, "data"):
+    # probe `origin`, not `data`: hasattr(value, "data") would invoke the
+    # property getter, materializing a still-lazy pooled buffer and
+    # defeating fusion's intermediate elision
+    if hasattr(value, "root") and hasattr(value, "origin"):
         return "device"
     return "scalar"
 
@@ -125,6 +128,17 @@ class Program:
         validation reads this; specializations rebuild their own)."""
         try:
             return self._fns[name]
+        except KeyError:
+            raise InvalidArgError(
+                f"no kernel {name!r} in program; have "
+                f"{self.kernel_names()}") from None
+
+    def builder(self, name: str) -> Callable[[], Function]:
+        """The zero-argument IR builder of kernel ``name`` — the source
+        the queue's fusion rewrite re-stitches chains from
+        (:mod:`repro.core.fusion`)."""
+        try:
+            return self._builders[name]
         except KeyError:
             raise InvalidArgError(
                 f"no kernel {name!r} in program; have "

@@ -154,20 +154,27 @@ class Context:
         :class:`~repro.core.errors.InvalidBufferError` before the arena
         is touched.  ``pooled=True`` (default) serves the chunk from the
         context's per-device size-class pool, so steady-state
-        alloc/release cycles are O(1) free-list operations."""
+        alloc/release cycles are O(1) free-list operations — and the
+        allocation is *lazy*: the chunk and payload materialize on first
+        real use, so an intermediate elided by the queue's fusion
+        rewrite (docs/runtime.md §Kernel fusion) never allocates."""
         device = self._check_device(device, "create_buffer")
         return create_buffer(device, n_elems, dtype,
                              pool=self.pool_for(device) if pooled
-                             else None)
+                             else None,
+                             lazy=pooled)
 
     # -- queues / co-execution ----------------------------------------------------
     def create_queue(self, device: Optional[Device] = None,
                      out_of_order: bool = False,
-                     workers: int = 2) -> CommandQueue:
-        """clCreateCommandQueue on a context device."""
+                     workers: int = 2,
+                     fusion: str = "flush") -> CommandQueue:
+        """clCreateCommandQueue on a context device.  ``fusion`` sets the
+        queue's DAG-fusion mode (``"off"`` | ``"flush"`` | ``"eager"``,
+        docs/runtime.md §Kernel fusion)."""
         device = self._check_device(device, "create_queue")
         q = CommandQueue(device, out_of_order=out_of_order,
-                         workers=workers)
+                         workers=workers, fusion=fusion)
         with self._lock:
             self._queues.add(q)
         return q

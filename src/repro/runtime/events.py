@@ -90,6 +90,13 @@ class Event:
         or the generic ``"command"``.  The scheduler and the memory
         benchmark use it to attribute profile windows to migration vs
         compute (docs/memory.md §Migration).
+    fused_from:
+        Provenance for the DAG fusion rewrite (docs/runtime.md §Kernel
+        fusion): the original per-kernel events a fused super-command
+        replaced, in chain order.  Empty for ordinary commands.  The
+        originals remain live DAG nodes (dependents wait on them; they
+        complete when the fused command does), and ``finish(timeout)``
+        expands this list when naming a stuck command.
     """
 
     def __init__(self, name: str, queue: Optional[object] = None,
@@ -98,6 +105,7 @@ class Event:
         self.name = name
         self.queue = queue
         self.kind = kind
+        self.fused_from: List["Event"] = []
         self.error: Optional[BaseException] = None
         self.queued_ns: Optional[int] = time.monotonic_ns()
         self.submit_ns: Optional[int] = None

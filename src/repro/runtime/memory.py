@@ -112,6 +112,10 @@ class SubBuffer:
     @data.setter
     def data(self, value) -> None:
         """Write through the view: in-place into the parent storage."""
+        # a prior launch may have installed an immutable (device-owned)
+        # array as the parent payload; copy-on-write before aliasing it
+        if not self.parent.data.flags.writeable:
+            self.parent.data = np.array(self.parent.data)
         lo = self.origin // self.itemsize
         _flat_view(self.parent.data)[lo:lo + self.n_elems] = \
             np.asarray(value, dtype=self.dtype).reshape(-1)

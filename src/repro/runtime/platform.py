@@ -249,20 +249,27 @@ class Buffer:
     """
 
     def __init__(self, device: Device, size_bytes: int, dtype: str,
-                 n_elems: int, pool=None):
+                 n_elems: int, pool=None, lazy: bool = False):
         self.device = device
         # a pool-backed buffer draws its chunk from (and releases it to)
         # a size-class BufferPool over the device arena instead of the
         # raw first-fit allocator (Context.create_buffer does this)
         self._pool = pool
-        self.chunk: Chunk = (pool.alloc(size_bytes) if pool is not None
-                             else device.allocator.alloc(size_bytes))
+        self._size_bytes = size_bytes
+        # a lazy buffer defers both the chunk and the payload until first
+        # real use, so a fusion-elided intermediate that is only ever the
+        # stitched-away link of a chain never allocates at all
+        # (docs/memory.md §Lazy pooled buffers)
+        self.chunk: Optional[Chunk] = None if lazy else (
+            pool.alloc(size_bytes) if pool is not None
+            else device.allocator.alloc(size_bytes))
         self.dtype = dtype
         self.itemsize = np.dtype(dtype).itemsize
         self.n_elems = n_elems
         self.nbytes = n_elems * self.itemsize
         self.origin = 0                       # byte offset within root
-        self.data = np.zeros(n_elems, dtype)
+        self._data: Optional[np.ndarray] = (None if lazy
+                                            else np.zeros(n_elems, dtype))
         # residency binding (None until bind_residency)
         self._tracker = None
         self._res_key = None
@@ -279,6 +286,39 @@ class Buffer:
     def root(self) -> "Buffer":
         """The underlying root allocation (self for non-view buffers)."""
         return self
+
+    # -- lazy materialization ---------------------------------------------------
+    @property
+    def materialized(self) -> bool:
+        """True once the device chunk and payload exist.  Lazy buffers
+        (``Context.create_buffer(pooled=True)``) stay unmaterialized
+        until the first real use; an elided fusion intermediate is
+        *never* real use, so its ``bytes_elided`` are genuinely saved."""
+        return self._data is not None
+
+    def _materialize(self) -> None:
+        if self._data is not None:
+            return
+        if self.chunk is None:
+            self.chunk = (self._pool.alloc(self._size_bytes)
+                          if self._pool is not None
+                          else self.device.allocator.alloc(self._size_bytes))
+        self._data = np.zeros(self.n_elems, self.dtype)
+
+    @property
+    def data(self) -> np.ndarray:
+        """The host-side payload mirror; touching it is 'first real use'
+        and materializes a lazy buffer."""
+        self._materialize()
+        return self._data
+
+    @data.setter
+    def data(self, arr: np.ndarray) -> None:
+        if self.chunk is None:
+            self.chunk = (self._pool.alloc(self._size_bytes)
+                          if self._pool is not None
+                          else self.device.allocator.alloc(self._size_bytes))
+        self._data = arr
 
     # -- residency ------------------------------------------------------------
     def bind_residency(self, tracker, key, device_key) -> None:
@@ -397,14 +437,16 @@ def validate_buffer_request(n_elems, dtype) -> int:
 
 
 def create_buffer(device: Device, n_elems: int, dtype: str = "float32",
-                  pool=None) -> Buffer:
+                  pool=None, lazy: bool = False) -> Buffer:
     """clCreateBuffer: allocate ``n_elems`` of ``dtype`` on ``device``.
     ``pool`` (a :class:`~repro.runtime.memory.BufferPool` over the
     device's arena) serves the chunk from a size-class free list —
-    ``Context.create_buffer`` passes the context's per-device pool."""
+    ``Context.create_buffer`` passes the context's per-device pool.
+    ``lazy=True`` defers chunk + payload to first real use (pooled
+    context buffers default to this, enabling fusion elision)."""
     itemsize = validate_buffer_request(n_elems, dtype)
     return Buffer(device, int(n_elems) * itemsize, dtype, int(n_elems),
-                  pool=pool)
+                  pool=pool, lazy=lazy)
 
 
 # ---------------------------------------------------------------------------

@@ -36,10 +36,23 @@ allocation with *any* active map are rejected — the write-back would
 race with or silently detach the zero-copy host view.  Kernel launches
 accept sub-buffer views anywhere a buffer is accepted, with in-place
 write-back into the parent's span.
+
+**Kernel fusion** (docs/runtime.md §Kernel fusion): because the queue
+sees the whole pending DAG before execution, ``flush()`` runs a graph
+optimizer over the enqueue window: adjacent producer→consumer chains of
+elementwise kernels (same NDRange, the consumer's only dependence on the
+producer a buffer it wrote, every region ``wi_parallel``) are rewritten
+into ONE stitched command (:mod:`repro.core.fusion`), eliding
+intermediate buffers whose only use was the stitched-away link.  The
+original per-kernel events stay live — they complete when the fused
+command does, sharing its profiling counters — so dependents and
+``finish()`` observe an unchanged DAG.  ``fusion="off"|"flush"|"eager"``
+selects the mode per queue; ``REPRO_FUSE=0`` kills it process-wide.
 """
 
 from __future__ import annotations
 
+import os
 import threading
 import warnings
 from concurrent.futures import ThreadPoolExecutor
@@ -48,6 +61,10 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 import numpy as np
 
 from ..core.api import CompiledKernel
+from ..core.errors import InvalidArgError
+from ..core.fusion import (ChainEdge, FusionError, build_fused_spec,
+                           make_fused_key)
+from ..core.passes import KernelFusibility, kernel_fusibility
 from ..core.program import Kernel
 from .events import (CommandError, DependencyError, Event, EventStatus,
                      UserEvent, wait_for_events)
@@ -55,21 +72,83 @@ from .memory import (MAP_READ_WRITE, MAP_WRITE_INVALIDATE, MapError,
                      MappedRegion, _flat_view)
 from .platform import Buffer, Device
 
+#: queue fusion modes: "off" never rewrites, "flush" rewrites the window
+#: at flush()/finish() time, "eager" additionally pre-stitches the
+#: growing chain during the enqueue window (warm caches before flush)
+FUSION_MODES = ("off", "flush", "eager")
+
+
+def _fusion_enabled() -> bool:
+    """The REPRO_FUSE kill-switch, read at fusion time (not import time)
+    so tests and operators can flip it per call."""
+    return os.environ.get("REPRO_FUSE", "1") != "0"
+
 
 class _Command:
     """One node of the DAG: a host thunk plus its event and wait list."""
 
     __slots__ = ("fn", "event", "deps", "remaining", "submitted",
-                 "failed_dep")
+                 "failed_dep", "meta")
 
     def __init__(self, fn: Callable[[], None], event: Event,
-                 deps: Sequence[Event]):
+                 deps: Sequence[Event], meta=None):
         self.fn = fn
         self.event = event
         self.deps: List[Event] = list(deps)
         self.remaining = 0            # unresolved deps (set when armed)
         self.submitted = False
         self.failed_dep: Optional[Event] = None
+        # what the fusion matcher knows about this command: a
+        # _KernelLaunch (fusible), a _BufferUse (transfer/map — names the
+        # buffers it touches), or None (opaque: native/deprecated paths)
+        self.meta = meta
+
+
+class _KernelLaunch:
+    """Fusion-matcher metadata for one enqueue_nd_range command: the
+    argument snapshot plus the launch geometry, enough to re-stitch the
+    kernel from its program's IR builder."""
+
+    __slots__ = ("kernel", "buffers", "scalars", "global_size",
+                 "local_size", "target", "group_range")
+
+    def __init__(self, kernel: Kernel, buffers: Dict[str, object],
+                 scalars: Dict[str, object], global_size, local_size,
+                 target, group_range):
+        self.kernel = kernel
+        self.buffers = buffers
+        self.scalars = scalars
+        self.global_size = tuple(global_size)
+        self.local_size = tuple(local_size)
+        self.target = target
+        self.group_range = group_range
+
+
+class _BufferUse:
+    """Fusion-matcher metadata for a non-kernel command that touches
+    buffers (transfers, maps): elision legality needs to see *every*
+    in-window observer of an intermediate."""
+
+    __slots__ = ("buffers",)
+
+    def __init__(self, *buffers):
+        self.buffers = buffers
+
+
+#: per-ir_hash fusibility facts (kernels are content-addressed, so the
+#: facts are process-global); computed from the program's unmutated
+#: signature IR — explicit barriers/loops/footprints are all visible
+#: there, before normalize adds the implicit region barriers
+_fusibility_facts: Dict[str, KernelFusibility] = {}
+
+
+def _facts_for(kernel: Kernel) -> KernelFusibility:
+    h = kernel.ir_hash
+    facts = _fusibility_facts.get(h)
+    if facts is None:
+        facts = kernel_fusibility(kernel.program.function(kernel.name))
+        _fusibility_facts[h] = facts
+    return facts
 
 
 class CommandQueue:
@@ -88,12 +167,22 @@ class CommandQueue:
         ``workers``.
     workers:
         Size of the worker pool (the pthread-driver launcher threads).
+    fusion:
+        DAG-fusion mode: ``"off"`` (never rewrite), ``"flush"``
+        (default — rewrite the window when it is flushed), or
+        ``"eager"`` (also pre-stitch the growing chain at enqueue time,
+        so the flush-time rewrite is pure cache hits).  The
+        ``REPRO_FUSE=0`` environment kill-switch overrides all modes.
     """
 
     def __init__(self, device: Device, out_of_order: bool = False,
-                 workers: int = 2):
+                 workers: int = 2, fusion: str = "flush"):
+        if fusion not in FUSION_MODES:
+            raise InvalidArgError(
+                f"fusion mode {fusion!r} not in {FUSION_MODES}")
         self.device = device
         self.out_of_order = out_of_order
+        self.fusion = fusion
         self._pool = ThreadPoolExecutor(max_workers=workers)
         self._lock = threading.Lock()
         self._pending: List[_Command] = []     # enqueued, not yet flushed
@@ -102,6 +191,9 @@ class CommandQueue:
         self._ooo_barrier: Optional[Event] = None
         self._launches = 0
         self._compiles0 = device.compile_cache.stats.compiles
+        self._fused_chains = 0
+        self._commands_eliminated = 0
+        self._bytes_elided = 0
 
     # -- introspection -----------------------------------------------------------
     @property
@@ -125,10 +217,22 @@ class CommandQueue:
         with self._lock:
             return list(self._issued)
 
+    def dag_stats(self) -> Dict[str, object]:
+        """Counters of the DAG fusion rewrite (docs/runtime.md §Kernel
+        fusion): chains stitched, commands removed from the executed DAG
+        (original events still complete), and bytes of memory traffic
+        elided — one avoided store plus one avoided load per elided
+        intermediate buffer."""
+        with self._lock:
+            return {"mode": self.fusion,
+                    "fused_chains": self._fused_chains,
+                    "commands_eliminated": self._commands_eliminated,
+                    "bytes_elided": self._bytes_elided}
+
     # -- enqueue APIs -------------------------------------------------------------
     def _enqueue(self, name: str, fn: Callable[[], None],
                  wait_for: Optional[Sequence[Event]],
-                 kind: str = "command") -> Event:
+                 kind: str = "command", meta=None) -> Event:
         """Core enqueue: record a command node and return its event.
 
         The full ``wait_for`` list is always preserved on the command (an
@@ -147,10 +251,13 @@ class CommandQueue:
                     self._ooo_barrier = None
                 else:
                     deps.append(self._ooo_barrier)
-            cmd = _Command(fn, ev, deps)
+            cmd = _Command(fn, ev, deps, meta=meta)
             self._pending.append(cmd)
             self._last_event = ev
             self._issued.append(ev)
+        if self.fusion == "eager" and isinstance(meta, _KernelLaunch) \
+                and _fusion_enabled():
+            self._warm_eager()
         return ev
 
     def enqueue_native(self, fn: Callable[[], None],
@@ -185,14 +292,16 @@ class CommandQueue:
             self._check_not_mapped(buf, "write_buffer")
             buf.data = np.array(host, dtype=buf.dtype, copy=True)
             buf.mark_written()
-        return self._enqueue("write", run, wait_for, kind="transfer")
+        return self._enqueue("write", run, wait_for, kind="transfer",
+                             meta=_BufferUse(buf))
 
     def enqueue_read_buffer(self, buf: Buffer, out: np.ndarray,
                             wait_for=None) -> Event:
         """clEnqueueReadBuffer: copy the device buffer into ``out``."""
         def run():
             out[...] = buf.data
-        return self._enqueue("read", run, wait_for, kind="transfer")
+        return self._enqueue("read", run, wait_for, kind="transfer",
+                             meta=_BufferUse(buf))
 
     # -- zero-copy host access (clEnqueueMapBuffer, OpenCL §5.4.2) --------------
     def enqueue_map_buffer(self, buf, flags: str = MAP_READ_WRITE,
@@ -251,7 +360,7 @@ class CommandQueue:
 
         region.event = self._enqueue(
             f"map:{flags}:{region.abs_span[0]}-{region.abs_span[1]}",
-            run, wait_for, kind="map")
+            run, wait_for, kind="map", meta=_BufferUse(buf))
         return region
 
     def enqueue_unmap_buffer(self, region: MappedRegion,
@@ -275,7 +384,7 @@ class CommandQueue:
 
         ev = self._enqueue(
             f"unmap:{region.abs_span[0]}-{region.abs_span[1]}",
-            run, wait_for, kind="map")
+            run, wait_for, kind="map", meta=_BufferUse(region.buf))
         region.unmap_event = ev
         return ev
 
@@ -316,13 +425,15 @@ class CommandQueue:
         enqueue-time work-group-function compilation (§4.1), memoized in
         the device cache, so only the first enqueue compiles."""
         buffers, scalars = kernel.launch_args(accept=("device",))
+        meta = _KernelLaunch(kernel, buffers, scalars, global_size,
+                             local_size, target, group_range)
 
         def run():
             binary = kernel.bind(self.device, local_size, target=target)
             self._launch(binary, buffers, global_size, scalars,
                          group_range)
         return self._enqueue(f"ndrange:{kernel.name}", run, wait_for,
-                             kind="kernel")
+                             kind="kernel", meta=meta)
 
     def enqueue_kernel(self, build, local_size: Sequence[int],
                        global_size: Sequence[int],
@@ -416,6 +527,274 @@ class CommandQueue:
                 self._ooo_barrier = ev
         return ev
 
+    # -- DAG fusion (the flush-time graph optimizer, docs/runtime.md) -----------
+    def _edge_chained(self, prod: _Command, cons: _Command
+                      ) -> Optional[List[Tuple[str, str, object]]]:
+        """Is ``prod → cons`` a legal fusion edge?  Returns the chained
+        buffers as ``(prod_arg, cons_arg, buffer)`` triples (non-empty),
+        or ``None`` if the pair must not fuse.
+
+        Legality (ISSUE/paper framing — the consumer's only dependence
+        on the producer is a buffer the producer wrote, and both are
+        pure per-work-item maps):
+
+        * both commands are ``enqueue_nd_range`` launches with identical
+          NDRange geometry, target, build options, and no group_range;
+        * both kernels are elementwise (:func:`~repro.core.passes.
+          kernel_fusibility`: 1-D, loop-free, barrier-free, every
+          global access at ``global_id(0)`` — which also makes every
+          region ``wi_parallel``);
+        * the consumer waits on the producer, and its *other* deps are a
+          subset of the producer's own deps (anything else could order
+          between the two commands, or deadlock the fused node);
+        * ≥1 chained buffer: the identical root Buffer object stored
+          exactly once by the producer and only loaded by the consumer,
+          unmapped, sized to the NDRange;
+        * no cross-argument root aliasing (two distinct arg objects over
+          one root allocation, e.g. sub-buffer views) when either kernel
+          stores to that root — write-back interleaving would differ
+          from the sequential schedule.
+        """
+        pm, cm = prod.meta, cons.meta
+        if not (isinstance(pm, _KernelLaunch)
+                and isinstance(cm, _KernelLaunch)):
+            return None
+        if (pm.global_size != cm.global_size
+                or pm.local_size != cm.local_size
+                or pm.target != cm.target
+                or pm.group_range is not None
+                or cm.group_range is not None
+                or pm.kernel.program.options != cm.kernel.program.options
+                or len(pm.global_size) != 1):
+            return None
+        if prod.event not in cons.deps:
+            return None
+        extra = [d for d in cons.deps if d is not prod.event]
+        pdeps = set(id(d) for d in prod.deps)
+        if any(id(d) not in pdeps for d in extra):
+            return None
+        pf, cf = _facts_for(pm.kernel), _facts_for(cm.kernel)
+        if not (pf.elementwise and cf.elementwise):
+            return None
+        # root-aliasing audit across the pair
+        stores_root = set()
+        objs_per_root: Dict[int, set] = {}
+        for m, facts in ((pm, pf), (cm, cf)):
+            for arg, b in m.buffers.items():
+                root = b.root
+                objs_per_root.setdefault(id(root), set()).add(id(b))
+                fp = facts.footprint(arg)
+                if fp is not None and fp.stores:
+                    stores_root.add(id(root))
+        for rid, objs in objs_per_root.items():
+            if len(objs) > 1 and rid in stores_root:
+                return None
+        chained: List[Tuple[str, str, object]] = []
+        for parg, b in pm.buffers.items():
+            pfp = pf.footprint(parg)
+            if pfp is None or pfp.stores != 1 or not pfp.gid_only:
+                continue
+            if b.root is not b or b.map_count:
+                continue
+            if b.n_elems != pm.global_size[0]:
+                continue
+            for carg, cb in cm.buffers.items():
+                if cb is not b:
+                    continue
+                cfp = cf.footprint(carg)
+                if cfp is None or cfp.stores or not cfp.loads \
+                        or not cfp.gid_only:
+                    chained.clear()
+                    return None   # consumer also writes/misuses it
+                chained.append((parg, carg, b))
+        return chained or None
+
+    def _chain_runs(self, cmds: List[_Command]) -> List[Tuple[int, int]]:
+        """Maximal runs ``[i, j]`` (inclusive) of adjacently-fusible
+        commands in the window."""
+        runs, i = [], 0
+        while i < len(cmds):
+            j = i
+            while j + 1 < len(cmds) \
+                    and self._edge_chained(cmds[j], cmds[j + 1]):
+                j += 1
+            if j > i:
+                runs.append((i, j))
+            i = j + 1
+        return runs
+
+    def _elidable(self, buf, prod_meta: _KernelLaunch,
+                  window: List[_Command], chain: List[_Command],
+                  seg: int) -> bool:
+        """May the chained buffer be elided (never written, never
+        allocated)?  Only when nothing else can observe it: it is a
+        lazy, still-unmaterialized pool buffer, the producer never loads
+        it, no *other* command in the window references its root, and no
+        window command is opaque to the matcher (an unannotated native
+        command could read anything)."""
+        if not (isinstance(buf, Buffer) and buf._pool is not None
+                and not buf.materialized):
+            return False
+        pfp = _facts_for(prod_meta.kernel).footprint(
+            next(a for a, b in prod_meta.buffers.items() if b is buf))
+        if pfp is None or pfp.loads:
+            return False
+        producer, consumer = chain[seg], chain[seg + 1]
+        for cmd in window:
+            if cmd is producer or cmd is consumer:
+                continue
+            m = cmd.meta
+            if isinstance(m, _KernelLaunch):
+                uses = m.buffers.values()
+            elif isinstance(m, _BufferUse):
+                uses = m.buffers
+            elif cmd.event.kind == "marker":
+                continue
+            else:
+                return False          # opaque command in the window
+            if any(u.root is buf for u in uses):
+                return False
+        return True
+
+    def _fuse_chain(self, chain: List[_Command],
+                    window: List[_Command]) -> Optional[_Command]:
+        """Rewrite ``chain`` (≥2 adjacently-fusible commands) into one
+        stitched command, or ``None`` to fall back to unfused."""
+        metas: List[_KernelLaunch] = [c.meta for c in chain]
+        names = [m.kernel.name for m in metas]
+        # alias groups: one fused parameter per distinct buffer object
+        groups: Dict[int, List[Tuple[int, str]]] = {}
+        for i, m in enumerate(metas):
+            for arg, b in m.buffers.items():
+                groups.setdefault(id(b), []).append((i, arg))
+        alias_groups = [g for g in groups.values() if len(g) > 1]
+        edges: List[ChainEdge] = []
+        elided_bufs = []
+        for seg in range(len(chain) - 1):
+            for parg, carg, b in self._edge_chained(chain[seg],
+                                                    chain[seg + 1]):
+                elide = self._elidable(b, metas[seg], window, chain, seg)
+                edges.append(ChainEdge(seg, seg + 1, parg, carg, elide))
+                if elide:
+                    elided_bufs.append(b)
+        try:
+            spec = build_fused_spec(
+                [m.kernel.program.builder(m.kernel.name) for m in metas],
+                names, edges, alias_groups,
+                cache=self.device.compile_cache,
+                key=make_fused_key([m.kernel.ir_hash for m in metas],
+                                   edges, alias_groups,
+                                   **metas[0].kernel.program.options),
+                **metas[0].kernel.program.options)
+        except FusionError:
+            return None
+        global_size = metas[0].global_size
+        local_size = metas[0].local_size
+        target = metas[0].target
+        fev = Event("fused:" + "+".join(names), queue=self, kind="kernel")
+        fev.fused_from = [c.event for c in chain]
+
+        def run():
+            binary = spec.program.binary_for(
+                spec.kernel_name, local_size, device=self.device,
+                target=target)
+            fbufs, fscal = spec.bind_launch(
+                [m.buffers for m in metas], [m.scalars for m in metas])
+            self._launch(binary, fbufs, global_size, fscal, None)
+            # an elided intermediate is never written, but residency
+            # must read exactly as if the chain had run unfused
+            for seg, arg in spec.elided:
+                metas[seg].buffers[arg].mark_written()
+
+        originals = [c.event for c in chain]
+
+        def mirror(ev: Event) -> None:
+            # the original per-kernel events complete with (and share
+            # the profiling counters of) the fused command
+            for o in originals:
+                if ev.error is not None:
+                    o.fail(ev.error)
+                else:
+                    o.complete()
+                o.submit_ns = ev.submit_ns
+                o.start_ns = ev.start_ns
+                o.end_ns = ev.end_ns
+        fev.add_callback(mirror)
+        # deps: edge legality guarantees every later command's non-chain
+        # deps are a subset of the head's, so the head's list is the
+        # fused node's full wait list (and can never reach back into the
+        # chain — no cycles through mirrored completions)
+        fused_cmd = _Command(run, fev, chain[0].deps)
+        with self._lock:
+            self._fused_chains += 1
+            self._commands_eliminated += len(chain) - 1
+            # one avoided write-back + one avoided read per elided edge
+            self._bytes_elided += sum(2 * b.nbytes for b in elided_bufs)
+        return fused_cmd
+
+    def _fuse_window(self, cmds: List[_Command]) -> List[_Command]:
+        """The flush-time graph optimizer: replace every maximal fusible
+        chain in the window with one stitched command."""
+        if self.fusion == "off" or not _fusion_enabled() \
+                or len(cmds) < 2:
+            return cmds
+        runs = self._chain_runs(cmds)
+        if not runs:
+            return cmds
+        out: List[_Command] = []
+        pos = 0
+        for i, j in runs:
+            out.extend(cmds[pos:i])
+            fused = self._fuse_chain(cmds[i:j + 1], cmds)
+            if fused is not None:
+                out.append(fused)
+            else:
+                out.extend(cmds[i:j + 1])
+            pos = j + 1
+        out.extend(cmds[pos:])
+        return out
+
+    def _warm_eager(self) -> None:
+        """``fusion="eager"``: pre-stitch the growing pending tail chain
+        during the enqueue window, so the flush-time rewrite (and its
+        first launch) hits the fused tier instead of stitching."""
+        with self._lock:
+            window = list(self._pending)
+        if len(window) < 2:
+            return
+        j = len(window) - 1
+        i = j
+        while i > 0 and self._edge_chained(window[i - 1], window[i]):
+            i -= 1
+        if i == j:
+            return
+        try:
+            chain = window[i:j + 1]
+            metas: List[_KernelLaunch] = [c.meta for c in chain]
+            groups: Dict[int, List[Tuple[int, str]]] = {}
+            for k, m in enumerate(metas):
+                for arg, b in m.buffers.items():
+                    groups.setdefault(id(b), []).append((k, arg))
+            alias_groups = [g for g in groups.values() if len(g) > 1]
+            edges = []
+            for seg in range(len(chain) - 1):
+                for parg, carg, b in self._edge_chained(chain[seg],
+                                                        chain[seg + 1]):
+                    edges.append(ChainEdge(
+                        seg, seg + 1, parg, carg,
+                        self._elidable(b, metas[seg], window, chain,
+                                       seg)))
+            build_fused_spec(
+                [m.kernel.program.builder(m.kernel.name) for m in metas],
+                [m.kernel.name for m in metas], edges, alias_groups,
+                cache=self.device.compile_cache,
+                key=make_fused_key([m.kernel.ir_hash for m in metas],
+                                   edges, alias_groups,
+                                   **metas[0].kernel.program.options),
+                **metas[0].kernel.program.options)
+        except FusionError:
+            pass
+
     # -- DAG execution ------------------------------------------------------------
     def flush(self) -> None:
         """clFlush: submit the DAG built so far and return immediately.
@@ -424,9 +803,16 @@ class CommandQueue:
         resolved wait lists go to the worker pool now, the rest are
         submitted automatically (from the completing thread) as their
         dependencies finish.  Completion is observed with ``finish()`` or
-        ``Event.wait()``."""
+        ``Event.wait()``.
+
+        Before arming, the fusion rewrite runs over the window
+        (:meth:`dag_stats`, docs/runtime.md §Kernel fusion) — fused
+        chains arm as one command; their original events complete with
+        it."""
         with self._lock:
             armed, self._pending = self._pending, []
+        armed = self._fuse_window(armed)
+        with self._lock:
             # successfully completed events need no further tracking;
             # pruning keeps _issued bounded on long-lived queues.  Failed
             # events stay until the next finish() reports them.
@@ -489,7 +875,17 @@ class CommandQueue:
             issued = list(self._issued)
         try:
             if not wait_for_events(issued, timeout):
-                stuck = [e.name for e in issued if not e.done]
+                # name stuck commands; a fused super-command expands to
+                # its constituent kernels (Event.fused_from provenance)
+                stuck = []
+                for e in issued:
+                    if e.done:
+                        continue
+                    if e.fused_from:
+                        parts = ", ".join(o.name for o in e.fused_from)
+                        stuck.append(f"{e.name} (fused from: {parts})")
+                    else:
+                        stuck.append(e.name)
                 raise RuntimeError(
                     f"CommandQueue.finish timed out after {timeout}s; "
                     f"incomplete commands: {stuck[:8]}")

@@ -165,7 +165,7 @@ class ServingEngine:
                  scheduler: str = "continuous", page_tokens: int = 16,
                  kv_budget_bytes: Optional[int] = None,
                  executor: Optional[BatchExecutor] = None,
-                 prefill_bucket: int = 8):
+                 prefill_bucket: int = 8, fusion: str = "flush"):
         if scheduler not in ("continuous", "fixed"):
             raise InvalidArgError(
                 f"scheduler must be 'continuous' or 'fixed', "
@@ -199,11 +199,13 @@ class ServingEngine:
             device = context.devices[0]
         try:
             self._queue = context.create_queue(
-                device, out_of_order=True, workers=max(1, dag_workers))
+                device, out_of_order=True, workers=max(1, dag_workers),
+                fusion=fusion)
             self._kv_pool = context.pool_for(device, min_class=4096)
         except InvalidArgError:
             self._queue = CommandQueue(device, out_of_order=True,
-                                       workers=max(1, dag_workers))
+                                       workers=max(1, dag_workers),
+                                       fusion=fusion)
             self._kv_pool = BufferPool(device.allocator, min_class=4096)
 
         # paged KV accounting: page_bytes covers page_tokens tokens of
@@ -277,10 +279,13 @@ class ServingEngine:
         """What the dispatch DAG did since the last :meth:`generate` (or
         engine creation): event counts, wall time, summed busy time, and
         the overlap factor busy/wall (>1 means prefill overlapped
-        decode)."""
+        decode).  ``fusion`` nests the dispatch queue's DAG-fusion
+        counters (docs/runtime.md §Kernel fusion) — decode-step kernel
+        chains enqueued through the queue fuse like any other."""
         out = dict(self._dag_accum)
         out["overlap"] = (out["busy_s"] / out["wall_s"]) \
             if out["wall_s"] > 0 else 1.0
+        out["fusion"] = self._queue.dag_stats()
         return out
 
     # ======================================================================

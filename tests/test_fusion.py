@@ -1,0 +1,462 @@
+"""DAG-level kernel fusion tests (docs/runtime.md §Kernel fusion,
+docs/compiler.md §Fusion).
+
+Covers the fusion acceptance contract: a golden canonical-IR snapshot of
+the stitched rmsnorm→residual→quantize chain, legality negatives (each
+must leave the DAG unfused), bitwise identity of fused vs unfused
+execution on all three targets and under 1-vs-2-device co-execution,
+intermediate-buffer elision (lazy pooled intermediates never
+materialize), fused-tier caching (``plan_builds`` stable after the first
+launch), event identity/profiling mirroring, the ``REPRO_FUSE=0``
+kill-switch, and ``dag_stats()`` accounting.
+
+Regenerate the golden after intentional stitcher changes:
+
+  REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_fusion.py
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import canonical_ir, ir_hash
+from repro.core.cache import CompilationCache
+from repro.core.examples import (build_quantize, build_residual_add,
+                                 build_rmsnorm_ew)
+from repro.core.fusion import (ChainEdge, FusionError, build_fused_spec,
+                               fusible_kernel, stitch_functions)
+from repro.core.passes import kernel_fusibility
+from repro.runtime.context import Context
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+
+N = 256
+LSZ = (64,)
+
+CHAIN_EDGES = [ChainEdge(0, 1, "y", "y", True),
+               ChainEdge(1, 2, "z", "z", True)]
+CHAIN_ALIASES = [[(0, "y"), (1, "y")], [(1, "z"), (2, "z")]]
+CHAIN_BUILDERS = [build_rmsnorm_ew, build_residual_add, build_quantize]
+
+
+def _host_inputs(n=N, seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(n).astype(np.float32),
+            rng.standard_normal(n).astype(np.float32),
+            rng.standard_normal(n).astype(np.float32))
+
+
+def _run_chain(ctx, fusion, n=N, target=None, queue_kwargs=None,
+               return_queue=False):
+    """Enqueue the rmsnorm→residual→quantize chain on a fresh queue and
+    return (q_result, y, z, queue-or-None)."""
+    xh, wh, rh = _host_inputs(n)
+    dev = ctx.devices[0]
+    prog = ctx.create_program(*CHAIN_BUILDERS)
+    bufs = {nm: ctx.create_buffer(n) for nm in "xwryzq"}
+    queue = ctx.create_queue(dev, fusion=fusion, **(queue_kwargs or {}))
+    queue.enqueue_write_buffer(bufs["x"], xh)
+    queue.enqueue_write_buffer(bufs["w"], wh)
+    queue.enqueue_write_buffer(bufs["r"], rh)
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+    k3 = prog.create_kernel("quantize")
+    k3.set_args(z=bufs["z"], q=bufs["q"], scale=16.0)
+    events = [queue.enqueue_nd_range(k, (n,), LSZ, target=target)
+              for k in (k1, k2, k3)]
+    queue.finish()
+    out = np.array(bufs["q"].data)
+    if return_queue:
+        return out, bufs, events, queue
+    return out, bufs, events, None
+
+
+# --------------------------------------------------------------------------
+# fusibility facts (core/passes.py)
+# --------------------------------------------------------------------------
+
+def test_chain_kernels_are_elementwise():
+    for build in CHAIN_BUILDERS:
+        facts = kernel_fusibility(build())
+        assert facts.elementwise, facts.reasons
+        assert fusible_kernel(build())
+        for fp in facts.footprints:
+            assert fp.gid_only
+
+
+def test_non_elementwise_kernels_are_rejected():
+    from repro.core.examples import build_condbar, build_dct, build_reduce2
+    for build, why in ((build_reduce2, "barrier+loop+local"),
+                       (build_condbar, "user barrier"),
+                       (build_dct, "loop")):
+        facts = kernel_fusibility(build())
+        assert not facts.elementwise, why
+        assert facts.reasons, why
+
+
+def test_footprints_count_loads_and_stores():
+    facts = kernel_fusibility(build_rmsnorm_ew())
+    y = facts.footprint("y")
+    assert y.stores == 1 and y.loads == 0
+    x = facts.footprint("x")
+    assert x.loads == 1 and x.stores == 0
+    assert facts.footprint("nope") is None
+
+
+# --------------------------------------------------------------------------
+# IR stitching (core/fusion.py) + golden snapshot
+# --------------------------------------------------------------------------
+
+def test_golden_stitched_chain_ir():
+    fused, _, _ = stitch_functions([b() for b in CHAIN_BUILDERS],
+                                   CHAIN_EDGES, CHAIN_ALIASES)
+    got = canonical_ir(fused) + "\n"
+    path = os.path.join(GOLDEN_DIR, "fused_chain.txt")
+    if os.environ.get("REPRO_UPDATE_GOLDEN"):
+        with open(path, "w") as f:
+            f.write(got)
+        pytest.skip(f"golden updated: {path}")
+    assert os.path.exists(path), \
+        f"golden file missing; run with REPRO_UPDATE_GOLDEN=1 ({path})"
+    with open(path) as f:
+        want = f.read()
+    assert got == want, (
+        "stitched-chain canonical IR drifted; if the stitcher change is "
+        "intentional, regenerate with REPRO_UPDATE_GOLDEN=1")
+
+
+def test_stitch_is_deterministic():
+    f1, _, _ = stitch_functions([b() for b in CHAIN_BUILDERS],
+                                CHAIN_EDGES, CHAIN_ALIASES)
+    f2, _, _ = stitch_functions([b() for b in CHAIN_BUILDERS],
+                                CHAIN_EDGES, CHAIN_ALIASES)
+    assert ir_hash(f1) == ir_hash(f2)
+
+
+def test_stitch_elides_intermediate_params_and_stores():
+    fused, bmap, smap = stitch_functions([b() for b in CHAIN_BUILDERS],
+                                         CHAIN_EDGES, CHAIN_ALIASES)
+    names = [a.name for a in fused.buffer_args]
+    # elided intermediates are gone from the signature
+    assert names == ["k0_x", "k0_w", "k1_r", "k2_q"]
+    # exactly one store remains (the final output)
+    stores = [i for blk in fused.blocks.values() for i in blk.instrs
+              if i.op == "store"]
+    assert len(stores) == 1 and stores[0].attrs["buffer"] == "k2_q"
+    assert (0, "y") not in bmap and (1, "z") not in bmap
+    assert smap == {(0, "inv_rms"): "k0_inv_rms", (2, "scale"): "k2_scale"}
+
+
+def test_stitch_keeps_store_for_non_elided_edge():
+    edges = [ChainEdge(0, 1, "y", "y", False)]
+    fused, bmap, _ = stitch_functions(
+        [build_rmsnorm_ew(), build_residual_add()], edges,
+        [[(0, "y"), (1, "y")]])
+    assert (0, "y") in bmap        # still a fused parameter
+    stores = [i.attrs["buffer"] for blk in fused.blocks.values()
+              for i in blk.instrs if i.op == "store"]
+    assert sorted(stores) == ["k0_y", "k1_z"]
+
+
+def test_stitch_rejects_non_elementwise_segment():
+    from repro.core.examples import build_reduce2
+    with pytest.raises(FusionError):
+        stitch_functions([build_rmsnorm_ew(), build_reduce2()],
+                         [ChainEdge(0, 1, "y", "inp", False)],
+                         [[(0, "y"), (1, "inp")]])
+
+
+def test_fused_spec_caches_by_topology():
+    cache = CompilationCache()
+    args = (CHAIN_BUILDERS, ["a", "b", "c"], CHAIN_EDGES, CHAIN_ALIASES)
+    s1 = build_fused_spec(*args, cache=cache)
+    s2 = build_fused_spec(*args, cache=cache)
+    assert s1 is s2
+    assert cache.stats.fused_builds == 1
+    assert cache.stats.fused_hits == 1
+    assert cache.fused_cache_size() == 1
+    # a different topology (no elision) is a distinct entry
+    edges2 = [ChainEdge(e.producer, e.consumer, e.prod_arg, e.cons_arg,
+                        False) for e in CHAIN_EDGES]
+    s3 = build_fused_spec(CHAIN_BUILDERS, ["a", "b", "c"], edges2,
+                          CHAIN_ALIASES, cache=cache)
+    assert s3 is not s1
+    assert cache.fused_cache_size() == 2
+
+
+# --------------------------------------------------------------------------
+# queue rewrite: identity, elision, caching, events
+# --------------------------------------------------------------------------
+
+def test_fused_bitwise_identical_all_targets():
+    ctx = Context()
+    for target in (None, "loop", "vector", "pallas"):
+        q_off, _, _, _ = _run_chain(ctx, "off", target=target)
+        q_on, _, _, _ = _run_chain(ctx, "flush", target=target)
+        assert np.array_equal(q_off, q_on), f"target={target}"
+
+
+def test_fusion_elides_pooled_intermediates():
+    ctx = Context()
+    q, bufs, _, queue = _run_chain(ctx, "flush", return_queue=True)
+    assert not bufs["y"].materialized
+    assert not bufs["z"].materialized
+    stats = queue.dag_stats()
+    assert stats["fused_chains"] == 1
+    assert stats["commands_eliminated"] == 2
+    # one avoided store + one avoided load per elided intermediate
+    assert stats["bytes_elided"] == 2 * 2 * N * 4
+    assert queue.stats["launches"] == 1
+
+
+def test_unfused_queue_reports_zero_stats():
+    ctx = Context()
+    _, bufs, _, queue = _run_chain(ctx, "off", return_queue=True)
+    assert queue.dag_stats() == {"mode": "off", "fused_chains": 0,
+                                 "commands_eliminated": 0,
+                                 "bytes_elided": 0}
+    assert bufs["y"].materialized      # chain ran unfused, wrote through
+    assert queue.stats["launches"] == 3
+
+
+def test_repro_fuse_kill_switch(monkeypatch):
+    ctx = Context()
+    monkeypatch.setenv("REPRO_FUSE", "0")
+    q_killed, bufs, _, queue = _run_chain(ctx, "flush", return_queue=True)
+    assert queue.dag_stats()["fused_chains"] == 0
+    assert queue.stats["launches"] == 3
+    assert bufs["y"].materialized
+    monkeypatch.delenv("REPRO_FUSE")
+    q_fused, _, _, _ = _run_chain(ctx, "flush")
+    assert np.array_equal(q_killed, q_fused)
+
+
+def test_original_events_complete_and_share_profiling():
+    ctx = Context()
+    _, _, events, queue = _run_chain(ctx, "flush", return_queue=True)
+    assert all(e.succeeded for e in events)
+    # mirrored from one fused command: identical profiling counters
+    assert len({e.start_ns for e in events}) == 1
+    assert len({e.end_ns for e in events}) == 1
+    assert queue.dag_stats()["fused_chains"] == 1
+
+
+def test_fused_event_provenance_names_constituents():
+    ctx = Context()
+    dev = ctx.devices[0]
+    prog = ctx.create_program(*CHAIN_BUILDERS)
+    bufs = {nm: ctx.create_buffer(N) for nm in "xwryzq"}
+    queue = ctx.create_queue(dev, fusion="flush")
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+    e1 = queue.enqueue_nd_range(k1, (N,), LSZ)
+    e2 = queue.enqueue_nd_range(k2, (N,), LSZ)
+    queue.flush()
+    fused = [e for e in queue.events() if e.fused_from]
+    assert len(fused) == 1
+    assert fused[0].fused_from == [e1, e2]
+    assert "rmsnorm_ew" in fused[0].name
+    assert "residual_add" in fused[0].name
+    queue.finish()
+
+
+def test_repeat_launch_hits_fused_tier_and_plan_cache():
+    ctx = Context()
+    dev = ctx.devices[0]
+    _run_chain(ctx, "flush")
+    cstats = dev.compile_cache.stats
+    assert cstats.fused_builds >= 1
+    builds0 = cstats.fused_builds
+    plans0 = cstats.plan_builds
+    q1, _, _, _ = _run_chain(ctx, "flush")
+    q2, _, _, _ = _run_chain(ctx, "flush")
+    assert np.array_equal(q1, q2)
+    assert cstats.fused_builds == builds0      # stitched exactly once
+    assert cstats.plan_builds == plans0        # planned exactly once
+    assert cstats.fused_hits >= 2
+
+
+def test_eager_mode_warms_fused_tier_at_enqueue():
+    ctx = Context()
+    dev = ctx.devices[0]
+    prog = ctx.create_program(*CHAIN_BUILDERS)
+    bufs = {nm: ctx.create_buffer(N) for nm in "xwryzq"}
+    queue = ctx.create_queue(dev, fusion="eager")
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+    k3 = prog.create_kernel("quantize")
+    k3.set_args(z=bufs["z"], q=bufs["q"], scale=16.0)
+    stats = dev.compile_cache.stats
+    before = stats.fused_hits + stats.fused_misses
+    for k in (k1, k2, k3):
+        queue.enqueue_nd_range(k, (N,), LSZ)
+    # the fused tier was consulted during the enqueue window, before any
+    # flush (a warm process sees hits; a cold one sees misses + builds)
+    assert stats.fused_hits + stats.fused_misses > before
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 1
+
+
+def test_invalid_fusion_mode_rejected():
+    from repro.core.errors import InvalidArgError
+    ctx = Context()
+    with pytest.raises(InvalidArgError, match="fusion mode"):
+        ctx.create_queue(ctx.devices[0], fusion="sometimes")
+
+
+# --------------------------------------------------------------------------
+# legality negatives: each scenario must leave the DAG unfused
+# --------------------------------------------------------------------------
+
+def _two_kernel_setup(ctx, n=N):
+    prog = ctx.create_program(build_rmsnorm_ew, build_residual_add)
+    bufs = {nm: ctx.create_buffer(n) for nm in "xwryz"}
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+    return prog, bufs, k1, k2
+
+
+def test_no_fusion_across_queue_barrier():
+    ctx = Context()
+    _, bufs, k1, k2 = _two_kernel_setup(ctx)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), LSZ)
+    queue.enqueue_barrier()
+    queue.enqueue_nd_range(k2, (N,), LSZ)
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+    assert queue.stats["launches"] == 2
+
+
+def test_no_fusion_with_mismatched_ndrange():
+    ctx = Context()
+    _, bufs, k1, k2 = _two_kernel_setup(ctx)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), LSZ)
+    queue.enqueue_nd_range(k2, (N // 2,), LSZ)   # different global size
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+    assert queue.stats["launches"] == 2
+
+
+def test_no_fusion_with_mismatched_local_size():
+    ctx = Context()
+    _, bufs, k1, k2 = _two_kernel_setup(ctx)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), (64,))
+    queue.enqueue_nd_range(k2, (N,), (32,))
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+
+
+def test_no_fusion_for_non_elementwise_kernel():
+    from repro.core.examples import build_dct
+    ctx = Context()
+    prog = ctx.create_program(build_rmsnorm_ew, build_dct)
+    bufs = {nm: ctx.create_buffer(N) for nm in "xwy"}
+    coef = ctx.create_buffer(N)
+    out = ctx.create_buffer(N)
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("dct")
+    k2.set_args(inp=bufs["y"], coef=coef, out=out, width=1)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), LSZ)
+    queue.enqueue_nd_range(k2, (N,), LSZ)
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+
+
+def test_externally_observed_intermediate_is_not_elided():
+    """A read of the intermediate in the same window forbids *elision*
+    (the chain may still fuse — the store stays and writes through)."""
+    ctx = Context()
+    _, bufs, k1, k2 = _two_kernel_setup(ctx)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    xh, wh, rh = _host_inputs()
+    queue.enqueue_write_buffer(bufs["x"], xh)
+    queue.enqueue_write_buffer(bufs["w"], wh)
+    queue.enqueue_write_buffer(bufs["r"], rh)
+    e1 = queue.enqueue_nd_range(k1, (N,), LSZ)
+    e2 = queue.enqueue_nd_range(k2, (N,), LSZ)
+    y_out = np.zeros(N, np.float32)
+    queue.enqueue_read_buffer(bufs["y"], y_out, wait_for=[e2])
+    queue.finish()
+    stats = queue.dag_stats()
+    assert stats["fused_chains"] == 1          # fusion is still legal
+    assert stats["bytes_elided"] == 0          # but elision is not
+    assert bufs["y"].materialized
+    # the observed intermediate holds exactly the unfused value
+    expected = (xh * wh * np.float32(0.5)).astype(np.float32)
+    assert np.array_equal(y_out, expected)
+
+
+def test_sub_buffer_aliased_intermediate_blocks_fusion():
+    from repro.runtime.memory import create_sub_buffer
+    ctx = Context()
+    prog = ctx.create_program(build_rmsnorm_ew, build_residual_add)
+    bufs = {nm: ctx.create_buffer(N) for nm in "xwryz"}
+    _ = bufs["y"].data                 # materialize so a view is legal
+    y_view = create_sub_buffer(bufs["y"], 0, N * 4)
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("residual_add")
+    k2.set_args(y=y_view, r=bufs["r"], z=bufs["z"])  # aliased view
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), LSZ)
+    queue.enqueue_nd_range(k2, (N,), LSZ)
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+    assert queue.stats["launches"] == 2
+
+
+def test_no_fusion_when_consumer_does_not_read_producer_output():
+    """Two independent elementwise kernels (no chained buffer) must not
+    fuse: there is no producer→consumer edge."""
+    ctx = Context()
+    prog = ctx.create_program(build_rmsnorm_ew)
+    a = {nm: ctx.create_buffer(N) for nm in "xwy"}
+    b = {nm: ctx.create_buffer(N) for nm in "xwy"}
+    k1 = prog.create_kernel("rmsnorm_ew")
+    k1.set_args(x=a["x"], w=a["w"], y=a["y"], inv_rms=0.5)
+    k2 = prog.create_kernel("rmsnorm_ew")
+    k2.set_args(x=b["x"], w=b["w"], y=b["y"], inv_rms=0.5)
+    queue = ctx.create_queue(ctx.devices[0], fusion="flush")
+    queue.enqueue_nd_range(k1, (N,), LSZ)
+    queue.enqueue_nd_range(k2, (N,), LSZ)
+    queue.finish()
+    assert queue.dag_stats()["fused_chains"] == 0
+
+
+# --------------------------------------------------------------------------
+# co-execution conformance: fused chain, 1 vs 2 devices
+# --------------------------------------------------------------------------
+
+def test_fused_chain_coexec_two_devices_bitwise():
+    ctx = Context()
+    q_ref, _, _, _ = _run_chain(ctx, "off")
+    cache = ctx.devices[0].compile_cache
+    spec = build_fused_spec(
+        CHAIN_BUILDERS, ["rmsnorm_ew", "residual_add", "quantize"],
+        CHAIN_EDGES, CHAIN_ALIASES, cache=cache)
+    xh, wh, rh = _host_inputs()
+    kern = spec.program.create_kernel(spec.kernel_name)
+    kern.set_args(k0_x=xh, k0_w=wh, k1_r=rh,
+                  k2_q=np.zeros(N, np.float32),
+                  k0_inv_rms=0.5, k2_scale=16.0)
+    co1 = ctx.create_co_executor(ctx.devices[:1])
+    out1 = co1.launch(kern, (N,), LSZ)["k2_q"]
+    devs2 = ctx.platform.co_devices(2)
+    co2 = ctx.create_co_executor(devs2)
+    out2 = co2.launch(kern.clone(), (N,), LSZ)["k2_q"]
+    assert np.array_equal(np.asarray(out1), q_ref)
+    assert np.array_equal(np.asarray(out1), np.asarray(out2))

@@ -217,9 +217,15 @@ def test_create_buffer_validation():
 
 def test_context_pooled_buffers_and_membership():
     ctx = Context()
+    # pooled context buffers are lazy (fusion elision, docs/memory.md):
+    # the chunk only hits the pool on first real use
     b1 = ctx.create_buffer(1024, "float32")
+    assert not b1.materialized
+    b1.data[0] = 1.0                          # first real use: materializes
+    assert b1.materialized
     b1.release()
     b2 = ctx.create_buffer(1024, "float32")   # same size class: pool hit
+    _ = b2.data
     stats = ctx.pool_stats()[ctx.devices[0].info.name]
     assert stats["hits"] >= 1
     b2.release()

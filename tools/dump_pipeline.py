@@ -12,8 +12,11 @@ embeds this output; re-run after compiler changes:
 """
 
 from repro.core import canonical_ir
-from repro.core.examples import build_condbar, build_reduce2
-from repro.core.passes import PassManager
+from repro.core.examples import (build_condbar, build_quantize,
+                                 build_reduce2, build_residual_add,
+                                 build_rmsnorm_ew)
+from repro.core.fusion import ChainEdge, stitch_functions
+from repro.core.passes import PassManager, kernel_fusibility
 
 
 def run_and_dump(fn, verbose_cfg: bool = True) -> None:
@@ -62,6 +65,25 @@ def run_and_dump(fn, verbose_cfg: bool = True) -> None:
         print(f"  {name:22s} {dt * 1e3:7.3f}")
 
 
+def dump_fusion() -> None:
+    """Stitch the rmsnorm→residual→quantize chain and print the fused
+    IR embedded in docs/compiler.md §Fusion."""
+    builders = [build_rmsnorm_ew, build_residual_add, build_quantize]
+    fns = [b() for b in builders]
+    for fn in fns:
+        facts = kernel_fusibility(fn)
+        fps = ", ".join(f"{fp.name}(loads={fp.loads},stores={fp.stores})"
+                        for fp in facts.footprints)
+        print(f"segment {fn.name}: elementwise={facts.elementwise} [{fps}]")
+    edges = [ChainEdge(0, 1, "y", "y", True), ChainEdge(1, 2, "z", "z", True)]
+    aliases = [[(0, "y"), (1, "y")], [(1, "z"), (2, "z")]]
+    fused, bmap, smap = stitch_functions(fns, edges, aliases)
+    print("\n### stitched chain (both intermediates elided)\n")
+    print(canonical_ir(fused))
+    print(f"buffer map: {sorted(bmap.items())}")
+    print(f"scalar map: {sorted(smap.items())}")
+
+
 def main() -> None:
     print("=" * 72)
     print("tree-reduction kernel (b-loop, §4.5)")
@@ -72,6 +94,11 @@ def main() -> None:
     print("conditional-barrier kernel (tail duplication, Alg. 2)")
     print("=" * 72)
     run_and_dump(build_condbar())
+
+    print("\n" + "=" * 72)
+    print("DAG-fused elementwise chain (docs/compiler.md §Fusion)")
+    print("=" * 72)
+    dump_fusion()
 
 
 if __name__ == "__main__":
