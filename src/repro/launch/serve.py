@@ -38,6 +38,9 @@ def main(argv=None):
                     default="continuous")
     ap.add_argument("--arrival-every", type=int, default=1,
                     help="submit one request every N scheduler steps")
+    ap.add_argument("--trace", metavar="OUT.JSON", default=None,
+                    help="export the run's event DAG as Chrome-trace "
+                         "JSON (open in chrome://tracing, docs/mesh.md)")
     args = ap.parse_args(argv)
 
     cfg = configs.get_smoke(args.arch) if args.smoke \
@@ -70,13 +73,23 @@ def main(argv=None):
     done = []
     pending = list(reqs)
     # staggered arrivals: one request every --arrival-every steps, then
-    # pump the scheduler until the queue drains
-    while pending or eng.scheduler_stats["waiting"] or \
-            eng.scheduler_stats["running"]:
-        if pending and eng.current_step % max(1, args.arrival_every) == 0:
-            eng.submit(pending.pop(0))
-        done.extend(eng.step())
+    # pump the scheduler until the queue drains — optionally recording
+    # every DAG command (plus a kv_pages_live counter track) as a
+    # Chrome trace
+    with ctx.trace() as tr:
+        while pending or eng.scheduler_stats["waiting"] or \
+                eng.scheduler_stats["running"]:
+            if pending and eng.current_step % max(1, args.arrival_every) == 0:
+                eng.submit(pending.pop(0))
+            done.extend(eng.step())
+            if args.trace:
+                tr.counter("kv_pages_live", eng.kv_stats["pages_live"],
+                           process="serve")
     dt = time.time() - t0
+    if args.trace:
+        doc = tr.export(args.trace)
+        print(f"trace: {len(doc['traceEvents'])} events -> {args.trace} "
+              f"(load in chrome://tracing)")
 
     total_toks = sum(len(r.out_tokens) for r in done if r.done)
     print(f"served {len(done)} requests, {total_toks} tokens "

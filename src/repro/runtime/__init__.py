@@ -10,6 +10,7 @@ Layering (docs/runtime.md, docs/memory.md, docs/host_api.md):
   platform.py   — Platform / Device / Buffer (clGetPlatformIDs et al.)
   bufalloc.py   — the pocl buffer allocator + span-granular residency
   memory.py     — sub-buffers, zero-copy map/unmap, size-class pooling
+  trace.py      — ChromeTrace: event-DAG export for chrome://tracing
 """
 
 from ..core.errors import (BuildError, InvalidArgError, InvalidBufferError,
@@ -28,6 +29,7 @@ from .queue import CommandQueue
 from .scheduler import (AdaptiveSplitter, CoExecStats, CoExecutor,
                         SharedBuffer, ThroughputModel, device_class,
                         split_groups)
+from .trace import ChromeTrace, validate_trace
 
 __all__ = [
     "Context", "default_context", "Program", "Kernel",
@@ -44,4 +46,5 @@ __all__ = [
     "MapError", "MappedRegion", "SubBuffer", "create_sub_buffer",
     "BufferPool", "MAP_READ", "MAP_WRITE", "MAP_READ_WRITE",
     "MAP_WRITE_INVALIDATE",
+    "ChromeTrace", "validate_trace",
 ]

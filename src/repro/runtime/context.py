@@ -29,9 +29,10 @@ previously each device's private cache rebuilt the plan.
 
 from __future__ import annotations
 
+import contextlib
 import threading
 import weakref
-from typing import Callable, Dict, List, Optional, Sequence
+from typing import Callable, Dict, Iterator, List, Optional, Sequence
 
 import numpy as np
 
@@ -45,6 +46,7 @@ from .platform import (Buffer, Device, Platform, create_buffer,
                        default_platform)
 from .queue import CommandQueue
 from .scheduler import CoExecutor
+from .trace import ChromeTrace
 
 __all__ = [
     "Context", "default_context",
@@ -99,6 +101,9 @@ class Context:
         # the context (often the immortal default_context) must never
         # pin a dropped queue's worker threads against GC
         self._queues: "weakref.WeakSet[CommandQueue]" = weakref.WeakSet()
+        # active ChromeTrace while inside a `with ctx.trace()` window:
+        # queues created during the window attach themselves on creation
+        self._trace: Optional[ChromeTrace] = None
         self._lock = threading.Lock()
 
     # -- device handling ---------------------------------------------------------
@@ -177,7 +182,38 @@ class Context:
                          workers=workers, fusion=fusion)
         with self._lock:
             self._queues.add(q)
+            tr = self._trace
+        if tr is not None:
+            tr.attach_queue(q)
         return q
+
+    @contextlib.contextmanager
+    def trace(self, tr: Optional[ChromeTrace] = None) \
+            -> Iterator[ChromeTrace]:
+        """Record every command on this context's queues as a Chrome
+        trace (docs/mesh.md §Observability)::
+
+            with ctx.trace() as tr:
+                q.enqueue_nd_range(k, (1024,), (64,))
+                q.finish()
+            tr.export("out.json")       # load in chrome://tracing
+
+        Existing queues and queues created inside the window are both
+        attached; on exit collection stops but the recorded events stay
+        on ``tr`` for export.  Pass a :class:`ChromeTrace` to accumulate
+        several windows into one file."""
+        tr = tr or ChromeTrace()
+        with self._lock:
+            self._trace = tr
+            queues = list(self._queues)
+        for q in queues:
+            tr.attach_queue(q)
+        try:
+            yield tr
+        finally:
+            with self._lock:
+                self._trace = None
+            tr.detach_all()
 
     def create_co_executor(self, devices: Optional[Sequence[Device]] = None,
                            chunks_per_device: int = 4,

@@ -183,9 +183,15 @@ class CommandQueue:
         self.device = device
         self.out_of_order = out_of_order
         self.fusion = fusion
+        #: optional live event subscriber (duck-typed ``on_command(event,
+        #: deps, queue)``) — the Chrome-trace collector
+        #: (:class:`~repro.runtime.trace.ChromeTrace`) attaches here;
+        #: ``None`` keeps the enqueue path at zero extra cost
+        self.trace_sink = None
         self._pool = ThreadPoolExecutor(max_workers=workers)
         self._lock = threading.Lock()
         self._pending: List[_Command] = []     # enqueued, not yet flushed
+        self._armed: set = set()               # flushed, deps unresolved
         self._issued: List[Event] = []         # all live events (for finish)
         self._last_event: Optional[Event] = None
         self._ooo_barrier: Optional[Event] = None
@@ -255,6 +261,9 @@ class CommandQueue:
             self._pending.append(cmd)
             self._last_event = ev
             self._issued.append(ev)
+        sink = self.trace_sink
+        if sink is not None:
+            sink.on_command(ev, cmd.deps, self)
         if self.fusion == "eager" and isinstance(meta, _KernelLaunch) \
                 and _fusion_enabled():
             self._warm_eager()
@@ -725,6 +734,9 @@ class CommandQueue:
         # fused node's full wait list (and can never reach back into the
         # chain — no cycles through mirrored completions)
         fused_cmd = _Command(run, fev, chain[0].deps)
+        sink = self.trace_sink
+        if sink is not None:
+            sink.on_command(fev, fused_cmd.deps, self)
         with self._lock:
             self._fused_chains += 1
             self._commands_eliminated += len(chain) - 1
@@ -825,8 +837,14 @@ class CommandQueue:
         """Register dependency callbacks; submit if already ready."""
         cmd.remaining = len(cmd.deps)
         if cmd.remaining == 0:
+            with self._lock:
+                cmd.submitted = True
             self._submit(cmd)
             return
+        with self._lock:
+            # tracked so cancel_pending can abandon a command whose
+            # dependencies will never resolve (e.g. a lost device)
+            self._armed.add(cmd)
         for dep in cmd.deps:
             # fires immediately if the dep is already terminal
             dep.add_callback(lambda ev, c=cmd: self._dep_resolved(c, ev))
@@ -839,14 +857,19 @@ class CommandQueue:
             ready = cmd.remaining == 0 and not cmd.submitted
             if ready:
                 cmd.submitted = True
+                self._armed.discard(cmd)
         if ready:
             self._submit(cmd)
 
     def _submit(self, cmd: _Command) -> None:
+        if cmd.event.done:
+            return                # cancelled while waiting on deps
         cmd.event._transition(EventStatus.SUBMITTED)
         self._pool.submit(self._run_command, cmd)
 
     def _run_command(self, cmd: _Command) -> None:
+        if cmd.event.done:
+            return                # cancelled between submit and run
         if cmd.failed_dep is not None:
             cmd.event.fail(DependencyError(
                 f"command {cmd.event.name!r} abandoned: dependency "
@@ -859,6 +882,34 @@ class CommandQueue:
             cmd.event.fail(e)
         else:
             cmd.event.complete()
+
+    def cancel_pending(self, error: Optional[BaseException] = None
+                       ) -> List[Event]:
+        """Abandon every command that cannot have started running: the
+        still-unflushed enqueue window plus armed commands whose wait
+        lists are unresolved.  Their events fail with ``error`` (default
+        a :class:`~repro.runtime.events.DependencyError`) without the
+        command functions ever executing, so dependents fail typed and
+        ``finish(timeout)`` observes them as *done*, never as stuck.
+
+        This is the device-loss path: when a serving replica dies, work
+        migrated to a sibling must not leave ghost commands on the
+        losing queue that a later ``finish(timeout)`` names as stuck
+        (tests/test_events.py has the regression).  Returns the
+        cancelled events.  Commands already submitted to a worker are
+        not cancellable and run (or fail) normally."""
+        with self._lock:
+            pending, self._pending = self._pending, []
+            waiting = [c for c in self._armed
+                       if not c.submitted and not c.event.done]
+            for c in waiting:
+                c.submitted = True     # dep callbacks must not submit
+            self._armed.difference_update(waiting)
+        victims = pending + waiting
+        for c in victims:
+            c.event.fail(error if error is not None else DependencyError(
+                f"command {c.event.name!r} cancelled before execution"))
+        return [c.event for c in victims]
 
     def finish(self, timeout: Optional[float] = None) -> None:
         """clFinish: flush and wait for completion of *every* issued

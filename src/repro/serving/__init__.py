@@ -2,10 +2,14 @@
 granularity over fixed decode slots — submit()/step()/drain() admission,
 per-step slot refill, paged KV from the context BufferPool, preemption
 on OOM — dispatching each step's prefills and decode through the
-runtime's event DAG (docs/serving.md)."""
+runtime's event DAG (docs/serving.md).  `ServingMesh` replicates the
+engine N ways behind a throughput-weighted router with fault-driven
+request migration (docs/mesh.md)."""
 
 from .engine import Request, RequestState, ServingEngine
 from .executor import BatchExecutor, JaxExecutor, StubExecutor
+from .mesh import Replica, ReplicaState, ServingMesh
 
 __all__ = ["ServingEngine", "Request", "RequestState",
-           "BatchExecutor", "JaxExecutor", "StubExecutor"]
+           "BatchExecutor", "JaxExecutor", "StubExecutor",
+           "ServingMesh", "Replica", "ReplicaState"]

@@ -227,6 +227,11 @@ class ServingEngine:
         self._req_ids = itertools.count()
         self._step_idx = 0
         self._faults: Dict[int, Dict[str, Any]] = {}
+        # replica-level device loss (docs/serving.md §Failure handling):
+        # _device_fault is the armed error (fires through the next DAG
+        # round), device_lost the terminal state once it has fired
+        self._device_fault: Optional[BaseException] = None
+        self.device_lost: Optional[BaseException] = None
         self._sched = {"submitted": 0, "completed": 0, "failed": 0,
                        "preemptions": 0, "evictions": 0, "steps": 0,
                        "pages_allocated": 0, "pages_freed": 0}
@@ -291,13 +296,19 @@ class ServingEngine:
     # ======================================================================
     # submission
     # ======================================================================
-    def submit(self, request: Request) -> int:
+    def submit(self, request: Request, front: bool = False) -> int:
         """Admit a request to the waiting queue; returns its id.
 
         Validates the prompt against slot capacity — a prompt that can
         never fit (``len(prompt) >= max_seq``) is rejected with a typed
         :class:`~repro.core.errors.InvalidArgError` instead of wedging
-        the queue."""
+        the queue.  ``front=True`` admits at the *front* of the queue
+        (the serving mesh requeues requests migrated off a lost replica
+        this way, so they restart before later arrivals).  An engine
+        whose device was lost re-raises the typed ``device_lost`` error
+        instead of accepting work it can never run."""
+        if self.device_lost is not None:
+            raise self.device_lost
         plen = int(len(request.prompt))
         if plen < 1:
             raise InvalidArgError("empty prompt")
@@ -313,19 +324,50 @@ class ServingEngine:
         request.submit_step = self._step_idx
         request.finish_step = -1
         self._sched["submitted"] += 1
-        self._waiting.append(request)
+        if front:
+            self._waiting.appendleft(request)
+        else:
+            self._waiting.append(request)
         return request.id
 
-    def inject_fault(self, request: Request, stage: str = "decode",
+    def inject_fault(self, request: Optional[Request] = None,
+                     stage: str = "decode",
                      error: Optional[BaseException] = None) -> None:
-        """Arm a device-side failure for ``request`` (test/chaos hook,
-        ROADMAP item 5).  ``stage="prefill"`` makes the request's prefill
-        command raise; ``stage="decode"`` enqueues a failing DAG command
-        attributed to the request on its next decode step.  The typed
-        error (default :class:`~repro.core.errors.DeviceLostError`)
-        surfaces on the request's ``error`` while siblings complete."""
+        """Arm a device-side failure (test/chaos hook, ROADMAP item 3).
+
+        Per-request stages (``request`` required): ``stage="prefill"``
+        makes the request's prefill command raise; ``stage="decode"``
+        enqueues a failing DAG command attributed to the request on its
+        next decode step.  The typed error (default
+        :class:`~repro.core.errors.DeviceLostError`) surfaces on the
+        request's ``error`` while siblings complete.
+
+        ``stage="device"`` (``request`` must be ``None``) arms a
+        *replica-level* device loss: during the next scheduler step
+        every command of the DAG round — staged prefills and the shared
+        decode — raises the error, so every resident request fails at
+        once with the same typed error object, pages drain to zero, the
+        queue's unflushed commands are cancelled, and the engine goes
+        terminal (``device_lost``).  Waiting requests are untouched —
+        the serving mesh (:mod:`repro.serving.mesh`) reclaims them with
+        :meth:`release_waiting` and requeues everything on a sibling."""
+        if stage == "device":
+            if request is not None:
+                raise InvalidArgError(
+                    "device-level loss takes the whole replica down; "
+                    "pass request=None (per-request faults are the "
+                    "prefill/decode stages)")
+            if error is None:
+                from repro.core.errors import DeviceLostError
+                error = DeviceLostError("injected device loss")
+            self._device_fault = error
+            return
         if stage not in ("prefill", "decode"):
             raise InvalidArgError(f"unknown fault stage {stage!r}")
+        if request is None:
+            raise InvalidArgError(
+                f"stage {stage!r} faults one request; pass it (device "
+                f"loss is stage='device')")
         if request.id < 0:
             raise InvalidArgError("submit the request before injecting "
                                   "a fault")
@@ -334,6 +376,15 @@ class ServingEngine:
             error = DeviceLostError(
                 f"injected {stage} fault for request {request.id}")
         self._faults[request.id] = {"stage": stage, "error": error}
+
+    def release_waiting(self) -> List[Request]:
+        """Hand back (and clear) the admission queue — the serving mesh
+        calls this after a device loss to migrate not-yet-started
+        requests to a sibling replica.  Requests stay in WAITING state
+        and carry no error; re-``submit`` re-initializes them."""
+        out = list(self._waiting)
+        self._waiting.clear()
+        return out
 
     # ======================================================================
     # KV paging
@@ -534,6 +585,10 @@ class ServingEngine:
         holder: Dict[str, Any] = {}
 
         def cmd():
+            if self._device_fault is not None:
+                # replica-level loss: every command of the round fails
+                # with the same typed error object (kill-during-prefill)
+                raise self._device_fault
             fault = self._faults.get(req.id)
             if fault is not None and fault["stage"] == "prefill":
                 self._faults.pop(req.id, None)
@@ -589,6 +644,10 @@ class ServingEngine:
                 occ[i] = True
 
             def decode_cmd():
+                if self._device_fault is not None:
+                    # replica-level loss mid-decode: the shared decode
+                    # command fails, taking every decoding row with it
+                    raise self._device_fault
                 st, out = self._exec.decode(self._state, toks, occ)
                 self._state = st
                 decode_holder["out"] = out
@@ -669,6 +728,8 @@ class ServingEngine:
         finished requests; (5) *same-step* refill of slots freed by
         eviction, so a newly-admitted request has its first token before
         the step returns."""
+        if self.device_lost is not None:
+            return []          # terminal: the mesh routes around us
         self._step_idx += 1
         self._sched["steps"] += 1
         t0 = time.perf_counter()
@@ -691,7 +752,7 @@ class ServingEngine:
         # (prefill + insert), repeated until slots or queue run dry
         if self.scheduler == "continuous":
             guard = 0
-            while self._waiting and \
+            while self._waiting and self._device_fault is None and \
                     any(s is None for s in self._slots) and \
                     guard <= 2 * self.B + len(self._waiting):
                 guard += 1
@@ -699,6 +760,19 @@ class ServingEngine:
                 if not staged:
                     break
                 self._run_round(staged, events, finished)
+
+        # an armed device loss fired through the round above: finalize.
+        # Any still-resident slot (e.g. admitted but never commanded this
+        # round) fails with the same typed error, the queue's unflushed
+        # commands are cancelled so finish(timeout) never reports work
+        # migrated to a sibling as "stuck", and the engine goes terminal.
+        if self._device_fault is not None:
+            err, self._device_fault = self._device_fault, None
+            self.device_lost = err
+            for i in range(self.B):
+                if self._slots[i] is not None:
+                    finished.append(self._fail_slot(i, err))
+            self._queue.cancel_pending(err)
 
         wall = time.perf_counter() - t0
         busy = sum((e.end_ns - e.start_ns) for e in events
@@ -715,6 +789,11 @@ class ServingEngine:
         done: List[Request] = []
         stalled = 0
         while self._waiting or any(s is not None for s in self._slots):
+            if self.device_lost is not None:
+                # a lost device can never drain its queue: surface the
+                # typed error instead of spinning (the mesh migrates the
+                # waiting requests before this can trigger)
+                raise self.device_lost
             if max_steps is not None and self._sched["steps"] >= max_steps:
                 break
             out = self.step()

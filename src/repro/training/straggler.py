@@ -55,6 +55,13 @@ class StragglerMonitor:
                 out.append(host)
         return out
 
+    def forget(self, host: str) -> None:
+        """Drop a host's history and flags — used when the host leaves
+        the mesh (dead replica) or finishes draining and rejoins healthy
+        (its stale slow samples must not re-flag it instantly)."""
+        self._times.pop(host, None)
+        self._flags.pop(host, None)
+
 
 def plan_elastic_mesh(n_healthy_chips: int, model_axis: int = 16,
                       chips_per_pod: int = 256) -> Optional[Tuple]:

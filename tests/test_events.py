@@ -113,6 +113,56 @@ def test_finish_timeout_reports_stuck_commands(plat):
     q.finish()
 
 
+def test_requeued_command_cancelled_not_reported_stuck(plat):
+    """Mesh-requeue race (docs/mesh.md §Failure ladder): a command whose
+    request migrated to a sibling replica is cancelled on the losing
+    queue — ``finish(timeout)`` must observe it as *failed typed*, fast,
+    never time out naming it as stuck."""
+    from repro.core.errors import DeviceLostError
+
+    dev = plat.get_devices()[0]
+    q = CommandQueue(dev, out_of_order=True)
+    gate = UserEvent("never-resolves")
+    ran = []
+    armed = q._enqueue("migrated:r7", lambda: ran.append(1), [gate])
+    q.flush()                       # armed, gated on the dead device
+    unflushed = q._enqueue("migrated:r8", lambda: ran.append(2), [])
+    lost = DeviceLostError("replica 0 lost")
+    victims = q.cancel_pending(lost)
+    assert armed in victims and unflushed in victims
+    assert armed.failed and armed.error is lost
+    assert unflushed.failed and unflushed.error is lost
+    t0 = time.perf_counter()
+    with pytest.raises(CommandError):   # failed typed — not RuntimeError
+        q.finish(timeout=30.0)
+    assert time.perf_counter() - t0 < 5.0   # returned, did not time out
+    assert ran == []                # cancelled commands never execute
+    gate.complete()                 # late resolution must not resubmit
+    q.finish()
+    assert ran == []
+
+
+def test_cancel_pending_spares_submitted_commands(plat):
+    """Only commands that cannot have started are cancellable; work
+    already on a worker runs to completion."""
+    dev = plat.get_devices()[0]
+    q = CommandQueue(dev, out_of_order=True)
+    started = threading.Event()
+    release = threading.Event()
+
+    def running():
+        started.set()
+        release.wait(5.0)
+
+    ev = q.enqueue_native(running, name="in-flight")
+    q.flush()
+    assert started.wait(5.0)
+    assert q.cancel_pending() == []     # nothing cancellable
+    release.set()
+    q.finish()
+    assert ev.succeeded
+
+
 # --------------------------------------------------------------------------
 # DAG ordering under out-of-order execution
 # --------------------------------------------------------------------------

@@ -1,0 +1,431 @@
+"""Stateful property harness for the replicated serving mesh.
+
+The PR-6 pattern (tests/test_serving_props.py) lifted one level: a
+:class:`MeshDriver` drives random interleavings of the mesh op
+vocabulary — submit, step, **replica kill**, **replica recovery**,
+**replica stall** — against a real :class:`~repro.serving.ServingMesh`
+(real engines, real event DAGs, real KV paging, real router) over
+per-replica deterministic :class:`~repro.serving.executor.StubExecutor`s
+under a *virtual clock*, so stalls cost no wall time.
+
+Invariants checked after every op and at teardown (docs/mesh.md):
+
+* every submitted request retires **exactly once** — finished or failed
+  typed, never dropped, never retired twice (migration requeues, it
+  does not retire);
+* a request is always in exactly one place: waiting/resident on exactly
+  one live replica, parked as an orphan, or retired;
+* token streams are **oracle prefixes** while running and bitwise equal
+  to ``StubExecutor.expected_tokens`` when finished — regardless of
+  which replica (or how many, after migrations) served them;
+* KV pages never leak: per-replica page accounting matches the resident
+  slots every step, and a DEAD replica's pages are zero *immediately*;
+* unhealthy replicas never receive new work: submits route to HEALTHY
+  replicas whenever one exists, and DEAD replicas hold no work;
+* all-replicas-dead surfaces the typed
+  :class:`~repro.core.errors.DeviceLostError` /
+  :class:`~repro.runtime.bufalloc.OutOfMemory` — never a hang.
+
+The seeded random walk always runs; the hypothesis
+:class:`MeshMachine` (under the ``ci``/``dev`` profiles from
+tests/conftest.py) adds minimized counterexamples where available.
+"""
+
+import itertools
+import random
+
+import numpy as np
+import pytest
+
+from repro.core.errors import DeviceLostError, ReproError
+from repro.runtime.bufalloc import OutOfMemory
+from repro.serving import (ReplicaState, Request, RequestState,
+                           ServingMesh, StubExecutor)
+from repro.training.straggler import StragglerConfig
+
+try:
+    from hypothesis import strategies as st
+    from hypothesis.stateful import (RuleBasedStateMachine, initialize,
+                                     invariant, rule)
+    HAVE_HYPOTHESIS = True
+except ImportError:               # plain tests below still run
+    HAVE_HYPOTHESIS = False
+
+REPLICAS = 3
+SLOTS = 2
+MAX_SEQ = 64
+PAGE_TOKENS = 4
+MAX_PROMPT = 8
+MAX_NEW = 12
+
+
+def virtual_clock(tick_s: float = 0.001):
+    """A deterministic monotone clock: every call advances one tick."""
+    counter = itertools.count()
+    return lambda: next(counter) * tick_s
+
+
+def make_mesh(n_replicas=REPLICAS, **kw):
+    kw.setdefault("straggler_cfg",
+                  StragglerConfig(window=6, slow_factor=3.0,
+                                  persist_steps=2))
+    kw.setdefault("timer", virtual_clock())
+    return ServingMesh(
+        n_replicas=n_replicas, batch_slots=SLOTS, max_seq=MAX_SEQ,
+        page_tokens=PAGE_TOKENS,
+        executor_factory=lambda i: StubExecutor(batch_slots=SLOTS,
+                                                max_seq=MAX_SEQ),
+        **kw)
+
+
+class MeshDriver:
+    """The machine body: a real mesh + the closed-form oracle.
+
+    Requests are tracked by *object identity* — engine-local ids are
+    reassigned when a request migrates to a sibling replica."""
+
+    def __init__(self, n_replicas=REPLICAS, **kw):
+        self.mesh = make_mesh(n_replicas, **kw)
+        self.requests = []        # every request ever submitted
+        self.retired = set()      # id(obj) observed terminal, once
+        self.allowed_errors = (DeviceLostError, OutOfMemory)
+
+    # -- ops -------------------------------------------------------------------
+    def submit(self, plen, max_new, seed):
+        rng = np.random.default_rng(seed)
+        r = Request(prompt=rng.integers(0, 500, plen).astype(np.int32),
+                    max_new_tokens=max_new)
+        states = {rep.index: rep.engine.scheduler_stats["waiting"]
+                  for rep in self.mesh.replicas}
+        self.mesh.submit(r)
+        # router contract: the request landed on a HEALTHY replica
+        # whenever one exists (unhealthy never receive new work)
+        healthy_exists = any(rep.state == ReplicaState.HEALTHY
+                             for rep in self.mesh.replicas)
+        for rep in self.mesh.replicas:
+            if rep.engine.scheduler_stats["waiting"] > \
+                    states[rep.index]:
+                assert rep.state != ReplicaState.DEAD
+                if healthy_exists:
+                    assert rep.state == ReplicaState.HEALTHY, \
+                        f"submit routed to {rep.state} replica"
+        self.requests.append(r)
+        return r
+
+    def step(self):
+        for r in self.mesh.step():
+            self._retire(r)
+
+    def kill(self, i, keep_one=True):
+        alive = self.mesh.alive()
+        if keep_one and len(alive) <= 1:
+            return
+        rep = alive[i % len(alive)]
+        self.mesh.kill_replica(rep.index)
+
+    def recover(self, i):
+        dead = [r for r in self.mesh.replicas
+                if r.state == ReplicaState.DEAD]
+        if dead:
+            self.mesh.recover_replica(dead[i % len(dead)].index)
+
+    def stall(self, i, seconds):
+        rep = self.mesh.replicas[i % len(self.mesh.replicas)]
+        rep.step_time_override = seconds or None
+
+    def drain(self):
+        try:
+            for r in self.mesh.drain():
+                self._retire(r)
+        except ReproError:
+            # all replicas dead: orphans were failed typed, never hung
+            assert not self.mesh.alive()
+        # requests failed as orphans (all replicas dead) never flow
+        # through step(); account their typed terminal state here
+        for r in self.requests:
+            if id(r) not in self.retired and \
+                    r.state == RequestState.FAILED:
+                self._retire(r)
+
+    # -- the oracle ------------------------------------------------------------
+    def _oracle(self, r):
+        return StubExecutor.expected_tokens(r.prompt, r.max_new_tokens,
+                                            eos_token=r.eos_token)
+
+    def _retire(self, r):
+        assert id(r) not in self.retired, "request retired twice"
+        self.retired.add(id(r))
+        if r.done:
+            assert r.state == RequestState.FINISHED
+            # bitwise-identical to serving alone, no matter how many
+            # replicas touched it on the way
+            assert r.out_tokens == self._oracle(r), \
+                "stream diverged from the oracle after migration"
+        else:
+            assert r.state == RequestState.FAILED
+            assert isinstance(r.error, self.allowed_errors), r.error
+
+    def check_invariants(self):
+        locations = {}            # id(obj) -> where it lives
+        for rep in self.mesh.replicas:
+            eng = rep.engine
+            kv = eng.kv_stats
+            live_pages = sum(len(s.pages) for s in eng._slots
+                             if s is not None)
+            assert kv["pages_live"] == live_pages
+            if rep.state == ReplicaState.DEAD:
+                # a dead replica's pages drained the moment it died,
+                # and it holds no work
+                assert kv["pages_live"] == 0
+                assert eng.scheduler_stats["waiting"] == 0
+                assert eng.scheduler_stats["running"] == 0
+            for r in eng._waiting:
+                assert id(r) not in locations, "request in two places"
+                locations[id(r)] = f"waiting:{rep.key}"
+            for s in eng._slots:
+                if s is None:
+                    continue
+                assert id(s.request) not in locations
+                locations[id(s.request)] = f"running:{rep.key}"
+                oracle = self._oracle(s.request)
+                assert s.request.out_tokens == \
+                    oracle[:len(s.request.out_tokens)], \
+                    "running stream is not an oracle prefix"
+        for r in self.mesh._orphans:
+            assert id(r) not in locations
+            locations[id(r)] = "orphan"
+        # zero drops: submitted == located exactly once or retired
+        for r in self.requests:
+            here = id(r) in locations
+            done = id(r) in self.retired
+            assert here or done, "request dropped"
+            assert not (here and done), "request both live and retired"
+        assert self.mesh.mesh_stats["drops"] == 0
+
+    def check_drained(self):
+        assert {id(r) for r in self.requests} == self.retired, \
+            "drain left requests behind"
+        for rep in self.mesh.replicas:
+            assert rep.engine.kv_stats["pages_live"] == 0, \
+                f"{rep.key} leaked KV pages"
+
+
+# --------------------------------------------------------------------------
+# hypothesis-free: seeded random walk (runs on every install)
+# --------------------------------------------------------------------------
+
+def test_mesh_random_walk_seeded():
+    for seed in range(4):
+        rnd = random.Random(seed)
+        d = MeshDriver()
+        for _ in range(80):
+            op = rnd.random()
+            if op < 0.35 and len(d.requests) < 30:
+                d.submit(plen=rnd.randint(2, MAX_PROMPT),
+                         max_new=rnd.randint(1, MAX_NEW),
+                         seed=rnd.randint(0, 10**6))
+            elif op < 0.42:
+                d.kill(rnd.randint(0, 9))
+            elif op < 0.50:
+                d.recover(rnd.randint(0, 9))
+            elif op < 0.56:
+                d.stall(rnd.randint(0, 9),
+                        rnd.choice([0.0, 0.05, 0.5]))
+            else:
+                d.step()
+            d.check_invariants()
+        d.drain()
+        d.check_invariants()
+        d.check_drained()
+
+
+# --------------------------------------------------------------------------
+# deterministic failure-ladder scenarios
+# --------------------------------------------------------------------------
+
+def _submit_n(d, n, seed=0, max_new=6):
+    rng = random.Random(seed)
+    return [d.submit(plen=rng.randint(2, MAX_PROMPT), max_new=max_new,
+                     seed=rng.randint(0, 10**6)) for _ in range(n)]
+
+
+def test_kill_during_prefill_migrates_and_matches_oracle():
+    d = MeshDriver()
+    reqs = _submit_n(d, 6, seed=1)
+    victim = next(rep for rep in d.mesh.replicas if rep.load > 0)
+    # armed before the first step: the loss fires through the victim's
+    # prefill commands
+    d.mesh.kill_replica(victim.index)
+    d.step()
+    d.check_invariants()
+    assert victim.state == ReplicaState.DEAD
+    assert victim.engine.kv_stats["pages_live"] == 0
+    d.drain()
+    d.check_drained()
+    assert all(r.done and r.out_tokens == d._oracle(r) for r in reqs)
+    assert d.mesh.mesh_stats["migrated"] >= 1
+    assert d.mesh.mesh_stats["drops"] == 0
+    assert isinstance(d.mesh.last_device_loss, DeviceLostError)
+
+
+def test_kill_during_decode_migrates_and_matches_oracle():
+    d = MeshDriver()
+    reqs = _submit_n(d, 6, seed=2, max_new=10)
+    d.step()                     # prefills done, decode under way
+    victim = next(rep for rep in d.mesh.replicas if rep.load > 0)
+    mid_flight = [s.request for s in victim.engine._slots
+                  if s is not None and s.request.out_tokens]
+    assert mid_flight             # genuinely killed mid-decode
+    d.mesh.kill_replica(victim.index)
+    d.step()
+    d.check_invariants()
+    assert victim.engine.device_lost is not None
+    d.drain()
+    d.check_drained()
+    # recompute after migration is bitwise-safe (greedy decode)
+    assert all(r.done and r.out_tokens == d._oracle(r) for r in reqs)
+
+
+def test_kill_all_then_recover_requeues_orphans():
+    d = MeshDriver(n_replicas=2)
+    reqs = _submit_n(d, 5, seed=3)
+    d.step()
+    for rep in d.mesh.replicas:
+        d.mesh.kill_replica(rep.index)
+    d.step()                     # both die: victims park as orphans
+    d.check_invariants()
+    assert not d.mesh.alive()
+    assert len(d.mesh._orphans) == len(reqs)
+    d.mesh.recover_replica(0)    # fresh engine; orphans requeue
+    d.check_invariants()
+    assert not d.mesh._orphans
+    d.drain()
+    d.check_drained()
+    assert all(r.done and r.out_tokens == d._oracle(r) for r in reqs)
+
+
+def test_all_replicas_dead_surfaces_typed_never_hangs():
+    d = MeshDriver(n_replicas=2)
+    reqs = _submit_n(d, 4, seed=4)
+    for rep in d.mesh.replicas:
+        d.mesh.kill_replica(rep.index)
+    d.step()
+    # drain surfaces the typed loss (after failing the orphans), and
+    # submit refuses new work with the same typed error
+    with pytest.raises(DeviceLostError):
+        d.mesh.drain()
+    assert all(isinstance(r.error, DeviceLostError) for r in reqs)
+    with pytest.raises(DeviceLostError):
+        d.submit(plen=4, max_new=2, seed=0)
+    d.drain()                    # idempotent: accounts the failures
+    d.check_drained()
+
+
+def test_oom_on_mesh_surfaces_typed_out_of_memory():
+    # one replica, budget below a single request's footprint: the typed
+    # OutOfMemory must retire the request, not hang the mesh
+    d = MeshDriver(n_replicas=1,
+                   kv_budget_bytes=PAGE_TOKENS * 64 * 1)
+    r = d.submit(plen=MAX_PROMPT, max_new=8, seed=5)
+    d.drain()
+    d.check_invariants()
+    d.check_drained()
+    assert r.state == RequestState.FAILED
+    assert isinstance(r.error, OutOfMemory)
+
+
+def test_straggler_drains_then_rejoins():
+    d = MeshDriver()
+    d.stall(0, 0.5)              # replica 0 runs 500x slower (virtual)
+    _submit_n(d, 6, seed=6, max_new=8)
+    flagged = False
+    for _ in range(30):
+        d.step()
+        d.check_invariants()
+        if d.mesh.replicas[0].state == ReplicaState.DRAINING:
+            flagged = True
+            # de-weighted and drained: new work routes elsewhere
+            r = d.submit(plen=4, max_new=2, seed=7)
+            assert not any(w is r for w in
+                           d.mesh.replicas[0].engine._waiting)
+            break
+    assert flagged, "persistent straggler never drained"
+    d.stall(0, 0.0)
+    d.drain()
+    d.check_drained()
+    # emptied while draining -> rejoined the healthy set
+    assert d.mesh.replicas[0].state == ReplicaState.HEALTHY
+
+
+def test_router_prefers_fast_replicas():
+    mesh = make_mesh()
+    # teach the EWMA that replica 2 is 8x faster
+    for _ in range(6):
+        mesh._model.observe(0, 1, 0.8)
+        mesh._model.observe(1, 1, 0.8)
+        mesh._model.observe(2, 1, 0.1)
+    counts = {0: 0, 1: 0, 2: 0}
+    rng = np.random.default_rng(8)
+    for _ in range(12):
+        r = Request(prompt=rng.integers(0, 500, 4).astype(np.int32),
+                    max_new_tokens=2)
+        mesh.submit(r)
+        for rep in mesh.replicas:
+            counts[rep.index] = max(counts[rep.index], rep.load)
+    # the fast replica absorbed the deepest queue
+    assert counts[2] == max(counts.values())
+    mesh.drain()
+
+
+# --------------------------------------------------------------------------
+# hypothesis state machine (minimized counterexamples where available)
+# --------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    class MeshMachine(RuleBasedStateMachine):
+        @initialize()
+        def setup(self):
+            self.d = MeshDriver()
+
+        @rule(plen=st.integers(2, MAX_PROMPT),
+              max_new=st.integers(1, MAX_NEW),
+              seed=st.integers(0, 10**6))
+        def submit(self, plen, max_new, seed):
+            if len(self.d.requests) < 40 and self.d.mesh.alive():
+                self.d.submit(plen, max_new, seed)
+
+        @rule()
+        def step(self):
+            self.d.step()
+
+        @rule(n=st.integers(2, 5))
+        def step_many(self, n):
+            for _ in range(n):
+                self.d.step()
+
+        @rule(i=st.integers(0, 9))
+        def kill(self, i):
+            self.d.kill(i)
+
+        @rule(i=st.integers(0, 9))
+        def recover(self, i):
+            self.d.recover(i)
+
+        @rule(i=st.integers(0, 9),
+              s=st.sampled_from([0.0, 0.05, 0.5]))
+        def stall(self, i, s):
+            self.d.stall(i, s)
+
+        @invariant()
+        def invariants(self):
+            if hasattr(self, "d"):
+                self.d.check_invariants()
+
+        def teardown(self):
+            if hasattr(self, "d"):
+                self.d.drain()
+                self.d.check_invariants()
+                self.d.check_drained()
+
+    TestMeshMachine = MeshMachine.TestCase

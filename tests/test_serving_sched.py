@@ -314,6 +314,94 @@ def test_inject_fault_validates():
     eng.submit(r)
     with pytest.raises(InvalidArgError):
         eng.inject_fault(r, stage="warp-core")
+    with pytest.raises(InvalidArgError):
+        eng.inject_fault(r, stage="device")   # replica loss: no request
+    with pytest.raises(InvalidArgError):
+        eng.inject_fault(stage="decode")      # per-request: needs one
+
+
+# --------------------------------------------------------------------------
+# replica-level device loss (mesh failure ladder, docs/mesh.md)
+# --------------------------------------------------------------------------
+
+def test_device_loss_fails_all_residents_at_once_typed():
+    eng, ex = stub_engine(slots=2)
+    rng = np.random.default_rng(7)
+    a, b = req(rng, max_new=8), req(rng, max_new=8)
+    eng.submit(a)
+    eng.submit(b)
+    eng.step()                          # both resident, decoding
+    eng.inject_fault(stage="device")
+    out = eng.step()                    # the loss fires mid-decode
+    # every resident failed at once, with the SAME typed error object
+    assert {r.id for r in out} == {a.id, b.id}
+    assert all(r.state == RequestState.FAILED for r in out)
+    assert isinstance(a.error, DeviceLostError) and a.error.code == -2
+    assert a.error is b.error is eng.device_lost
+    # pages drained to zero on the dead replica
+    assert eng.kv_stats["pages_live"] == 0
+    assert eng.kv_stats["kv_used_bytes"] == 0
+
+
+def test_device_loss_leaves_waiting_requests_reclaimable():
+    eng, ex = stub_engine(slots=1)
+    rng = np.random.default_rng(8)
+    resident, queued = req(rng, max_new=8), req(rng, max_new=4)
+    eng.submit(resident)
+    eng.submit(queued)
+    eng.step()
+    eng.inject_fault(stage="device")
+    eng.step()
+    # the engine is terminal: it cannot run the queued work nor accept
+    # more — both surface the typed error instead of hanging
+    with pytest.raises(DeviceLostError):
+        eng.drain()
+    with pytest.raises(DeviceLostError):
+        eng.submit(req(rng))
+    assert eng.step() == []             # terminal: steps are no-ops
+    # the waiting request is untouched (no error) and reclaimable for
+    # migration; once reclaimed the engine drains empty
+    assert queued.error is None
+    assert eng.release_waiting() == [queued]
+    assert eng.release_waiting() == []
+    assert eng.drain() == []
+
+
+def test_device_loss_on_one_engine_leaves_siblings_unaffected():
+    """Regression (ISSUE 9 satellite): a replica-level loss is scoped to
+    its engine — requests on a sibling engine sharing the process (and
+    the default platform) complete bit-exact."""
+    lost_eng, _ = stub_engine(slots=2)
+    ok_eng, _ = stub_engine(slots=2)
+    rng = np.random.default_rng(9)
+    doomed = [req(rng, max_new=6) for _ in range(2)]
+    fine = [req(rng, max_new=6) for _ in range(3)]
+    for r in doomed:
+        lost_eng.submit(r)
+    for r in fine:
+        ok_eng.submit(r)
+    lost_eng.step()
+    ok_eng.step()
+    lost_eng.inject_fault(stage="device")
+    lost_eng.step()
+    ok_eng.drain()
+    assert all(isinstance(r.error, DeviceLostError) for r in doomed)
+    assert all(r.done and r.out_tokens == expect(r) for r in fine)
+    assert lost_eng.kv_stats["pages_live"] == 0
+    assert ok_eng.kv_stats["pages_live"] == 0
+
+
+def test_front_submit_runs_before_earlier_arrivals():
+    eng, ex = stub_engine(slots=1)
+    rng = np.random.default_rng(10)
+    first, second, migrated = req(rng), req(rng), req(rng, max_new=2)
+    eng.submit(first)
+    eng.submit(second)
+    eng.submit(migrated, front=True)    # mesh requeue path
+    eng.drain()
+    # single slot => strict completion order: front-submitted first
+    assert migrated.finish_step <= first.finish_step <= second.finish_step
+    assert migrated.out_tokens == expect(migrated)
 
 
 # --------------------------------------------------------------------------

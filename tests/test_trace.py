@@ -1,0 +1,239 @@
+"""Chrome-trace export: schema validation + golden skeleton.
+
+A deterministic recorded scenario — a 2-device co-execution plus a
+fused-chain launch and a continuous-batching serving step, all under
+one :class:`~repro.runtime.trace.ChromeTrace` — is exported and
+checked two ways (docs/mesh.md §Observability):
+
+* :func:`~repro.runtime.trace.validate_trace` enforces the Chrome Trace
+  Event Format subset structurally: required ``ph``/``ts``/``pid``/
+  ``tid`` fields per phase, non-negative monotone-consistent
+  timestamps, ``ph:"s"``/``ph:"f"`` flow pairing, and every slice row
+  named by ``M`` metadata;
+* a **golden skeleton** (tests/golden/trace_schema.json) pins the
+  normalized shape of what the exporter emits — the sorted distinct
+  ``ph``/``cat``/name triples with digits collapsed — so an exporter
+  change that silently drops slices, counters, or flow arrows fails
+  loudly.  Regenerate intentionally with::
+
+      REPRO_UPDATE_GOLDEN=1 PYTHONPATH=src python -m pytest tests/test_trace.py
+"""
+
+import json
+import os
+import re
+
+import numpy as np
+import pytest
+
+from repro.core import KernelBuilder
+from repro.runtime import ChromeTrace, Platform, validate_trace
+from repro.runtime.context import Context
+from repro.serving import Request, ServingEngine, StubExecutor
+
+GOLDEN_DIR = os.path.join(os.path.dirname(__file__), "golden")
+N = 256
+LSZ = (64,)
+
+
+def build_scale():
+    b = KernelBuilder("scale")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    y[g] = x[g] * 2.0 + g
+    return b.finish()
+
+
+def recorded_run():
+    """The fixed scenario the golden pins: co-exec on 2 devices, a
+    fused kernel chain, and a serving step, one trace."""
+    from repro.core.examples import build_residual_add, build_rmsnorm_ew
+
+    plat = Platform()
+    ctx = Context(platform=plat)
+    with ctx.trace() as tr:
+        # -- fused chain on a context queue (fused_from provenance)
+        prog = ctx.create_program(build_rmsnorm_ew, build_residual_add)
+        bufs = {nm: ctx.create_buffer(N) for nm in "xwryz"}
+        q = ctx.create_queue(ctx.devices[0], fusion="flush")
+        q.enqueue_write_buffer(bufs["x"],
+                               np.ones(N, np.float32))
+        q.enqueue_write_buffer(bufs["w"],
+                               np.ones(N, np.float32))
+        q.enqueue_write_buffer(bufs["r"],
+                               np.ones(N, np.float32))
+        k1 = prog.create_kernel("rmsnorm_ew")
+        k1.set_args(x=bufs["x"], w=bufs["w"], y=bufs["y"], inv_rms=0.5)
+        k2 = prog.create_kernel("residual_add")
+        k2.set_args(y=bufs["y"], r=bufs["r"], z=bufs["z"])
+        q.enqueue_nd_range(k1, (N,), LSZ)
+        q.enqueue_nd_range(k2, (N,), LSZ)
+        q.finish()
+
+        # -- 2-device co-execution; the co-executor owns its queues, so
+        # they attach explicitly (one trace row per device queue)
+        co = ctx.create_co_executor(plat.co_devices(2),
+                                    chunks_per_device=2)
+        for d, cq in co.queues.items():
+            tr.attach_queue(cq, process=d.info.name)
+        co.run(build_scale, LSZ, (N,),
+               {"x": np.arange(N, dtype=np.float32),
+                "y": np.zeros(N, np.float32)},
+               mode="static", weights=[1.0, 1.0])
+        co.finish()
+
+        # -- one continuous-batching serving step (native DAG commands
+        # through a context queue) + a counter sample
+        eng = ServingEngine(None, None, None, batch_slots=2, max_seq=32,
+                            executor=StubExecutor(batch_slots=2,
+                                                  max_seq=32),
+                            context=ctx)
+        for i in range(3):
+            eng.submit(Request(
+                prompt=np.arange(2 + i, dtype=np.int32),
+                max_new_tokens=3))
+        eng.step()
+        tr.counter("kv_pages_live", eng.kv_stats["pages_live"],
+                   process="serving")
+        eng.drain()
+    return tr
+
+
+def skeleton(events):
+    """Normalized shape: sorted distinct (ph, cat, name) with digits
+    collapsed — stable across timestamps, ids, and run speed."""
+    out = set()
+    for e in events:
+        name = re.sub(r"\d+", "N", str(e.get("name", "")))
+        cat = re.sub(r"\d+", "N", str(e.get("cat", "")))
+        out.add((e["ph"], cat, name))
+    return sorted(out)
+
+
+# --------------------------------------------------------------------------
+# structural validation
+# --------------------------------------------------------------------------
+
+def test_recorded_trace_validates():
+    tr = recorded_run()
+    events = tr.trace_events()
+    counts = validate_trace(events)
+    # every phase the exporter promises is present
+    assert counts.get("M", 0) >= 4        # process + thread names
+    assert counts.get("X", 0) >= 8        # slices: kernels + natives
+    assert counts.get("C", 0) >= 2        # queue depth + kv counter
+    assert counts.get("s", 0) >= 1        # DAG flow arrows
+    assert counts.get("s") == counts.get("f")
+
+
+def test_slices_carry_profiling_and_provenance():
+    tr = recorded_run()
+    events = tr.trace_events()
+    slices = [e for e in events if e["ph"] == "X"]
+    for e in slices:
+        a = e["args"]
+        assert a["end_ns"] >= a["start_ns"] >= a["queued_ns"]
+        assert e["dur"] == pytest.approx(
+            (a["end_ns"] - a["start_ns"]) / 1e3)
+        assert a["kind"]
+    fused = [e for e in slices if "fused_from" in e["args"]]
+    assert fused, "fused super-command missing from the trace"
+    assert "rmsnorm_ew" in " ".join(fused[0]["args"]["fused_from"])
+    # exported ts are relative to the run start and sorted
+    ts = [e["ts"] for e in events]
+    assert ts == sorted(ts) and ts[0] == 0
+
+
+def test_trace_export_writes_chrome_json(tmp_path):
+    tr = recorded_run()
+    path = str(tmp_path / "out.json")
+    doc = tr.export(path)
+    with open(path) as f:
+        loaded = json.load(f)
+    assert loaded["displayTimeUnit"] == "ms"
+    assert loaded["traceEvents"] == json.loads(
+        json.dumps(doc["traceEvents"], default=float))
+    validate_trace(loaded["traceEvents"])
+
+
+def test_validate_trace_rejects_malformed():
+    ok = [{"ph": "M", "name": "process_name", "pid": 1, "tid": 0,
+           "ts": 0, "args": {"name": "p"}},
+          {"ph": "M", "name": "thread_name", "pid": 1, "tid": 1,
+           "ts": 0, "args": {"name": "t"}},
+          {"ph": "X", "name": "k", "pid": 1, "tid": 1, "ts": 1.0,
+           "dur": 2.0, "args": {}}]
+    validate_trace(ok)
+    with pytest.raises(ValueError, match="unknown ph"):
+        validate_trace(ok + [{"ph": "Z", "name": "?", "ts": 0}])
+    with pytest.raises(ValueError, match="missing"):
+        validate_trace(ok + [{"ph": "X", "name": "k", "pid": 1,
+                              "tid": 1, "ts": 3.0}])
+    with pytest.raises(ValueError, match="negative ts"):
+        validate_trace(ok + [{"ph": "i", "name": "k", "pid": 1,
+                              "tid": 1, "ts": -1.0}])
+    with pytest.raises(ValueError, match="no finish"):
+        validate_trace(ok + [{"ph": "s", "name": "f", "id": 9,
+                              "pid": 1, "tid": 1, "ts": 1.0}])
+    with pytest.raises(ValueError, match="before it starts"):
+        validate_trace(ok + [
+            {"ph": "s", "name": "f", "id": 9, "pid": 1, "tid": 1,
+             "ts": 5.0},
+            {"ph": "f", "name": "f", "id": 9, "pid": 1, "tid": 1,
+             "ts": 1.0}])
+    with pytest.raises(ValueError, match="unnamed pid"):
+        validate_trace(ok + [{"ph": "X", "name": "k", "pid": 7,
+                              "tid": 1, "ts": 1.0, "dur": 0.0}])
+
+
+def test_mesh_trace_shows_migration_flow():
+    """The acceptance-criterion view: a killed replica's migration is a
+    paired flow arrow between the two replicas' process rows."""
+    from repro.serving import ServingMesh
+
+    mesh = ServingMesh(
+        n_replicas=2, batch_slots=2, max_seq=32,
+        executor_factory=lambda i: StubExecutor(batch_slots=2,
+                                                max_seq=32))
+    tr = mesh.attach_trace()
+    rng = np.random.default_rng(3)
+    for _ in range(4):
+        mesh.submit(Request(
+            prompt=rng.integers(0, 99, 4).astype(np.int32),
+            max_new_tokens=4))
+    mesh.step()
+    mesh.kill_replica(0)
+    mesh.drain()
+    events = tr.trace_events()
+    validate_trace(events)
+    flows = [e for e in events
+             if e.get("cat") == "migration" and e["ph"] in ("s", "f")]
+    assert flows, "migration left no flow arrows"
+    starts = {e["id"]: e for e in flows if e["ph"] == "s"}
+    for e in flows:
+        if e["ph"] == "f":
+            # the arrow crosses replicas: source row != destination row
+            assert starts[e["id"]]["pid"] != e["pid"]
+
+
+# --------------------------------------------------------------------------
+# golden skeleton
+# --------------------------------------------------------------------------
+
+def test_golden_trace_schema():
+    tr = recorded_run()
+    got = skeleton(tr.trace_events())
+    path = os.path.join(GOLDEN_DIR, "trace_schema.json")
+    if os.environ.get("REPRO_UPDATE_GOLDEN"):
+        with open(path, "w") as f:
+            json.dump([list(t) for t in got], f, indent=1)
+            f.write("\n")
+        pytest.skip(f"golden updated: {path}")
+    assert os.path.exists(path), \
+        f"golden file missing; run with REPRO_UPDATE_GOLDEN=1 ({path})"
+    with open(path) as f:
+        want = sorted(tuple(t) for t in json.load(f))
+    assert got == want, (
+        "exported trace skeleton drifted; if the exporter change is "
+        "intentional, regenerate with REPRO_UPDATE_GOLDEN=1")
