@@ -29,7 +29,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core import KernelBuilder
-from repro.runtime import CoExecutor, CommandQueue, Platform, create_buffer
+from repro.runtime import CommandQueue, Context, Platform, create_buffer
 
 N = 8192
 LSZ = 64
@@ -54,12 +54,13 @@ def build_heavy():
     return b.finish()
 
 
-def bench_overlap(plat: Platform) -> Dict[str, float]:
+def bench_overlap(ctx: Context) -> Dict[str, float]:
     """Independent chains: in-order (serialized) vs out-of-order (DAG)."""
-    dev = plat.get_devices()[0]
-    k = dev.build_kernel(build_heavy, (LSZ,))
+    dev = ctx.devices[0]
+    kern = ctx.create_program(build_heavy).create_kernel()
     host = (np.arange(N, dtype=np.float32) / N)
-    k({"x": host, "y": np.zeros(N, np.float32)}, (N,))   # jit warm-up
+    kern.set_args(x=host, y=np.zeros(N, np.float32))
+    ctx.launch(kern, (N,), (LSZ,), device=dev)           # jit warm-up
     bufs = [(create_buffer(dev, N, "float32"),
              create_buffer(dev, N, "float32")) for _ in range(CHAINS)]
     outs = [np.zeros(N, np.float32) for _ in range(CHAINS)]
@@ -71,8 +72,8 @@ def bench_overlap(plat: Platform) -> Dict[str, float]:
             t0 = time.perf_counter()
             for (xb, yb), out in zip(bufs, outs):
                 e1 = q.enqueue_write_buffer(xb, host)
-                e2 = q.enqueue_ndrange_kernel(k, (N,), {"x": xb, "y": yb},
-                                              wait_for=[e1])
+                kc = kern.clone().set_args(x=xb, y=yb)
+                e2 = q.enqueue_nd_range(kc, (N,), (LSZ,), wait_for=[e1])
                 q.enqueue_read_buffer(yb, out, wait_for=[e2])
             q.finish()
             best = min(best, time.perf_counter() - t0)
@@ -87,39 +88,39 @@ def bench_overlap(plat: Platform) -> Dict[str, float]:
             "overlap_speedup": t_in / t_ooo}
 
 
-def bench_multidevice(plat: Platform) -> Dict[str, object]:
+def bench_multidevice(ctx: Context) -> Dict[str, object]:
     """One NDRange split across 2 devices vs a single device."""
-    dev = plat.get_devices("vector")[0]
-    k = dev.build_kernel(build_heavy, (LSZ,))
+    dev = ctx.platform.get_devices("vector")[0]
+    kern = ctx.create_program(build_heavy).create_kernel()
     host = (np.arange(N, dtype=np.float32) / N)
     zeros = np.zeros(N, np.float32)
-    single = k({"x": host, "y": zeros}, (N,))   # warm + reference
+    kern.set_args(x=host, y=zeros)
+    single = ctx.launch(kern, (N,), (LSZ,), device=dev)   # warm + reference
     t0 = time.perf_counter()
     for _ in range(REPEATS):
-        single = k({"x": host, "y": zeros}, (N,))
+        single = ctx.launch(kern, (N,), (LSZ,), device=dev)
     t_single = (time.perf_counter() - t0) / REPEATS
 
-    co = CoExecutor(plat.co_devices(2), chunks_per_device=3)
+    co = ctx.create_co_executor(ctx.platform.co_devices(2),
+                                chunks_per_device=3)
     # warm every (device, chunk-range) pair: work-stealing assigns chunks
-    # dynamically, so any chunk may land on any device; the device cache
-    # returns the same kernel object co-execution uses, so its per-shape
-    # jit cache warms here
+    # dynamically, so any chunk may land on any device; binding returns
+    # the same compiled kernel co-execution uses, so its per-shape jit
+    # cache warms here
     n_groups = N // LSZ
     n_chunks = co.chunks_per_device * len(co.devices)
     chunk = -(-n_groups // n_chunks)
     for d in co.devices:
-        kd = d.build_kernel(build_heavy, (LSZ,))
+        kd = kern.bind(d, (LSZ,))
         for lo in range(0, n_groups, chunk):
             kd({"x": host, "y": zeros}, (N,),
                group_range=(lo, min(lo + chunk, n_groups)))
     res: Dict[str, object] = {"single_s": t_single}
     for mode in ("static", "steal"):
-        co.run(build_heavy, (LSZ,), (N,), {"x": host, "y": zeros},
-               mode=mode)  # warm the static spans too
+        co.launch(kern, (N,), (LSZ,), mode=mode)  # warm the static spans
         t0 = time.perf_counter()
         for _ in range(REPEATS):
-            merged = co.run(build_heavy, (LSZ,), (N,),
-                            {"x": host, "y": zeros}, mode=mode)
+            merged = co.launch(kern, (N,), (LSZ,), mode=mode)
         t_co = (time.perf_counter() - t0) / REPEATS
         identical = merged["y"].tobytes() == \
             np.asarray(single["y"]).tobytes()
@@ -154,8 +155,9 @@ def bench_profiling(plat: Platform) -> Dict[str, float]:
 
 def run() -> Dict[str, object]:
     plat = Platform()
-    return {"overlap": bench_overlap(plat),
-            "multidevice": bench_multidevice(plat),
+    ctx = Context(platform=plat)
+    return {"overlap": bench_overlap(ctx),
+            "multidevice": bench_multidevice(ctx),
             "profiling": bench_profiling(plat)}
 
 

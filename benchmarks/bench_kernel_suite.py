@@ -3,8 +3,9 @@
 The paper runs the AMD APP SDK suite on Intel/ARM/PPC and compares pocl's
 statically parallelized work-groups against proprietary OpenCL stacks and
 fiber-based implementations (FreeOCL/Clover).  The hardware-adapted
-analogue here: the same OpenCL-style kernels authored in the repro.core
-DSL, executed via
+analogue: the :mod:`repro.suite` linear-algebra/irregular kernels (tiled
+GEMM, CSR SpMV, stencils, work-group scan, privatized histogram — see
+docs/scoreboard.md), executed via
 
   fiber    — run_ndrange, real per-work-item fibers (the Clover/Twin-Peaks
              baseline the paper argues against)
@@ -12,9 +13,16 @@ DSL, executed via
   vector   — vectorized WI-loops over XLA (pocl's SIMD mapping; the MXU/
              VPU path on TPU)
 
-Reported: wall-time per launch (median of N) + speedup over fiber.  The
-paper's claim to reproduce: static parallel-region compilation beats fiber
+through the Context/Program/Kernel host API (loop/vector).  Reported:
+wall-time per launch (median of N) + speedup over fiber.  The paper's
+claim to reproduce: static parallel-region compilation beats fiber
 context switching, and the vector mapping beats the serial loop.
+
+Tuning-space sweeps and the full roofline matrix (pallas, co-execution,
+autotuned columns) live in :mod:`benchmarks.bench_scoreboard`; this
+benchmark keeps the historical fiber-vs-compiled comparison.
+
+  PYTHONPATH=src python -m benchmarks.bench_kernel_suite
 """
 
 from __future__ import annotations
@@ -24,156 +32,11 @@ from typing import Callable, Dict
 
 import numpy as np
 
-from repro.core import KernelBuilder, compile_kernel, run_ndrange
-
-
-# ---------------------------------------------------------------------------
-# the suite (AMD APP SDK-style kernels)
-# ---------------------------------------------------------------------------
-
-def build_vecadd():
-    b = KernelBuilder("vecadd")
-    A, B, C = (b.arg_buffer(n, "float32") for n in "ABC")
-    g = b.global_id(0)
-    C[g] = A[g] + B[g]
-    return b.finish()
-
-
-def build_saxpy():
-    b = KernelBuilder("saxpy")
-    X = b.arg_buffer("X", "float32")
-    Y = b.arg_buffer("Y", "float32")
-    a = b.arg_scalar("a", "float32")
-    g = b.global_id(0)
-    Y[g] = a * X[g] + Y[g]
-    return b.finish()
-
-
-def build_reduction():
-    b = KernelBuilder("reduction")
-    inp = b.arg_buffer("inp", "float32")
-    out = b.arg_buffer("out", "float32")
-    scratch = b.local_array("scratch", "float32", 64)
-    lid, gid, grp = b.local_id(0), b.global_id(0), b.group_id(0)
-    scratch[lid] = inp[gid]
-    b.barrier()
-    s = b.var(b.const(32), name="s")
-    with b.while_loop() as loop:
-        loop.cond(s.get() > 0)
-        with b.if_(lid < s.get()):
-            scratch[lid] = scratch[lid] + scratch[lid + s.get()]
-        b.barrier()
-        s.set(s.get() / 2)
-    with b.if_(lid == 0):
-        out[grp] = scratch[0]
-    return b.finish()
-
-
-def build_dct():
-    """Inner-loop kernel (paper Fig. 9)."""
-    b = KernelBuilder("dct")
-    inp = b.arg_buffer("inp", "float32")
-    coef = b.arg_buffer("coef", "float32")
-    out = b.arg_buffer("out", "float32")
-    width = b.arg_scalar("width", "int32")
-    lid = b.local_id(0)
-    acc = b.var(0.0, name="acc")
-    k = b.var(b.const(0), name="k")
-    with b.while_loop() as loop:
-        loop.cond(k.get() < width)
-        acc.set(acc.get() + coef[k.get()] * inp[lid * width + k.get()])
-        k.set(k.get() + 1)
-    out[lid] = acc.get()
-    return b.finish()
-
-
-def build_blackscholes_lite():
-    """Arithmetic-heavy, branch-free (BlackScholes stand-in)."""
-    b = KernelBuilder("bs")
-    S = b.arg_buffer("S", "float32")
-    K = b.arg_buffer("K", "float32")
-    out = b.arg_buffer("out", "float32")
-    g = b.global_id(0)
-    m = b.var(S[g] / K[g], name="m")
-    # a few fused ops per element
-    acc = b.var(m.get(), name="acc")
-    i = b.var(b.const(0), name="i")
-    with b.while_loop() as loop:
-        loop.cond(i.get() < 8)
-        acc.set(acc.get() * 0.9 + m.get() * 0.1)
-        i.set(i.get() + 1)
-    out[g] = acc.get()
-    return b.finish()
-
-
-def build_binarysearch():
-    """Divergent control flow (the paper's worst case on pocl)."""
-    b = KernelBuilder("bsearch")
-    hay = b.arg_buffer("hay", "float32")
-    needle = b.arg_buffer("needle", "float32")
-    out = b.arg_buffer("out", "float32")
-    n = b.arg_scalar("n", "int32")
-    g = b.global_id(0)
-    lo = b.var(b.const(0), name="lo")
-    hi = b.var(n, name="hi")
-    it = b.var(b.const(0), name="it")
-    with b.while_loop() as loop:
-        loop.cond(it.get() < 10)
-        mid = b.var((lo.get() + hi.get()) / 2, name="mid")
-        with b.if_(hay[mid.get()] < needle[g]):
-            lo.set(mid.get())
-        with b.if_(hay[mid.get()] >= needle[g]):
-            hi.set(mid.get())
-        it.set(it.get() + 1)
-    out[g] = lo.get()
-    return b.finish()
-
-
-def build_matvec():
-    b = KernelBuilder("matvec")
-    M = b.arg_buffer("M", "float32")
-    x = b.arg_buffer("x", "float32")
-    y = b.arg_buffer("y", "float32")
-    n = b.arg_scalar("n", "int32")
-    g = b.global_id(0)
-    acc = b.var(0.0, name="acc")
-    j = b.var(b.const(0), name="j")
-    with b.while_loop() as loop:
-        loop.cond(j.get() < n)
-        acc.set(acc.get() + M[g * n + j.get()] * x[j.get()])
-        j.set(j.get() + 1)
-    y[g] = acc.get()
-    return b.finish()
-
-
-def suite(n: int = 4096, lsz: int = 64):
-    rng = np.random.default_rng(0)
-    f32 = lambda *s: rng.standard_normal(s).astype(np.float32)
-    hay = np.sort(f32(1024))
-    return {
-        "VecAdd": (build_vecadd, {"A": f32(n), "B": f32(n),
-                                  "C": np.zeros(n, np.float32)},
-                   (n,), (lsz,), None),
-        "SAXPY": (build_saxpy, {"X": f32(n), "Y": f32(n)},
-                  (n,), (lsz,), {"a": 1.5}),
-        "Reduction": (build_reduction,
-                      {"inp": f32(n), "out": np.zeros(n // lsz, np.float32)},
-                      (n,), (lsz,), None),
-        "DCT": (build_dct, {"inp": f32(lsz * 16), "coef": f32(16),
-                            "out": np.zeros(lsz, np.float32)},
-                (lsz,), (lsz,), {"width": 16}),
-        "BlackScholes": (build_blackscholes_lite,
-                         {"S": f32(n) + 10.0, "K": f32(n) + 10.0,
-                          "out": np.zeros(n, np.float32)},
-                         (n,), (lsz,), None),
-        "BinarySearch": (build_binarysearch,
-                         {"hay": hay, "needle": f32(n),
-                          "out": np.zeros(n, np.float32)},
-                         (n,), (lsz,), {"n": 1024}),
-        "MatVec": (build_matvec, {"M": f32(256 * 256), "x": f32(256),
-                                  "y": np.zeros(256, np.float32)},
-                   (256,), (64,), {"n": 256}),
-    }
+# the fiber interpreter IS the baseline under measurement here — the one
+# sanctioned use of the deprecated entry point outside tests
+from repro.core.interp import run_ndrange  # noqa: TID251
+from repro.runtime import Context
+from repro.suite import suite_kernels
 
 
 def _time(fn: Callable[[], None], iters: int = 5) -> float:
@@ -186,35 +49,52 @@ def _time(fn: Callable[[], None], iters: int = 5) -> float:
     return float(np.median(ts))
 
 
-def run(iters: int = 5, fiber_iters: int = 1) -> Dict[str, Dict[str, float]]:
+def run(iters: int = 5, shape_set: str = "ci"
+        ) -> Dict[str, Dict[str, float]]:
+    ctx = Context()
     out = {}
-    for name, (build, bufs, gsz, lsz, scalars) in suite().items():
-        row = {}
+    for sk in suite_kernels():
+        shape = sk.shapes.get(shape_set, sk.shapes["full"])
+        params = sk.space(shape)[0]
+        inputs = sk.make_inputs(shape, params)
+        expected = sk.oracle(inputs, shape, params)
+        gsz, lsz = sk.launch_dims(shape, params)
+        row: Dict[str, float] = {}
         # fiber baseline (interpreted; 1 iter — it is orders slower)
         t0 = time.perf_counter()
-        run_ndrange(build(), gsz, lsz,
-                    {k: v.copy() for k, v in bufs.items()}, scalars)
+        fiber_out = run_ndrange(sk.build(shape, params)(), gsz, lsz,
+                                {k: v.copy() for k, v in inputs.items()})
         row["fiber"] = time.perf_counter() - t0
+        outs = {}
         for tgt in ("loop", "vector"):
-            k = compile_kernel(build, lsz, target=tgt)
+            kern = ctx.create_program(sk.build(shape, params)) \
+                .create_kernel()
+            kern.set_args(**inputs)
             row[tgt] = _time(
-                lambda: k({key: v.copy() for key, v in bufs.items()},
-                          gsz, scalars), iters)
+                lambda: ctx.launch(kern, gsz, lsz, target=tgt), iters)
+            outs[tgt] = ctx.launch(kern, gsz, lsz, target=tgt)
+        # all three execution strategies must agree bitwise with the
+        # oracle — the portability claim, not just the speed claim
+        row["bitwise_ok"] = float(all(
+            np.asarray(o[name]).tobytes() == exp.tobytes()
+            for o in (fiber_out, outs["loop"], outs["vector"])
+            for name, exp in expected.items()))
         row["speedup_vector_vs_fiber"] = row["fiber"] / row["vector"]
         row["speedup_vector_vs_loop"] = row["loop"] / row["vector"]
-        out[name] = row
+        out[sk.name] = row
     return out
 
 
 def main():
     res = run()
-    print(f"{'kernel':14s} {'fiber':>10s} {'loop':>10s} {'vector':>10s} "
-          f"{'vec/fiber':>10s} {'vec/loop':>9s}")
+    print(f"{'kernel':12s} {'fiber':>10s} {'loop':>10s} {'vector':>10s} "
+          f"{'vec/fiber':>10s} {'vec/loop':>9s} {'bitwise':>8s}")
     for name, r in res.items():
-        print(f"{name:14s} {r['fiber']*1e3:9.2f}ms {r['loop']*1e3:9.2f}ms "
+        print(f"{name:12s} {r['fiber']*1e3:9.2f}ms {r['loop']*1e3:9.2f}ms "
               f"{r['vector']*1e3:9.2f}ms "
               f"{r['speedup_vector_vs_fiber']:9.1f}x "
-              f"{r['speedup_vector_vs_loop']:8.1f}x")
+              f"{r['speedup_vector_vs_loop']:8.1f}x "
+              f"{'ok' if r['bitwise_ok'] else 'FAIL':>8s}")
     return res
 
 

@@ -35,7 +35,7 @@ from typing import Dict
 import numpy as np
 
 from repro.core import KernelBuilder
-from repro.runtime import (Bufalloc, BufferPool, CoExecutor, CommandQueue,
+from repro.runtime import (Bufalloc, BufferPool, CommandQueue, Context,
                            OutOfMemory, Platform, create_buffer)
 
 N_MAP = 1 << 21          # floats mapped/copied per host touch (8 MiB)
@@ -179,20 +179,21 @@ def bench_pool_vs_firstfit() -> Dict[str, float]:
 # ---------------------------------------------------------------------------
 
 def bench_migration(plat: Platform) -> Dict[str, object]:
+    ctx = Context(platform=plat)
     dev = plat.get_devices("vector")[0]
-    k = dev.build_kernel(build_heavy, (LSZ,))
+    kern = ctx.create_program(build_heavy).create_kernel()
     host = np.arange(N_CO, dtype=np.float32) / N_CO
     zeros = np.zeros(N_CO, np.float32)
-    single = k({"x": host, "y": zeros}, (N_CO,))
+    kern.set_args(x=host, y=zeros)
+    single = ctx.launch(kern, (N_CO,), (LSZ,), device=dev)
 
-    co = CoExecutor(plat.co_devices(2), chunks_per_device=3)
+    co = ctx.create_co_executor(plat.co_devices(2), chunks_per_device=3)
     xs = co.shared_buffer(host, "x")
     ys = co.shared_buffer(zeros, "y")
-    merged = co.run(build_heavy, (LSZ,), (N_CO,), {"x": xs, "y": ys},
-                    mode="static")
+    kshared = kern.clone().set_args(x=xs, y=ys)
+    merged = co.launch(kshared, (N_CO,), (LSZ,), mode="static")
     first = co.last_stats
-    merged = co.run(build_heavy, (LSZ,), (N_CO,), {"x": xs, "y": ys},
-                    mode="static")
+    merged = co.launch(kshared, (N_CO,), (LSZ,), mode="static")
     second = co.last_stats
     identical = merged["y"].tobytes() == np.asarray(single["y"]).tobytes()
     co.finish()

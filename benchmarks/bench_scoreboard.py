@@ -1,0 +1,98 @@
+"""Performance-portability scoreboard (paper §4, Figs. 12-14; Rupp et al.).
+
+Runs the :mod:`repro.suite` kernels through the Scoreboard — a tuning-
+space sweep per (kernel, target) cell with bitwise oracle checks and a
+measured-peak roofline — and emits:
+
+  benchmarks/BENCH_SCOREBOARD.json   machine-readable matrix + gates
+  benchmarks/SCOREBOARD.md           rendered markdown table
+
+Exit status is the gate verdict (CI job ``scoreboard``):
+
+  (a) every cell bitwise-equal to its NumPy oracle,
+  (b) every swept cell's autotuned config at the minimum of its sweep,
+  (c) every kernel's achieved-vs-roofline fraction on the vector target
+      >= --min-fraction (env REPRO_SCOREBOARD_MIN_FRACTION).
+
+The default fraction floor is deliberately conservative: CPU-hosted
+targets (and pallas interpret mode) sit far from their calibrated peaks
+on CI-sized problems; the floor catches order-of-magnitude regressions,
+not absolute-performance claims.
+
+  PYTHONPATH=src python -m benchmarks.bench_scoreboard [--ci]
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+from repro.core.autotune import TuningTable
+from repro.suite import Scoreboard, render_markdown
+from repro.suite.scoreboard import check_gates
+
+HERE = os.path.dirname(__file__)
+DEFAULT_MIN_FRACTION = float(
+    os.environ.get("REPRO_SCOREBOARD_MIN_FRACTION", "0.0005"))
+
+
+def run(ci: bool = False, table_path: str | None = None,
+        min_fraction: float = DEFAULT_MIN_FRACTION,
+        kernels=None):
+    table = TuningTable(table_path) if table_path else TuningTable()
+    sb = Scoreboard(
+        table=table,
+        shape_set="ci" if ci else "full",
+        warmup=1,
+        repeats=2 if ci else 3,
+        max_configs=2 if ci else None,
+        calibration_n=1 << 12 if ci else 1 << 14,
+    )
+    report = sb.run(kernels=kernels)
+    report["gates"] = check_gates(report, min_fraction=min_fraction,
+                                  fraction_target="vector")
+    return report
+
+
+def main(argv=None, ci: bool = False):
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--ci", action="store_true", default=ci,
+                    help="reduced sweep: ci shapes, 2 configs per space")
+    ap.add_argument("--out", default=os.path.join(HERE,
+                                                  "BENCH_SCOREBOARD.json"))
+    ap.add_argument("--md", default=os.path.join(HERE, "SCOREBOARD.md"))
+    ap.add_argument("--table", default=None,
+                    help="TuningTable path for persisted sweep winners "
+                         "(a warm run re-measures only the winner)")
+    ap.add_argument("--min-fraction", type=float,
+                    default=DEFAULT_MIN_FRACTION,
+                    help="achieved-vs-roofline floor on the vector target")
+    ap.add_argument("--kernels", nargs="*", default=None,
+                    help="subset of suite kernels (default: all)")
+    args = ap.parse_args(argv)
+
+    report = run(ci=args.ci, table_path=args.table,
+                 min_fraction=args.min_fraction, kernels=args.kernels)
+
+    with open(args.out, "w") as f:
+        json.dump(report, f, indent=1, default=float)
+    md = render_markdown(report)
+    with open(args.md, "w") as f:
+        f.write(md)
+    print(md)
+    print(f"matrix -> {args.out}\ntable  -> {args.md}")
+
+    gates = report["gates"]
+    for k in ("bitwise_failures", "winner_failures", "fraction_failures"):
+        for item in gates[k]:
+            print(f"GATE FAIL [{k}]: {item}")
+    status = "OK" if gates["ok"] else "BELOW TARGET"
+    print(f"scoreboard gates (bitwise + winner<=worst + "
+          f"fraction>={gates['min_fraction']}): {status}")
+    return report
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(0 if main().get("gates", {}).get("ok") else 1)

@@ -10,7 +10,10 @@ parallel mappings, and validates against the fiber-semantics oracle.
 
 import numpy as np
 
-from repro.core import KernelBuilder, run_ndrange
+from repro.core import KernelBuilder
+# sanctioned oracle use: this example demonstrates validating against the
+# fiber reference executor (see ruff.toml banned-api)
+from repro.core import run_ndrange  # noqa: TID251
 from repro.runtime import Context
 
 

@@ -43,20 +43,29 @@ class TuningTable:
 
     Schema (JSON): ``{"winners": {key: {"target", "timings_us",
     "failed"?}}, "pins": {kernel_name: target},
-    "coexec": {key: {"weights": {class: share}, "launches": n}}}``.
+    "coexec": {key: {"weights": {class: share}, "launches": n}},
+    "sweeps": {key: {"params": {...}, "timings_us": {...}}}}``.
     Winner keys are ``"<ir-hash>|l=<local>|g=<global>|<options>"`` so a
     tuning decision is exactly as specific as the compilation it
     selects.  The ``coexec`` section persists converged multi-device
     split weights per *device class* (docs/runtime.md §Scheduler), keyed
     ``"<ir-hash>|coexec=<class>+<class>+..."`` — the ImageCL-style
     per-platform mapping decision, so a warm process starts a co-executed
-    launch near the converged split instead of re-learning it.
+    launch near the converged split instead of re-learning it.  The
+    ``sweeps`` section persists *tuning-space* winners (tile/local
+    sizes, unroll factors — the scoreboard's per-target parameter
+    sweeps, docs/scoreboard.md): unlike winner keys, sweep keys cannot
+    be IR hashes because each swept configuration builds a *different*
+    kernel, so they are keyed by suite-kernel name + target + problem
+    shape (:meth:`make_sweep_key`), and a warm run re-measures only the
+    persisted winning configuration instead of the whole space.
     """
 
-    def __init__(self, path: Optional[str] = None):
-        self.path = path
+    def __init__(self, path: "Optional[str | os.PathLike]" = None):
+        self.path = os.fspath(path) if path is not None else None
         self._winners: Dict[str, Dict[str, object]] = {}
         self._coexec: Dict[str, Dict[str, object]] = {}
+        self._sweeps: Dict[str, Dict[str, object]] = {}
         self._pins: Dict[str, str] = {}
         self._lock = threading.Lock()
         # per-key tuning locks: concurrent first launches of the same
@@ -100,6 +109,22 @@ class TuningTable:
         vector is ordered because weights are positional."""
         return f"{ir}|coexec={'+'.join(device_classes)}"
 
+    @staticmethod
+    def make_sweep_key(kernel: str, target: str, shape_desc: str,
+                       device: str = "") -> str:
+        """Key for a persisted tuning-space sweep winner.
+
+        Sweep entries record *which point of a parameter space* (tile
+        size, unroll factor, items-per-thread, ...) won for a suite
+        kernel on one target — not which target won for one compiled
+        kernel, which is what winner keys do.  Every swept point builds
+        a different kernel (tile sizes are baked into the IR), so the IR
+        hash cannot identify the sweep; the stable identity is the suite
+        kernel's name, the target it was swept on, and the problem shape
+        the timings were taken at."""
+        d = f"|dev={device}" if device else ""
+        return f"{kernel}|sweep|tgt={target}|shape={shape_desc}{d}"
+
     # -- persistence -----------------------------------------------------------
     def _load(self) -> None:
         try:
@@ -107,9 +132,11 @@ class TuningTable:
                 raw = json.load(f)
             self._winners = dict(raw.get("winners", {}))
             self._coexec = dict(raw.get("coexec", {}))
+            self._sweeps = dict(raw.get("sweeps", {}))
             self._pins = dict(raw.get("pins", {}))
         except Exception:
             self._winners, self._coexec, self._pins = {}, {}, {}
+            self._sweeps = {}
 
     def _save(self) -> None:
         if not self.path:
@@ -120,7 +147,8 @@ class TuningTable:
                         exist_ok=True)
             with open(tmp, "w") as f:
                 json.dump({"winners": self._winners,
-                           "coexec": self._coexec, "pins": self._pins},
+                           "coexec": self._coexec, "pins": self._pins,
+                           "sweeps": self._sweeps},
                           f, indent=1, sort_keys=True)
             os.replace(tmp, self.path)
         except Exception as e:
@@ -190,6 +218,37 @@ class TuningTable:
             return {"weights": dict(ent.get("weights", {})),
                     "launches": int(ent.get("launches", 0))}
 
+    def record_sweep(self, key: str, params: Dict[str, object],
+                     timings_us: Dict[str, float]) -> None:
+        """Persist one sweep's winning parameter point.
+
+        ``params`` is the winning configuration (e.g. ``{"ts": 8,
+        "unroll": 8}``), ``timings_us`` maps each swept configuration's
+        canonical string to its measured time so a later reader can see
+        the whole space, not just the winner.  Non-finite winner timings
+        are dropped — a poisoned measurement must not become a warm
+        start."""
+        try:
+            times = {str(c): float(t) for c, t in timings_us.items()}
+        except (TypeError, ValueError):
+            return
+        if not times or not all(math.isfinite(t) for t in times.values()):
+            return
+        with self._lock:
+            self._sweeps[key] = {"params": dict(params),
+                                 "timings_us": times}
+            self._save()
+
+    def get_sweep(self, key: str) -> Optional[Dict[str, object]]:
+        """The persisted sweep entry for ``key`` — ``{"params": {...},
+        "timings_us": {config: us}}`` — or None."""
+        with self._lock:
+            ent = self._sweeps.get(key)
+            if ent is None:
+                return None
+            return {"params": dict(ent.get("params", {})),
+                    "timings_us": dict(ent.get("timings_us", {}))}
+
     def pin(self, kernel_name: str, target: str) -> None:
         with self._lock:
             self._pins[kernel_name] = target
@@ -203,6 +262,7 @@ class TuningTable:
         with self._lock:
             self._winners.clear()
             self._coexec.clear()
+            self._sweeps.clear()
             self._pins.clear()
             self._save()
 

@@ -126,6 +126,32 @@ class Buf:
                             "space": self.arg.space})
 
 
+class TileView:
+    """Row-major 2-D indexing view over a flat :class:`Buf`.
+
+    ``view[i, j]`` loads / ``view[i, j] = v`` stores ``buf[i*ld + j]``;
+    ``ld`` (the leading dimension) may be a Python int or a uniform
+    scalar ``Expr``.  This is the DSL's local-memory *tile* abstraction:
+    OpenCL kernels address 2-D tiles of ``__local`` (and row-major
+    global matrices) through exactly this flattening, and the suite's
+    tiled-GEMM/stencil kernels want it spelled once, not at every
+    index expression (docs/scoreboard.md §Authoring)."""
+
+    def __init__(self, buf: Buf, ld):
+        self.buf = buf
+        self.ld = ld
+
+    def _flat(self, idx):
+        i, j = idx
+        return i * self.ld + j
+
+    def __getitem__(self, idx) -> Expr:
+        return self.buf[self._flat(idx)]
+
+    def __setitem__(self, idx, val) -> None:
+        self.buf[self._flat(idx)] = val
+
+
 class _LoopCtx:
     def __init__(self, builder: "KernelBuilder"):
         self.b = builder
@@ -175,6 +201,50 @@ class KernelBuilder:
         arg = BufferArg(name, dtype, ir.LOCAL, size=size)
         self.fn.buffer_args.append(arg)
         return Buf(self, arg)
+
+    def local_tile(self, name: str, dtype: str,
+                   shape: "tuple[int, int]") -> TileView:
+        """A 2-D local-memory tile: a flat automatic local array of
+        ``shape[0] * shape[1]`` elements wrapped in a row-major
+        :class:`TileView` (``tile[i, j]``).  The flat array follows the
+        pocl §4.7 automatic-local rule (:meth:`local_array`)."""
+        h, w = int(shape[0]), int(shape[1])
+        flat = self.local_array(name, dtype, h * w)
+        return TileView(flat, w)
+
+    def strided(self, buf: Buf, ld) -> TileView:
+        """View a flat (row-major) global buffer as 2-D: ``v[i, j]``
+        addresses ``buf[i*ld + j]``.  ``ld`` is the leading dimension —
+        a Python int or a uniform scalar ``Expr`` (e.g. a matrix width
+        argument)."""
+        return TileView(buf, ld)
+
+    def range_unrolled(self, stop: int, unroll: int = 1):
+        """Iterate ``0 .. stop`` with build-time unrolling: an IR loop of
+        stride ``unroll`` whose body is replicated ``unroll`` times, or —
+        when ``unroll >= stop`` — pure straight-line code (no IR loop at
+        all).  This is the suite kernels' *unroll* tuning axis: the same
+        per-iteration body lowers to materially different CFGs, which is
+        exactly what the per-target sweep measures.
+
+        ``stop`` and ``unroll`` must be Python ints with
+        ``stop % unroll == 0`` (callers pad their trip counts).  The
+        generator must be consumed to exhaustion (a plain ``for`` does),
+        because the IR loop closes when the final index is yielded."""
+        stop, unroll = int(stop), int(unroll)
+        assert stop >= 0 and unroll >= 1, (stop, unroll)
+        if unroll >= stop:
+            for k in range(stop):
+                yield self.const(k, "int32")
+            return
+        assert stop % unroll == 0, \
+            f"range_unrolled: {unroll} does not divide {stop}"
+        with self.for_range(0, stop, step=unroll) as i:
+            if unroll == 1:
+                yield i
+            else:
+                for u in range(unroll):
+                    yield i + u
 
     def arg_scalar(self, name: str, dtype: str = "int32") -> Expr:
         self.fn.scalar_args.append(ScalarArg(name, dtype))

@@ -1,0 +1,408 @@
+"""Per-target autotuning sweeps + roofline-validated reporting.
+
+The :class:`Scoreboard` runs every suite kernel through the host API
+(``Context`` -> ``Program`` -> ``Kernel`` -> ``launch``) on each compiled
+target, sweeps the kernel's tuning space, checks every configuration's
+output *bitwise* against the NumPy oracle, persists the winning
+parameters in the :class:`~repro.core.autotune.TuningTable` (``sweeps``
+section — a warm run re-measures only the winner), and prices the winner
+against a **measured** roofline: per-target peak FLOP/s and bandwidth are
+calibrated by DSL microkernels (an ILP'd FMA chain and a streaming copy)
+run through the very same compiler/runtime stack, so the reported
+achieved-vs-roofline fraction compares like with like — the Rupp-et-al.
+methodology, applied to the paper's three code-generation strategies
+(§4.4: loop serialization, §4.5: SIMD lanes, and the Pallas path).
+
+Extra columns beyond the fixed targets:
+
+* ``coexec2`` — the vector winner co-executed over 2 homogeneous devices
+  (:meth:`~repro.runtime.platform.Platform.co_devices`), priced against
+  2x the vector peaks;
+* ``auto`` — the ``repro-auto`` device, whose per-kernel target choice
+  comes from the same tuning table the sweeps persist into.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import KernelBuilder
+from repro.core.autotune import TuningTable, set_default_table
+from repro.launch.roofline import kernel_report
+from repro.runtime import Context
+
+from typing import Dict, Optional, Sequence
+
+from .kernels import SUITE, SuiteKernel, param_key
+
+SCHEMA = "bench_scoreboard/v1"
+
+# FMA-chain calibration: independent accumulator chains give the
+# compiler ILP so the measured peak is a throughput, not a latency
+_CAL_CHAINS = 4
+_CAL_OPS = 32
+
+
+def _build_cal_flops():
+    b = KernelBuilder("suite_cal_flops")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    accs = [b.var(x[g] * (0.5 + 0.25 * c), name=f"acc{c}")
+            for c in range(_CAL_CHAINS)]
+    for _ in range(_CAL_OPS):
+        for a in accs:
+            a.set(a.get() * 1.0009765625 + 0.0009765625)
+    total = accs[0].get()
+    for a in accs[1:]:
+        total = total + a.get()
+    y[g] = total
+    return b.finish()
+
+
+def _build_cal_copy():
+    b = KernelBuilder("suite_cal_copy")
+    x = b.arg_buffer("x", "float32")
+    y = b.arg_buffer("y", "float32")
+    g = b.global_id(0)
+    y[g] = x[g] + 1.0
+    return b.finish()
+
+
+def _time(fn, warmup: int, repeats: int) -> float:
+    """Best-of-N wall time of ``fn()`` after ``warmup`` calls (first call
+    pays jit compilation)."""
+    for _ in range(max(warmup, 1)):
+        fn()
+    best = float("inf")
+    for _ in range(max(repeats, 1)):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def calibrate(ctx: Context, target: str, n: int = 1 << 14,
+              lsz: int = 64, warmup: int = 1, repeats: int = 3
+              ) -> Dict[str, float]:
+    """Measured per-target peaks: ``peak_flops`` (FLOP/s, FMA chains) and
+    ``peak_bw`` (B/s, streaming copy), through the same Context/launch
+    path the suite kernels use.  ``n`` must be a multiple of ``lsz``."""
+    n = -(-n // lsz) * lsz
+    x = np.linspace(0.5, 1.5, n).astype(np.float32)
+    peaks: Dict[str, float] = {}
+    for name, build, work in (
+            ("peak_flops", _build_cal_flops,
+             float(n) * (2 * _CAL_OPS * _CAL_CHAINS + _CAL_CHAINS)),
+            ("peak_bw", _build_cal_copy, 8.0 * n)):
+        kern = ctx.create_program(build).create_kernel()
+        kern.set_args(x=x, y=np.zeros(n, np.float32))
+        t = _time(lambda: ctx.launch(kern, (n,), (lsz,), target=target),
+                  warmup, repeats)
+        peaks[name] = work / max(t, 1e-12)
+    return peaks
+
+
+def _subsample(space, max_configs: Optional[int]):
+    """Evenly-spaced sub-space keeping the endpoints; never fewer than 2
+    configurations (the beats-worst gate needs a sweep, not a point)."""
+    if max_configs is None or max_configs >= len(space) or len(space) <= 2:
+        return tuple(space)
+    m = max(int(max_configs), 2)
+    idx = np.linspace(0, len(space) - 1, m).round().astype(int)
+    return tuple(space[i] for i in sorted(set(idx.tolist())))
+
+
+class Scoreboard:
+    """Sweep + verify + price the suite on every compiled target.
+
+    ``table`` persists sweep winners: pass a path-backed
+    :class:`TuningTable` and a later Scoreboard over the same table
+    re-measures only each cell's winning configuration (``sweep_cached``
+    in the cell marks this).  ``max_configs`` trims each tuning space
+    (evenly, endpoints kept) for CI-sized runs."""
+
+    def __init__(self, ctx: Optional[Context] = None,
+                 table: Optional[TuningTable] = None,
+                 targets: Sequence[str] = ("loop", "vector", "pallas"),
+                 shape_set: str = "full",
+                 warmup: int = 1, repeats: int = 3,
+                 max_configs: Optional[int] = None,
+                 include_coexec: bool = True,
+                 include_auto: bool = True,
+                 coexec_mode: str = "static",
+                 calibration_n: int = 1 << 14):
+        self.ctx = ctx if ctx is not None else Context()
+        self.table = table if table is not None else TuningTable()
+        self.targets = tuple(targets)
+        self.shape_set = shape_set
+        self.warmup = int(warmup)
+        self.repeats = int(repeats)
+        self.max_configs = max_configs
+        self.include_coexec = include_coexec
+        self.include_auto = include_auto
+        self.coexec_mode = coexec_mode
+        self.calibration_n = int(calibration_n)
+        self._co = None          # lazy: created once, devices are appended
+        self.peaks: Dict[str, Dict[str, float]] = {}
+
+    # -- internals ----------------------------------------------------------
+
+    def _kernel_obj(self, sk: SuiteKernel, shape, params, inputs):
+        prog = self.ctx.create_program(sk.build(shape, params))
+        kern = prog.create_kernel()
+        kern.set_args(**inputs)
+        return kern
+
+    def _bitwise(self, out, expected) -> bool:
+        return all(np.asarray(out[name]).tobytes() == exp.tobytes()
+                   for name, exp in expected.items())
+
+    def _measure(self, sk: SuiteKernel, shape, params, *,
+                 target: Optional[str] = None, device=None, co=None):
+        """One configuration: build, launch, time, bitwise-check."""
+        inputs = sk.make_inputs(shape, params)
+        expected = sk.oracle(inputs, shape, params)
+        kern = self._kernel_obj(sk, shape, params, inputs)
+        gsz, lsz = sk.launch_dims(shape, params)
+        if co is not None:
+            run = lambda: co.launch(kern, gsz, lsz, mode=self.coexec_mode)
+        else:
+            run = lambda: self.ctx.launch(kern, gsz, lsz, device=device,
+                                          target=target)
+        t = _time(run, self.warmup, self.repeats)
+        ok = self._bitwise(run(), expected)
+        return t, ok, kern
+
+    def _roofline(self, sk: SuiteKernel, shape, target: str, time_s: float,
+                  peaks: Dict[str, float]):
+        return kernel_report(
+            kernel=sk.name, target=target,
+            flops=sk.flops(shape), bytes_moved=sk.bytes_moved(shape),
+            time_s=max(time_s, 1e-12),
+            peak_flops=peaks["peak_flops"],
+            peak_bw=peaks["peak_bw"]).to_dict()
+
+    def _sweep_cell(self, sk: SuiteKernel, shape, space, target: str):
+        """Full sweep (or warm re-measure of the persisted winner) for
+        one (kernel, target) cell."""
+        key = TuningTable.make_sweep_key(sk.name, target, param_key(shape))
+        space_keys = {param_key(p): p for p in space}
+        cached = self.table.get_sweep(key)
+        use_cache = (cached is not None
+                     and param_key(cached["params"]) in space_keys
+                     and set(cached["timings_us"]) == set(space_keys))
+        if use_cache:
+            params = space_keys[param_key(cached["params"])]
+            timings = dict(cached["timings_us"])
+            t, ok, _ = self._measure(sk, shape, params, target=target)
+            bitwise = ok
+        else:
+            timings, results = {}, {}
+            bitwise = True
+            for params in space:
+                t, ok, _ = self._measure(sk, shape, params, target=target)
+                timings[param_key(params)] = t * 1e6
+                results[param_key(params)] = (t, params)
+                bitwise = bitwise and ok
+            best_key = min(timings, key=timings.get)
+            t, params = results[best_key]
+            self.table.record_sweep(key, params, timings)
+        worst_us = max(timings.values())
+        best_us = min(timings.values())
+        cell = {
+            "target": target,
+            "params": dict(params),
+            "config": param_key(params),
+            "time_us": t * 1e6,
+            "timings_us": timings,
+            "best_us": best_us,
+            "worst_us": worst_us,
+            "speedup_vs_worst": worst_us / max(best_us, 1e-9),
+            "bitwise": bool(bitwise),
+            "sweep_cached": bool(use_cache),
+            "roofline": self._roofline(sk, shape, target, t,
+                                       self.peaks[target]),
+        }
+        return cell
+
+    def _coexec_cell(self, sk: SuiteKernel, shape, vector_cell):
+        if self._co is None:
+            devs = self.ctx.platform.co_devices(2)
+            self._co = self.ctx.create_co_executor(devs)
+        params = vector_cell["params"]
+        t, ok, _ = self._measure(sk, shape, params, co=self._co)
+        base = self.peaks.get("vector") or next(iter(self.peaks.values()))
+        peaks2 = {k: 2.0 * v for k, v in base.items()}
+        return {
+            "target": "coexec2",
+            "params": dict(params),
+            "config": param_key(params),
+            "time_us": t * 1e6,
+            "bitwise": bool(ok),
+            "speedup_vs_vector": vector_cell["time_us"] / max(t * 1e6,
+                                                              1e-9),
+            "roofline": self._roofline(sk, shape, "coexec2", t, peaks2),
+        }
+
+    def _auto_cell(self, sk: SuiteKernel, shape, space):
+        autos = self.ctx.platform.get_devices("auto")
+        if not autos:
+            return None
+        params = space[0]
+        set_default_table(self.table)
+        try:
+            t, ok, kern = self._measure(sk, shape, params,
+                                        device=autos[0])
+        finally:
+            set_default_table(None)
+        chosen = None
+        try:    # diagnostic only: scan the table for this kernel's winner
+            for k, ent in getattr(self.table, "_winners", {}).items():
+                if k.startswith(kern.ir_hash):
+                    chosen = ent.get("target")
+                    break
+        except Exception:
+            chosen = None
+        base = self.peaks.get("vector") or next(iter(self.peaks.values()))
+        return {
+            "target": "auto",
+            "params": dict(params),
+            "config": param_key(params),
+            "time_us": t * 1e6,
+            "bitwise": bool(ok),
+            "chosen_target": chosen,
+            "roofline": self._roofline(sk, shape, "auto", t, base),
+        }
+
+    # -- entry point --------------------------------------------------------
+
+    def run(self, kernels: Optional[Sequence[str]] = None) -> Dict:
+        names = list(kernels) if kernels else list(SUITE)
+        for tgt in self.targets:
+            self.peaks[tgt] = calibrate(
+                self.ctx, tgt, n=self.calibration_n,
+                warmup=self.warmup, repeats=self.repeats)
+        report = {
+            "schema": SCHEMA,
+            "shape_set": self.shape_set,
+            "repeats": self.repeats,
+            "targets": list(self.targets),
+            "peaks": {t: {"peak_flops": p["peak_flops"],
+                          "peak_bw": p["peak_bw"],
+                          "gflops": p["peak_flops"] / 1e9,
+                          "gbs": p["peak_bw"] / 1e9}
+                      for t, p in self.peaks.items()},
+            "kernels": {},
+        }
+        for name in names:
+            sk = SUITE[name]
+            shape = sk.shapes.get(self.shape_set, sk.shapes["full"])
+            space = _subsample(sk.space(shape), self.max_configs)
+            cells = {}
+            for tgt in self.targets:
+                cells[tgt] = self._sweep_cell(sk, shape, space, tgt)
+            if self.include_coexec and "vector" in cells:
+                cells["coexec2"] = self._coexec_cell(sk, shape,
+                                                     cells["vector"])
+            if self.include_auto:
+                auto = self._auto_cell(sk, shape, space)
+                if auto is not None:
+                    cells["auto"] = auto
+            report["kernels"][name] = {
+                "shape": dict(shape),
+                "space_size": len(space),
+                "flops": sk.flops(shape),
+                "bytes": sk.bytes_moved(shape),
+                "cells": cells,
+            }
+        report["gates"] = check_gates(report)
+        return report
+
+
+def check_gates(report: Dict, min_fraction: float = 0.0,
+                fraction_target: str = "vector") -> Dict:
+    """The scoreboard's pass/fail verdicts.
+
+    * ``bitwise`` — every cell's winner reproduced the NumPy oracle
+      bitwise (conformance; always enforced);
+    * ``winner_beats_worst`` — in every swept cell the autotuned
+      configuration's time is the minimum of its sweep, strictly below
+      the worst when the sweep measured more than one configuration;
+    * ``min_fraction`` — every kernel's achieved-vs-roofline fraction on
+      ``fraction_target`` reaches ``min_fraction`` (0 disables).
+    """
+    bitwise_bad, beats_bad, frac_bad = [], [], []
+    for name, ent in report.get("kernels", {}).items():
+        for tgt, cell in ent["cells"].items():
+            if not cell.get("bitwise", False):
+                bitwise_bad.append(f"{name}/{tgt}")
+            timings = cell.get("timings_us")
+            if timings:
+                best = min(timings.values())
+                worst = max(timings.values())
+                if cell["best_us"] != best or \
+                        (len(timings) > 1 and not best <= worst):
+                    beats_bad.append(f"{name}/{tgt}")
+        cell = ent["cells"].get(fraction_target)
+        if min_fraction > 0 and cell is not None:
+            frac = cell["roofline"]["fraction"]
+            if not frac >= min_fraction:
+                frac_bad.append(f"{name}: {frac:.4f} < {min_fraction}")
+    return {
+        "bitwise": not bitwise_bad,
+        "bitwise_failures": bitwise_bad,
+        "winner_beats_worst": not beats_bad,
+        "winner_failures": beats_bad,
+        "min_fraction": min_fraction,
+        "fraction_target": fraction_target,
+        "fraction_ok": not frac_bad,
+        "fraction_failures": frac_bad,
+        "ok": not (bitwise_bad or beats_bad or frac_bad),
+    }
+
+
+def render_markdown(report: Dict) -> str:
+    """The (kernel x target) matrix as a GitHub-flavored markdown table:
+    one row per kernel, one column per target, each cell showing the
+    achieved-vs-roofline fraction, the winning time and configuration."""
+    targets = list(report.get("targets", []))
+    extras = []
+    for ent in report.get("kernels", {}).values():
+        for tgt in ent["cells"]:
+            if tgt not in targets and tgt not in extras:
+                extras.append(tgt)
+    cols = targets + extras
+    lines = [
+        "# Performance-portability scoreboard",
+        "",
+        f"Shape set `{report.get('shape_set')}`; cells show "
+        "achieved-vs-roofline fraction, winner time, winning config "
+        "(docs/scoreboard.md).",
+        "",
+        "Calibrated peaks: " + "; ".join(
+            f"{t} {p['gflops']:.2f} GFLOP/s / {p['gbs']:.2f} GB/s"
+            for t, p in report.get("peaks", {}).items()),
+        "",
+        "| kernel | " + " | ".join(cols) + " |",
+        "|---" * (len(cols) + 1) + "|",
+    ]
+    for name, ent in report.get("kernels", {}).items():
+        row = [name]
+        for tgt in cols:
+            cell = ent["cells"].get(tgt)
+            if cell is None:
+                row.append("—")
+                continue
+            frac = cell["roofline"]["fraction"]
+            mark = "" if cell.get("bitwise") else " ✗oracle"
+            row.append(f"{frac:.3f} · {cell['time_us']:.0f}µs · "
+                       f"`{cell['config']}`{mark}")
+        lines.append("| " + " | ".join(row) + " |")
+    gates = report.get("gates", {})
+    lines += ["", f"Gates: bitwise={gates.get('bitwise')} "
+                  f"winner_beats_worst={gates.get('winner_beats_worst')} "
+                  f"fraction_ok={gates.get('fraction_ok')}"]
+    return "\n".join(lines) + "\n"

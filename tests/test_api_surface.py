@@ -21,6 +21,7 @@ MODULES = [
     "repro.runtime",
     "repro.runtime.context",
     "repro.serving",
+    "repro.suite",
     "repro.models",
     "repro.vml",
 ]

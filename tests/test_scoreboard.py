@@ -1,0 +1,186 @@
+"""Tests for the performance-portability scoreboard (repro.suite.scoreboard).
+
+Covers the acceptance contract: a complete kernel x target matrix with
+every cell bitwise-equal to its oracle, the autotuned winner at the
+minimum of its sweep, winning parameters persisted in the TuningTable
+and reused (not re-swept) on the next run, and the per-kernel roofline
+arithmetic in launch/roofline.kernel_report.
+"""
+
+from __future__ import annotations
+
+import json
+
+import numpy as np
+import pytest
+
+from repro.core.autotune import TuningTable
+from repro.launch.roofline import kernel_report
+from repro.runtime import Context
+from repro.suite import SUITE, Scoreboard, calibrate, render_markdown
+from repro.suite.scoreboard import check_gates
+
+# a fast 2-kernel subset exercises every cell type (incl. a 2-D NDRange)
+FAST = ["stencil1d", "stencil2d"]
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return Context()
+
+
+def _fast_board(ctx, table, **kw):
+    opts = dict(ctx=ctx, table=table, shape_set="ci", warmup=0, repeats=1,
+                max_configs=2, include_coexec=True, include_auto=False,
+                calibration_n=1 << 10)
+    opts.update(kw)
+    return Scoreboard(**opts)
+
+
+@pytest.fixture(scope="module")
+def report(ctx, tmp_path_factory):
+    table = TuningTable(tmp_path_factory.mktemp("scoreboard") / "tuning.json")
+    return _fast_board(ctx, table).run(kernels=FAST)
+
+
+def test_matrix_complete(report):
+    assert report["schema"] == "bench_scoreboard/v1"
+    assert set(report["kernels"]) == set(FAST)
+    for name, entry in report["kernels"].items():
+        cells = entry["cells"]
+        # 3 compiled targets + the co-execution column
+        assert {"loop", "vector", "pallas", "coexec2"} <= set(cells)
+        for tgt, cell in cells.items():
+            assert cell["bitwise"], (name, tgt)
+            assert cell["time_us"] > 0
+            assert cell["roofline"]["fraction"] > 0
+
+
+def test_winner_beats_worst(report):
+    for name, entry in report["kernels"].items():
+        for tgt in ("loop", "vector", "pallas"):
+            cell = entry["cells"][tgt]
+            timings = cell["timings_us"]
+            assert len(timings) >= 2
+            assert cell["best_us"] == min(timings.values())
+            assert cell["best_us"] <= cell["worst_us"]
+            assert cell["speedup_vs_worst"] >= 1.0
+
+
+def test_gates_pass(report):
+    gates = check_gates(report, min_fraction=0.0)
+    assert gates["ok"], gates
+    assert gates["bitwise"] and not gates["bitwise_failures"]
+    assert gates["winner_beats_worst"] and not gates["winner_failures"]
+
+
+def test_gate_detects_bitwise_failure(report):
+    broken = json.loads(json.dumps(report))  # deep copy
+    broken["kernels"][FAST[0]]["cells"]["vector"]["bitwise"] = False
+    gates = check_gates(broken, min_fraction=0.0)
+    assert not gates["ok"] and not gates["bitwise"]
+    assert gates["bitwise_failures"] == [f"{FAST[0]}/vector"]
+
+
+def test_gate_min_fraction(report):
+    gates = check_gates(report, min_fraction=1e9, fraction_target="vector")
+    assert not gates["fraction_ok"] and not gates["ok"]
+    failed = {f.split(":")[0] for f in gates["fraction_failures"]}
+    assert failed == set(FAST)
+
+
+def test_sweep_persists_and_is_reused(ctx, tmp_path):
+    """Second run against the same table re-measures only the recorded
+    winner (sweep_cached=True) and lands on identical parameters."""
+    path = tmp_path / "tuning.json"
+    first = _fast_board(ctx, TuningTable(path)).run(kernels=["stencil1d"])
+
+    raw = json.loads(path.read_text())
+    assert raw["sweeps"], "winning sweep not persisted to the TuningTable"
+    for rec in raw["sweeps"].values():
+        assert set(rec) == {"params", "timings_us"}
+
+    second = _fast_board(ctx, TuningTable(path)).run(kernels=["stencil1d"])
+    for tgt in ("loop", "vector", "pallas"):
+        c1 = first["kernels"]["stencil1d"]["cells"][tgt]
+        c2 = second["kernels"]["stencil1d"]["cells"][tgt]
+        assert not c1["sweep_cached"]
+        assert c2["sweep_cached"], tgt
+        assert c2["params"] == c1["params"]
+
+
+def test_render_markdown(report):
+    md = render_markdown(report)
+    for name in FAST:
+        assert f"\n| {name} " in md
+    for col in ("loop", "vector", "pallas", "coexec2"):
+        assert col in md
+    # header + separator + one row per kernel
+    assert md.count("\n|") >= len(FAST) + 1
+
+
+def test_calibrate_positive(ctx):
+    peaks = calibrate(ctx, "loop", n=1 << 10, warmup=0, repeats=1)
+    assert peaks["peak_flops"] > 0
+    assert peaks["peak_bw"] > 0
+
+
+def test_kernel_report_math():
+    r = kernel_report(kernel="gemm", target="vector", flops=2e9,
+                      bytes_moved=1e8, time_s=1.0, peak_flops=4e9,
+                      peak_bw=1e9)
+    assert r.t_compute == pytest.approx(0.5)
+    assert r.t_memory == pytest.approx(0.1)
+    assert r.t_bound == pytest.approx(0.5)
+    assert r.dominant == "compute"
+    assert r.fraction == pytest.approx(0.5)
+    assert r.achieved_gflops == pytest.approx(2.0)
+    d = r.to_dict()
+    assert d["kernel"] == "gemm" and d["fraction"] == pytest.approx(0.5)
+
+
+@pytest.mark.parametrize("bad", [
+    dict(flops=0.0), dict(time_s=0.0), dict(peak_bw=-1.0),
+    dict(peak_flops=float("nan")), dict(bytes_moved=float("inf")),
+])
+def test_kernel_report_validates(bad):
+    kw = dict(kernel="k", target="loop", flops=1.0, bytes_moved=1.0,
+              time_s=1.0, peak_flops=1.0, peak_bw=1.0)
+    kw.update(bad)
+    with pytest.raises(ValueError):
+        kernel_report(**kw)
+
+
+def test_tuning_table_sweep_roundtrip(tmp_path):
+    path = tmp_path / "t.json"
+    t = TuningTable(path)
+    key = TuningTable.make_sweep_key("gemm", "vector", "m=4,n=4")
+    assert t.get_sweep(key) is None
+    t.record_sweep(key, {"ts": 8}, {"ts=4": 10.0, "ts=8": 5.0})
+    rec = TuningTable(path).get_sweep(key)
+    assert rec == {"params": {"ts": 8},
+                   "timings_us": {"ts=4": 10.0, "ts=8": 5.0}}
+    # a poisoned measurement is dropped, never recorded as a warm start
+    t.record_sweep(key, {"ts": 4}, {"ts=4": float("nan")})
+    assert t.get_sweep(key)["params"] == {"ts": 8}
+
+
+def test_suite_unknown_kernel_rejected(ctx, tmp_path):
+    board = _fast_board(ctx, TuningTable(tmp_path / "t.json"))
+    with pytest.raises(KeyError):
+        board.run(kernels=["nonexistent"])
+    assert "nonexistent" not in SUITE
+
+
+def test_numpy_unchanged_inputs(ctx, tmp_path):
+    """Scoreboard runs must not mutate the suite's cached input arrays
+    across cells — each launch gets fresh copies."""
+    sk = SUITE["stencil1d"]
+    shape = sk.shapes["ci"]
+    params = sk.space(shape)[0]
+    before = {k: v.copy() for k, v in sk.make_inputs(shape, params).items()}
+    _fast_board(ctx, TuningTable(tmp_path / "t.json"),
+                include_coexec=False).run(kernels=["stencil1d"])
+    after = sk.make_inputs(shape, params)
+    for k, v in before.items():
+        assert np.array_equal(v, after[k])

@@ -1,0 +1,127 @@
+"""Property fuzz for the suite's tiled GEMM (repro.suite.kernels).
+
+The GEMM builder's hard cases are the tiling edges: matrix dimensions
+that are not multiples of the tile size (ragged boundary tiles on every
+side), K smaller than one tile, and local sizes that do not divide the
+global size evenly.  A seeded random sweep runs on every install;
+hypothesis (when installed — the CI profile, see conftest.py) widens the
+same properties.  Everything checks bitwise equality with the NumPy
+oracle on the vector target — the lane-predicated mapping, where a
+missed guard shows up as garbage in the ragged rows.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.runtime import Context
+from repro.suite import SUITE
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:               # seeded sweeps below still run
+    HAVE_HYPOTHESIS = False
+
+_CTX = Context()
+
+
+def _check_gemm(m, n, k, ts, unroll, target):
+    sk = SUITE["gemm"]
+    shape = {"m": m, "n": n, "k": k}
+    params = {"ts": ts, "unroll": unroll}
+    inputs = sk.make_inputs(shape, params)
+    expected = sk.oracle(inputs, shape, params)["C"]
+    kern = _CTX.create_program(sk.build(shape, params)).create_kernel()
+    kern.set_args(**{a: v.copy() for a, v in inputs.items()})
+    gsz, lsz = sk.launch_dims(shape, params)
+    assert all(g % l == 0 for g, l in zip(gsz, lsz)), \
+        "launch_dims must pad global size to a local-size multiple"
+    out = _CTX.launch(kern, gsz, lsz, target=target)
+    got = np.asarray(out["C"])
+    assert got.shape == expected.shape
+    assert got.tobytes() == expected.tobytes(), (
+        f"gemm m={m} n={n} k={k} ts={ts} unroll={unroll} {target}: "
+        f"max abs diff "
+        f"{np.abs(got.astype(np.float64) - expected.astype(np.float64)).max()}")
+
+
+def _check_stencil1d(n, lsz, use_local):
+    sk = SUITE["stencil1d"]
+    shape = {"n": n}
+    params = {"lsz": lsz, "use_local": int(use_local)}
+    inputs = sk.make_inputs(shape, params)
+    expected = sk.oracle(inputs, shape, params)["y"]
+    kern = _CTX.create_program(sk.build(shape, params)).create_kernel()
+    kern.set_args(**{a: v.copy() for a, v in inputs.items()})
+    gsz, lsz_t = sk.launch_dims(shape, params)
+    out = _CTX.launch(kern, gsz, lsz_t, target="vector")
+    assert np.asarray(out["y"]).tobytes() == expected.tobytes(), \
+        (n, lsz, use_local)
+
+
+# ---------------------------------------------------------------------------
+# seeded sweeps (run on every install, no hypothesis needed)
+# ---------------------------------------------------------------------------
+
+def test_gemm_ragged_seeded_sweep():
+    """Deterministic ragged sample: every combination of a dimension
+    below / at / above one tile, including degenerate 1-wide shapes."""
+    rng = np.random.default_rng(7)
+    cases = [(1, 1, 1), (1, 8, 3), (9, 1, 8), (8, 8, 8), (9, 9, 9)]
+    cases += [tuple(rng.integers(1, 34, size=3)) for _ in range(6)]
+    for m, n, k in cases:
+        for ts in (4, 8):
+            _check_gemm(int(m), int(n), int(k), ts, 1, "vector")
+
+
+def test_gemm_ragged_loop_vector_agree_seeded():
+    """Loop and vector targets agree bitwise on ragged shapes — the
+    serial mapping has no lane predication, so agreement means the
+    guards (not the masking machinery) carry the semantics."""
+    for m, n, k in [(5, 11, 7), (16, 3, 16), (33, 33, 1)]:
+        for target in ("loop", "vector"):
+            _check_gemm(m, n, k, 8, 8, target)
+
+
+def test_stencil1d_local_size_not_dividing_seeded():
+    """local_size exceeding or not dividing n: padded launch with
+    guarded stores must match the oracle, halo path on and off."""
+    for n in (1, 5, 31, 33, 170):
+        for lsz in (16, 64):
+            for use_local in (0, 1):
+                _check_stencil1d(n, lsz, use_local)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis widening (ci/dev profiles, see conftest.py)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=25)
+    @given(m=st.integers(1, 33), n=st.integers(1, 33), k=st.integers(1, 33),
+           ts=st.sampled_from([2, 4, 8]),
+           full_unroll=st.booleans())
+    def test_gemm_ragged_tiles_vector(m, n, k, ts, full_unroll):
+        """Ragged tiles on all three dimensions, vector target: any
+        guard or clamp bug corrupts the boundary rows/columns."""
+        _check_gemm(m, n, k, ts, ts if full_unroll else 1, "vector")
+
+    @settings(max_examples=10)
+    @given(n=st.integers(1, 200), lsz=st.sampled_from([16, 32, 64]),
+           use_local=st.booleans())
+    def test_stencil1d_ragged_global_size(n, lsz, use_local):
+        _check_stencil1d(n, lsz, use_local)
+
+else:                             # keep -q output honest about coverage
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_gemm_ragged_tiles_vector():
+        pass
+
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_stencil1d_ragged_global_size():
+        pass

@@ -1,0 +1,131 @@
+"""Conformance tests for the repro.suite kernels (docs/scoreboard.md).
+
+Every suite kernel must reproduce its NumPy oracle *bitwise* on every
+compiled target and every point of its tuning space — the suite's data
+conventions (integer-valued float32 operands, dyadic stencil weights,
+association-matched oracles) exist precisely to make that comparison
+well-defined under FMA contraction.  Co-executed launches must match the
+single-device result bitwise too (the scheduler's split/merge identity).
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from repro.runtime import Context
+from repro.suite import SUITE, param_key, suite_kernels
+
+TARGETS = ("loop", "vector", "pallas")
+
+
+@pytest.fixture(scope="module")
+def ctx():
+    return Context()
+
+
+def _launch(ctx, sk, shape, params, inputs, target=None, device=None):
+    kern = ctx.create_program(sk.build(shape, params)).create_kernel()
+    kern.set_args(**{k: v.copy() for k, v in inputs.items()})
+    gsz, lsz = sk.launch_dims(shape, params)
+    return ctx.launch(kern, gsz, lsz, target=target, device=device)
+
+
+def _assert_bitwise(out, expected, label):
+    for name, exp in expected.items():
+        got = np.asarray(out[name])
+        assert got.tobytes() == exp.tobytes(), (
+            f"{label}: output {name!r} differs from oracle "
+            f"(max abs diff {np.abs(got.astype(np.float64) - exp.astype(np.float64)).max()})")
+
+
+def test_registry_shape():
+    """The suite is the scoreboard's contract: >= 5 kernels, each with
+    ci+full shapes, >= 2 tuning configs, and distinct config keys."""
+    assert len(SUITE) >= 5
+    for sk in suite_kernels():
+        assert {"full", "ci"} <= set(sk.shapes)
+        for which in ("full", "ci"):
+            space = sk.space(sk.shapes[which])
+            assert len(space) >= 2
+            keys = [param_key(p) for p in space]
+            assert len(set(keys)) == len(keys)
+        assert sk.flops(sk.shapes["ci"]) > 0
+        assert sk.bytes_moved(sk.shapes["ci"]) > 0
+
+
+@pytest.mark.parametrize("name", sorted(SUITE))
+def test_conformance_all_targets_all_configs(ctx, name):
+    """Bitwise oracle equality on every (config, target) cell."""
+    sk = SUITE[name]
+    shape = sk.shapes["ci"]
+    for params in sk.space(shape):
+        inputs = sk.make_inputs(shape, params)
+        expected = sk.oracle(inputs, shape, params)
+        assert set(sk.outputs) == set(expected)
+        for tgt in TARGETS:
+            out = _launch(ctx, sk, shape, params, inputs, target=tgt)
+            _assert_bitwise(out, expected,
+                            f"{name}[{param_key(params)}] on {tgt}")
+
+
+@pytest.mark.parametrize("name", ["gemm", "hist"])
+def test_coexec_matches_single_device(ctx, name):
+    """2-device co-execution is bitwise-identical to the single-device
+    launch (and hence to the oracle): the scheduler's split/merge must
+    be invisible, including for 2-D NDRanges and group-indexed outputs."""
+    sk = SUITE[name]
+    shape = sk.shapes["ci"]
+    params = sk.space(shape)[0]
+    inputs = sk.make_inputs(shape, params)
+    expected = sk.oracle(inputs, shape, params)
+    gsz, lsz = sk.launch_dims(shape, params)
+
+    co = ctx.create_co_executor(ctx.platform.co_devices(2))
+    kern = ctx.create_program(sk.build(shape, params)).create_kernel()
+    kern.set_args(**{k: v.copy() for k, v in inputs.items()})
+    for mode in ("static", "steal"):
+        out = co.launch(kern, gsz, lsz, mode=mode)
+        _assert_bitwise(out, expected, f"{name} coexec[{mode}]")
+    co.finish()
+
+
+@pytest.mark.parametrize("name", ["spmv", "scan"])
+def test_fiber_reference_agrees(name):
+    """The fiber interpreter (the DSL's semantics oracle) agrees with
+    the NumPy oracle bitwise — i.e. the oracles encode the kernels'
+    actual accumulation order, not just the right mathematics."""
+    from repro.core.interp import run_ndrange  # noqa: TID251 — oracle use
+    sk = SUITE[name]
+    shape = sk.shapes["ci"]
+    params = sk.space(shape)[0]
+    inputs = sk.make_inputs(shape, params)
+    expected = sk.oracle(inputs, shape, params)
+    gsz, lsz = sk.launch_dims(shape, params)
+    out = run_ndrange(sk.build(shape, params)(), gsz, lsz,
+                      {k: v.copy() for k, v in inputs.items()})
+    _assert_bitwise(out, expected, f"{name} fiber")
+
+
+def test_inputs_deterministic():
+    """Input generation is a pure function of (kernel, shape): two calls
+    yield identical operands, so sweep configurations are comparable."""
+    sk = SUITE["gemm"]
+    shape = sk.shapes["ci"]
+    a = sk.make_inputs(shape, sk.space(shape)[0])
+    b = sk.make_inputs(shape, sk.space(shape)[1])
+    for name in ("A", "B"):
+        assert a[name].tobytes() == b[name].tobytes()
+
+
+def test_mul_add_inputs_are_fma_safe():
+    """The FMA-safety convention holds: every multiply-accumulate
+    kernel's float operands are integer-valued (exactly representable
+    products/sums), so bitwise comparison is target-independent."""
+    for name in ("gemm", "spmv", "stencil1d", "stencil2d"):
+        sk = SUITE[name]
+        shape = sk.shapes["ci"]
+        inputs = sk.make_inputs(shape, sk.space(shape)[0])
+        for arg, v in inputs.items():
+            if v.dtype == np.float32 and arg not in sk.outputs:
+                assert np.all(v == np.round(v)), (name, arg)
